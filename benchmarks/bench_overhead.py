@@ -1,0 +1,98 @@
+"""Paper §6.2 — overhead of the hetGPU abstraction vs native execution.
+
+Native = the same math as a direct jitted-jnp program; hetGPU = the hetIR
+binary executed through the vectorized backend.  The paper reports <10%
+on compute-bound kernels for its translation path; ours adds the engine /
+segment machinery, measured here per launch (cached translation).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Engine, get_backend
+from repro.core import kernels_suite as suite
+
+
+def _time(fn, reps=20):
+    fn()  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    n = 1 << 16
+    grid, block = n // 256, 256
+
+    # --- vadd ---------------------------------------------------------
+    A = rng.normal(size=n).astype(np.float32)
+    B = rng.normal(size=n).astype(np.float32)
+    native = jax.jit(lambda a, b: a + b)
+    aj, bj = jnp.asarray(A), jnp.asarray(B)
+    native_ms = _time(lambda: jax.block_until_ready(native(aj, bj)))
+
+    prog, _ = suite.vadd()
+    be = get_backend("vectorized")
+    args = {"A": A, "B": B, "C": np.zeros(n, np.float32), "n": n}
+    eng = Engine(prog, be, grid, block, dict(args))
+    eng.run()  # warm/translate
+
+    def het():
+        e = Engine(prog, be, grid, block, dict(args))
+        e.run()
+
+    het_ms = _time(het, reps=5)
+    rows.append({"bench": "overhead", "kernel": "vadd",
+                 "native_ms": round(native_ms, 3),
+                 "hetgpu_ms": round(het_ms, 3),
+                 "ratio": round(het_ms / max(native_ms, 1e-9), 1)})
+
+    # --- dot product ----------------------------------------------------
+    native_dot = jax.jit(lambda a, b: jnp.dot(a, b))
+    native_ms = _time(lambda: jax.block_until_ready(native_dot(aj, bj)))
+    prog, _ = suite.dot_product()
+    args = {"A": A, "B": B, "Out": np.zeros(1, np.float32), "n": n}
+    eng = Engine(prog, be, grid, block, dict(args))
+    eng.run()
+
+    def het2():
+        e = Engine(prog, be, grid, block, dict(args))
+        e.run()
+
+    het_ms = _time(het2, reps=5)
+    rows.append({"bench": "overhead", "kernel": "dot_product",
+                 "native_ms": round(native_ms, 3),
+                 "hetgpu_ms": round(het_ms, 3),
+                 "ratio": round(het_ms / max(native_ms, 1e-9), 1)})
+
+    # --- matmul (compute-bound) ------------------------------------------
+    M, K, N = 64, 256, 256
+    Am = rng.normal(size=(M, K)).astype(np.float32)
+    Bm = rng.normal(size=(K, N)).astype(np.float32)
+    native_mm = jax.jit(lambda a, b: a @ b)
+    amj, bmj = jnp.asarray(Am), jnp.asarray(Bm)
+    native_ms = _time(lambda: jax.block_until_ready(native_mm(amj, bmj)))
+    prog, _ = suite.matmul_tiled(tile_k=8)
+    args = {"A": Am.reshape(-1), "B": Bm.reshape(-1),
+            "C": np.zeros(M * N, np.float32),
+            "K": K, "N": N, "ktiles": K // 8}
+    eng = Engine(prog, be, M, N, dict(args))
+    eng.run()
+
+    def het3():
+        e = Engine(prog, be, M, N, dict(args))
+        e.run()
+
+    het_ms = _time(het3, reps=3)
+    rows.append({"bench": "overhead", "kernel": "matmul",
+                 "native_ms": round(native_ms, 3),
+                 "hetgpu_ms": round(het_ms, 3),
+                 "ratio": round(het_ms / max(native_ms, 1e-9), 1)})
+    return rows

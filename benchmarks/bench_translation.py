@@ -1,0 +1,59 @@
+"""Paper §6.2 — translation/JIT cost per backend (first launch vs cached).
+
+The paper reports 10-200 ms per kernel for PTX/SPIR-V/Metalium paths; here
+translation = staging hetIR segments through jax.jit (vectorized) or
+pl.pallas_call (pallas).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Engine, get_backend
+from repro.core import kernels_suite as suite
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(1)
+    for name in ("vadd", "reduction", "matmul_tiled", "montecarlo_pi"):
+        prog_fn = suite.SUITE[name]
+        for backend in ("vectorized", "pallas"):
+            prog, _ = prog_fn()
+            be = get_backend(backend)
+            if name == "vadd":
+                args = {"A": rng.normal(size=128).astype(np.float32),
+                        "B": rng.normal(size=128).astype(np.float32),
+                        "C": np.zeros(128, np.float32), "n": 128}
+                grid, block = 4, 32
+            elif name == "reduction":
+                args = {"A": rng.normal(size=128).astype(np.float32),
+                        "Out": np.zeros(1, np.float32), "n": 128,
+                        "log2t": 5}
+                grid, block = 4, 32
+            elif name == "matmul_tiled":
+                args = {"A": np.ones(8 * 16, np.float32),
+                        "B": np.ones(16 * 16, np.float32),
+                        "C": np.zeros(8 * 16, np.float32),
+                        "K": 16, "N": 16, "ktiles": 2}
+                grid, block = 8, 16
+            else:
+                args = {"Count": np.zeros(1, np.float32)}
+                grid, block = 2, 32
+
+            t0 = time.perf_counter()
+            eng = Engine(prog, be, grid, block, dict(args))
+            eng.run()
+            first_ms = (time.perf_counter() - t0) * 1e3
+            t0 = time.perf_counter()
+            eng2 = Engine(prog, be, grid, block, dict(args))
+            eng2.run()
+            cached_ms = (time.perf_counter() - t0) * 1e3
+            rows.append({"bench": "translation", "kernel": name,
+                         "backend": backend,
+                         "first_ms": round(first_ms, 1),
+                         "cached_ms": round(cached_ms, 1),
+                         "cache_entries":
+                         be.translation_cache_size()})
+    return rows

@@ -1,0 +1,110 @@
+"""§Roofline — three-term roofline per (arch × shape × mesh) cell from the
+dry-run artifacts.
+
+    compute term    = per-device HLO FLOPs (loop-weighted) / 197 TF/s
+    memory term     = per-device HLO bytes / 819 GB/s
+    collective term = per-device collective bytes (ring model) / 50 GB/s
+
+Roofline fraction = compute / max(compute, memory, collective): 1.0 means
+the cell is compute-bound at the hardware's peak — the hillclimb target.
+Also reports MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference)
+against the compiled FLOPs to expose remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def _advice(dom: str, d: dict) -> str:
+    arch, shape = d["arch"], d["shape"]
+    if dom == "collective":
+        return ("reduce FSDP regathers / use reduce-scatter paths; "
+                "EP all-to-all for MoE" if "moe" in arch or "mixtral"
+                in arch or "granite" in arch else
+                "cut per-microbatch weight gathers (larger microbatch, "
+                "TP-only layers) and grad all-reduce size")
+    if dom == "memory":
+        if arch.startswith("xlstm") or arch.startswith("recurrentgemma"):
+            return ("chunked recurrence kernel (mlstm_chunk/rglru_scan) "
+                    "instead of per-step scan traffic")
+        return ("fuse attention (flash kernel), drop f32 intermediates, "
+                "rematerialize less")
+    return "already compute-bound; tune MXU tiling / kernel fusion"
+
+
+def load_rows(tag: str = "baseline"):
+    rows = []
+    for f in sorted(glob.glob(str(ART / f"*__{tag}.json"))):
+        d = json.loads(Path(f).read_text())
+        name = Path(f).name.replace(f"__{tag}.json", "")
+        if d.get("status") == "skipped":
+            rows.append({"cell": name, "status": "skipped",
+                         "reason": d["reason"][:60]})
+            continue
+        if d.get("status") != "ok":
+            rows.append({"cell": name, "status": d.get("status")})
+            continue
+        r = d["roofline"]
+        terms = {"compute": r["compute_s"] or 0.0,
+                 "memory": r["memory_s"] or 0.0,
+                 "collective": r["collective_s"] or 0.0}
+        dom = max(terms, key=terms.get)
+        frac = terms["compute"] / max(max(terms.values()), 1e-12)
+        model_per_chip = d["model_flops"] / d["n_chips"]
+        rows.append({
+            "cell": name, "status": "ok",
+            "compute_s": round(terms["compute"], 3),
+            "memory_s": round(terms["memory"], 3),
+            "collective_s": round(terms["collective"], 3),
+            "dominant": dom,
+            "roofline_frac": round(frac, 4),
+            "useful_flops_ratio": round(
+                model_per_chip / d["hlo_flops"], 3)
+            if d["hlo_flops"] > 0 else None,
+            "advice": _advice(dom, d),
+        })
+    return rows
+
+
+def run(tag: str = "baseline") -> list:
+    rows = load_rows(tag)
+    out = []
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        out.append({"bench": "roofline", "cell": r["cell"],
+                    "compute_s": r["compute_s"],
+                    "memory_s": r["memory_s"],
+                    "collective_s": r["collective_s"],
+                    "dominant": r["dominant"],
+                    "roofline_frac": r["roofline_frac"]})
+    return out
+
+
+def markdown_table(tag: str = "baseline") -> str:
+    rows = load_rows(tag)
+    lines = ["| cell | compute s | memory s | collective s | bottleneck | "
+             "roofline frac | useful-FLOPs ratio | what would move it |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['cell']} | — | — | — | skipped | — | — | "
+                         f"{r['reason']} |")
+        elif r.get("status") == "ok":
+            lines.append(
+                f"| {r['cell']} | {r['compute_s']} | {r['memory_s']} | "
+                f"{r['collective_s']} | {r['dominant']} | "
+                f"{r['roofline_frac']} | {r['useful_flops_ratio']} | "
+                f"{r['advice']} |")
+        else:
+            lines.append(f"| {r['cell']} | — | — | — | {r['status']} | — "
+                         f"| — | — |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

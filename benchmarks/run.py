@@ -1,0 +1,35 @@
+"""One function per paper table. Prints ``bench,key=value,...`` CSV rows."""
+from __future__ import annotations
+
+import sys
+
+
+def _emit(rows) -> None:
+    for r in rows:
+        bench = r.pop("bench")
+        kv = ",".join(f"{k}={v}" for k, v in r.items())
+        print(f"{bench},{kv}")
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, bench_migration,
+                            bench_overhead, bench_portability,
+                            bench_translation, roofline)
+
+    print("# hetGPU reproduction benchmarks (one per paper table)")
+    print("# -- paper 6.1: portability matrix --")
+    _emit(bench_portability.run())
+    print("# -- paper 6.2: overhead vs native --")
+    _emit(bench_overhead.run())
+    print("# -- paper 6.2: translation/JIT cost --")
+    _emit(bench_translation.run())
+    print("# -- paper 6.3: live migration downtime --")
+    _emit(bench_migration.run())
+    print("# -- kernel structural benchmarks --")
+    _emit(bench_kernels.run())
+    print("# -- roofline (from dry-run artifacts; see EXPERIMENTS.md) --")
+    _emit(roofline.run())
+
+
+if __name__ == '__main__':
+    main()

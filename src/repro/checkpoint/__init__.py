@@ -1,0 +1,3 @@
+from .topology import AsyncCheckpointer, latest_step, restore, save
+
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]

@@ -1,0 +1,193 @@
+"""Topology-neutral checkpointing — hetGPU state capture at cluster scale.
+
+The paper snapshots kernels in a device-independent format (hetIR virtual
+registers, not machine registers) so they restore on *different* hardware.
+The training-system analogue: checkpoints store **logical arrays** plus
+their *logical* partition specs — never per-device shards — so a job
+checkpointed on mesh A (say 16×16) restores onto mesh B (2×16×16, 8×32, a
+degraded 15×16 slice...) by re-fitting specs to the new mesh and
+resharding on device_put.  This is what makes elastic restart and
+cross-topology migration first-class.
+
+Layout:  <dir>/step_<N>/manifest.json + one ``.npy`` per leaf.
+Async: ``AsyncCheckpointer`` device_gets synchronously (the snapshot
+barrier — cheap) and writes to disk on a background thread so the train
+loop resumes immediately (cooperative checkpointing, paper §4.2).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+MANIFEST = "manifest.json"
+
+
+# -- pytree <-> flat path helpers -------------------------------------------
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    out = {}
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(node[k], path + (str(k),))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, path + (str(i),))
+        else:
+            out["/".join(path)] = node
+
+    walk(tree, ())
+    return out
+
+
+def _unflatten_like(template, flat: Dict[str, Any]):
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(node[k], path + (str(k),))
+                    for k in node}
+        if isinstance(node, (list, tuple)):
+            t = [walk(v, path + (str(i),)) for i, v in enumerate(node)]
+            return type(node)(t) if isinstance(node, list) else tuple(t)
+        return flat["/".join(path)]
+
+    return walk(template, ())
+
+
+def _spec_to_json(spec: P) -> list:
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+        elif isinstance(entry, tuple):
+            out.append(list(entry))
+        else:
+            out.append(entry)
+    return out
+
+
+def _spec_from_json(obj) -> P:
+    return P(*[tuple(e) if isinstance(e, list) else e for e in obj])
+
+
+# -- save / restore -----------------------------------------------------------
+
+
+def save(path, step: int, state, specs=None, extra: Optional[dict] = None
+         ) -> None:
+    """Write a topology-neutral checkpoint.  ``specs``: matching pytree of
+    PartitionSpecs (logical shardings recorded for restore-time re-fit)."""
+    path = Path(path)
+    tmp = path / f".tmp_step_{step}"
+    final = path / f"step_{step}"
+    tmp.mkdir(parents=True, exist_ok=True)
+
+    flat = _flatten_with_paths(state)
+    flat_specs = _flatten_with_paths(specs) if specs is not None else {}
+    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = key.replace("/", "__") + ".npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"][key] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": arr.dtype.str,
+            "spec": _spec_to_json(flat_specs[key])
+            if key in flat_specs else None,
+        }
+    (tmp / MANIFEST).write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic publish
+
+
+def latest_step(path) -> Optional[int]:
+    path = Path(path)
+    if not path.exists():
+        return None
+    steps = [int(m.group(1)) for p in path.iterdir()
+             if (m := re.match(r"step_(\d+)$", p.name))]
+    return max(steps) if steps else None
+
+
+def restore(path, step: int, template, mesh=None, respec=None):
+    """Load a checkpoint onto ``mesh``.
+
+    ``template``: pytree with the target structure (leaves ignored).
+    ``respec``: optional fn(key, stored_spec, shape) -> PartitionSpec to
+    re-fit specs onto a *different* mesh (defaults to the stored spec with
+    axes missing from the mesh dropped).  Returns (state, extra).
+    """
+    path = Path(path) / f"step_{step}"
+    manifest = json.loads((path / MANIFEST).read_text())
+    axis_names = set(mesh.axis_names) if mesh is not None else set()
+
+    def default_respec(key, spec, shape):
+        if spec is None:
+            return P()
+        fitted = []
+        axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+        for dim, entry in zip(shape, spec):
+            if entry is None:
+                fitted.append(None)
+                continue
+            axes = [a for a in (entry if isinstance(entry, tuple)
+                                else (entry,)) if a in axis_names]
+            n = 1
+            for a in axes:
+                n *= axis_size[a]
+            fitted.append(tuple(axes) if len(axes) > 1 else
+                          (axes[0] if axes else None)
+                          if dim % max(n, 1) == 0 else None)
+        return P(*fitted)
+
+    respec = respec or default_respec
+    flat = {}
+    for key, info in manifest["leaves"].items():
+        arr = np.load(path / info["file"])
+        if mesh is not None:
+            spec = _spec_from_json(info["spec"]) if info["spec"] else None
+            fitted = respec(key, spec, arr.shape)
+            flat[key] = jax.device_put(arr, NamedSharding(mesh, fitted))
+        else:
+            flat[key] = jax.numpy.asarray(arr)
+    state = _unflatten_like(template, flat)
+    return state, manifest["extra"]
+
+
+class AsyncCheckpointer:
+    """Snapshot synchronously (device_get), persist asynchronously."""
+
+    def __init__(self, path):
+        self.path = Path(path)
+        self._thread: Optional[threading.Thread] = None
+        self.saved_steps: list = []
+
+    def save(self, step: int, state, specs=None, extra=None) -> None:
+        self.wait()
+        host_flat = {k: np.asarray(jax.device_get(v))
+                     for k, v in _flatten_with_paths(state).items()}
+        host_state = _unflatten_like(state, host_flat)
+
+        def work():
+            save(self.path, step, host_state, specs=specs, extra=extra)
+            self.saved_steps.append(step)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

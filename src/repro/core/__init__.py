@@ -1,0 +1,11 @@
+# The paper's primary contribution: hetIR (portable GPU kernel IR), the
+# multi-backend runtime (interp / vectorized / pallas), barrier-anchored
+# segmentation, device-neutral snapshots, and cross-backend live migration.
+from . import hetir
+from .backends import BACKENDS, get_backend
+from .engine import Engine
+from .runtime import HetSession, migrate
+from .state import Snapshot
+
+__all__ = ["hetir", "BACKENDS", "get_backend", "Engine", "HetSession",
+           "migrate", "Snapshot"]

@@ -1,0 +1,24 @@
+"""hetGPU backends — the runtime's per-target code-generation modules.
+
+Three targets, mirroring the paper's backend taxonomy:
+
+* :mod:`interp`      — scalar per-thread interpreter (MIMD independent-thread
+  mode; the correctness oracle);
+* :mod:`vectorized`  — masked lane-vector execution under ``jax.jit``
+  (the Tenstorrent "vectorized warp on a core" strategy);
+* :mod:`pallas_backend` — lowers each segment to a ``pl.pallas_call`` TPU
+  kernel (the SIMT-hardware target; "each segment is a separate kernel").
+"""
+from .interp import InterpBackend
+from .vectorized import VectorizedBackend
+from .pallas_backend import PallasBackend
+
+BACKENDS = {
+    "interp": InterpBackend,
+    "vectorized": VectorizedBackend,
+    "pallas": PallasBackend,
+}
+
+
+def get_backend(name: str):
+    return BACKENDS[name]()

@@ -1,0 +1,44 @@
+"""Backend interface: a backend executes one *segment* at a time.
+
+Between segments all state lives in host numpy arrays (:class:`HostState`) —
+this is the paper's design where segment kernels communicate registers and
+shared memory "via memory", and it is what makes snapshots backend-neutral
+for free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from .. import hetir as ir
+from ..segments import SegNode
+
+
+@dataclass
+class Launch:
+    program: ir.Program
+    num_blocks: int
+    block_size: int
+    scalars: Dict[str, object] = field(default_factory=dict)
+
+
+@dataclass
+class HostState:
+    regs: Dict[str, np.ndarray]            # [num_blocks, block_size]
+    shared: Optional[np.ndarray]           # [num_blocks, shared_size]
+    globals_: Dict[str, np.ndarray]        # 1-D buffers
+
+
+class Backend:
+    name = "abstract"
+
+    def run_segment(self, seg: SegNode, state: HostState,
+                    launch: Launch) -> None:
+        raise NotImplementedError
+
+    # Backends may cache per-segment compiled artifacts; exposed for the
+    # translation-cost benchmark (the paper's JIT-cost table).
+    def translation_cache_size(self) -> int:
+        return 0

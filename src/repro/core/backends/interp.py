@@ -1,0 +1,244 @@
+"""Scalar per-thread interpreter — MIMD "independent-thread mode".
+
+Each thread is interpreted with its own control flow (a thread set shrinks at
+divergent @PRED regions and reconverges after them); collectives synchronize
+whichever threads are active at that point.  This is the semantics oracle
+against which the vectorized and Pallas backends are validated, written
+independently of :mod:`semantics` (numpy scalars, explicit thread loops) so
+the implementations cross-check each other.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from .. import hetir as ir
+from ..segments import SegNode
+from .base import Backend, HostState, Launch
+
+
+class InterpBackend(Backend):
+    name = "interp"
+
+    def run_segment(self, seg: SegNode, state: HostState,
+                    launch: Launch) -> None:
+        T = launch.block_size
+        # normalize to host numpy (previous segments may have run on a
+        # jax-array backend — cross-backend migration mid-kernel)
+        state.regs = {k: np.asarray(v) for k, v in state.regs.items()}
+        if state.shared is not None:
+            state.shared = np.asarray(state.shared)
+        state.globals_ = {k: np.asarray(v).copy()
+                          for k, v in state.globals_.items()}
+        with np.errstate(all="ignore"):
+            for b in range(launch.num_blocks):
+                regs = {k: v[b].copy() for k, v in state.regs.items()}
+                shared = state.shared[b] if state.shared is not None else None
+                ctx = _BlockCtx(b, T, launch, regs, shared, state.globals_)
+                _exec_stmts(seg.stmts, ctx, list(range(T)))
+                for k, v in ctx.regs.items():
+                    if k not in state.regs:
+                        state.regs[k] = np.zeros(
+                            (launch.num_blocks, T), dtype=v.dtype)
+                    state.regs[k][b] = v
+                if shared is not None:
+                    state.shared[b] = ctx.shared
+
+
+class _BlockCtx:
+    def __init__(self, block_id, block_size, launch, regs, shared, globals_):
+        self.block_id = block_id
+        self.block_size = block_size
+        self.launch = launch
+        self.regs: Dict[str, np.ndarray] = regs
+        self.shared = shared
+        self.globals_ = globals_
+
+    def reg_write(self, reg: ir.Reg, t: int, value) -> None:
+        if reg.name not in self.regs:
+            self.regs[reg.name] = np.zeros(self.block_size,
+                                           dtype=ir.np_dtype(reg.dtype))
+        self.regs[reg.name][t] = value
+
+    def reg_read(self, reg: ir.Reg, t: int):
+        return self.regs[reg.name][t]
+
+
+def _exec_stmts(stmts: Sequence[ir.Stmt], ctx: _BlockCtx,
+                threads: List[int]) -> None:
+    if not threads:
+        return
+    for s in stmts:
+        if isinstance(s, ir.Op):
+            _exec_op(s, ctx, threads)
+        elif isinstance(s, ir.Pred):
+            taken = [t for t in threads
+                     if bool(ctx.reg_read(s.cond, t))]
+            _exec_stmts(s.body, ctx, taken)  # divergence; implicit reconverge
+        elif isinstance(s, ir.Loop):
+            count = s.count if isinstance(s.count, int) \
+                else int(ctx.launch.scalars[s.count])
+            for it in range(count):
+                for t in threads:
+                    ctx.reg_write(s.var, t, it)
+                _exec_stmts(s.body, ctx, threads)
+        elif isinstance(s, ir.Barrier):
+            raise AssertionError("barrier inside segment")
+
+
+def _val(ctx: _BlockCtx, a, t: int):
+    if isinstance(a, ir.Reg):
+        return ctx.reg_read(a, t)
+    return a
+
+
+def _exec_op(op: ir.Op, ctx: _BlockCtx, threads: List[int]) -> None:
+    oc, d = op.opcode, op.dest
+
+    if oc in ir.COLLECTIVE_OPS:
+        _exec_collective(op, ctx, threads)
+        return
+
+    for t in threads:
+        if oc == ir.GET_GLOBAL_ID:
+            v = ctx.block_id * ctx.block_size + t
+        elif oc == ir.GET_BLOCK_ID:
+            v = ctx.block_id
+        elif oc == ir.GET_THREAD_ID:
+            v = t
+        elif oc == ir.GET_BLOCK_DIM:
+            v = ctx.block_size
+        elif oc == ir.GET_NUM_BLOCKS:
+            v = ctx.launch.num_blocks
+        elif oc == ir.CONST:
+            v = ir.np_dtype(d.dtype).type(op.args[0])
+        elif oc == ir.LD_PARAM:
+            v = ir.np_dtype(d.dtype).type(ctx.launch.scalars[op.args[0]])
+        elif oc == ir.MOV:
+            v = _val(ctx, op.args[0], t)
+        elif oc == ir.CVT:
+            v = ir.np_dtype(d.dtype).type(_val(ctx, op.args[0], t))
+        elif oc == ir.SELECT:
+            c, a, bb = (_val(ctx, x, t) for x in op.args)
+            v = a if bool(c) else bb
+        elif oc == ir.FMA:
+            a, bb, c = (_val(ctx, x, t) for x in op.args)
+            v = a * bb + c
+        elif oc == ir.LD_GLOBAL:
+            buf = ctx.globals_[op.args[0]]
+            v = buf[int(_val(ctx, op.args[1], t))]
+        elif oc == ir.ST_GLOBAL:
+            buf = ctx.globals_[op.args[0]]
+            buf[int(_val(ctx, op.args[1], t))] = _val(ctx, op.args[2], t)
+            continue
+        elif oc == ir.ATOMIC_ADD:
+            buf = ctx.globals_[op.args[0]]
+            i = int(_val(ctx, op.args[1], t))
+            old = buf[i]
+            buf[i] = old + _val(ctx, op.args[2], t)
+            if d is None:
+                continue
+            v = old
+        elif oc == ir.LD_SHARED:
+            v = ctx.shared[int(_val(ctx, op.args[0], t))]
+        elif oc == ir.ST_SHARED:
+            ctx.shared[int(_val(ctx, op.args[0], t))] = \
+                _val(ctx, op.args[1], t)
+            continue
+        elif oc in _SCALAR_BIN:
+            a = _val(ctx, op.args[0], t)
+            b = _val(ctx, op.args[1], t)
+            v = _SCALAR_BIN[oc](a, b)
+        elif oc in _SCALAR_UN:
+            v = _SCALAR_UN[oc](_val(ctx, op.args[0], t))
+        else:  # pragma: no cover
+            raise NotImplementedError(oc)
+        if d is not None:
+            ctx.reg_write(d, t, v)
+
+
+def _exec_collective(op: ir.Op, ctx: _BlockCtx, threads: List[int]) -> None:
+    oc, d = op.opcode, op.dest
+    if oc == ir.VOTE_ANY:
+        r = any(bool(_val(ctx, op.args[0], t)) for t in threads)
+        for t in threads:
+            ctx.reg_write(d, t, r)
+    elif oc == ir.VOTE_ALL:
+        r = all(bool(_val(ctx, op.args[0], t)) for t in threads)
+        for t in threads:
+            ctx.reg_write(d, t, r)
+    elif oc == ir.VOTE_BALLOT:
+        r = sum(1 for t in threads if bool(_val(ctx, op.args[0], t)))
+        for t in threads:
+            ctx.reg_write(d, t, r)
+    elif oc == ir.REDUCE_ADD:
+        vals = [_val(ctx, op.args[0], t) for t in threads]
+        r = np.sum(np.array(vals)) if vals else 0
+        for t in threads:
+            ctx.reg_write(d, t, r)
+    elif oc == ir.REDUCE_MAX:
+        vals = [_val(ctx, op.args[0], t) for t in threads]
+        r = np.max(np.array(vals))
+        for t in threads:
+            ctx.reg_write(d, t, r)
+    elif oc == ir.SCAN_ADD:
+        # inclusive prefix over *lane order* with inactive lanes contributing 0
+        acc = 0
+        vals = {}
+        active = set(threads)
+        for t in range(ctx.block_size):
+            if t in active:
+                acc = acc + _val(ctx, op.args[0], t)
+                vals[t] = acc
+        for t in threads:
+            ctx.reg_write(d, t, vals[t])
+    elif oc == ir.SHUFFLE:
+        # read source lane's value regardless of its activity (hardware-like)
+        full = ctx.regs[op.args[0].name]
+        for t in threads:
+            src = int(np.clip(_val(ctx, op.args[1], t), 0,
+                              ctx.block_size - 1))
+            ctx.reg_write(d, t, full[src])
+    else:  # pragma: no cover
+        raise NotImplementedError(oc)
+
+
+def _py_div(a, b):
+    if isinstance(a, (np.floating, float)):
+        return a / b
+    return a // b
+
+
+_SCALAR_BIN = {
+    ir.ADD: lambda a, b: a + b,
+    ir.SUB: lambda a, b: a - b,
+    ir.MUL: lambda a, b: a * b,
+    ir.DIV: _py_div,
+    ir.MOD: lambda a, b: a % b,
+    ir.MIN: min,
+    ir.MAX: max,
+    ir.AND: lambda a, b: (a and b) if isinstance(a, (bool, np.bool_))
+        else a & b,
+    ir.OR: lambda a, b: (a or b) if isinstance(a, (bool, np.bool_))
+        else a | b,
+    ir.XOR: lambda a, b: (bool(a) != bool(b))
+        if isinstance(a, (bool, np.bool_)) else a ^ b,
+    ir.SHL: lambda a, b: a << b,
+    ir.SHR: lambda a, b: a >> b,
+    ir.LT: lambda a, b: a < b,
+    ir.LE: lambda a, b: a <= b,
+    ir.GT: lambda a, b: a > b,
+    ir.GE: lambda a, b: a >= b,
+    ir.EQ: lambda a, b: a == b,
+    ir.NE: lambda a, b: a != b,
+}
+
+_SCALAR_UN = {
+    ir.NEG: lambda a: -a,
+    ir.ABS: abs,
+    ir.SQRT: np.sqrt,
+    ir.EXP: np.exp,
+    ir.NOT: lambda a: (not a) if isinstance(a, (bool, np.bool_)) else ~a,
+    ir.MOV: lambda a: a,
+}

@@ -1,0 +1,227 @@
+"""Pallas backend — hetIR segments lowered to TPU kernels.
+
+This is the "SIMT hardware" target: one ``pl.pallas_call`` per segment
+(the paper: *"each segment is a separate kernel"*), with
+
+* grid ``(num_blocks,)`` — one grid step per hetIR thread block;
+* per-thread registers as ``[num_blocks, block_size]`` arrays, BlockSpec'd
+  ``(1, block_size)`` so each grid step sees its own block's register file in
+  VMEM — the register-file-in-memory handoff the paper uses between segment
+  kernels;
+* hetIR shared memory as a ``(1, shared_size)`` VMEM-resident block;
+* global buffers staged into VMEM.  Buffers whose every access is *coalesced*
+  (indexed exactly by ``GET_GLOBAL_ID``) are tiled ``(block_size,)`` per grid
+  step — the fast path; all other buffers are staged whole per grid step (the
+  gather/DMA path, mirroring the paper's Tenstorrent fallback).  Written
+  non-coalesced buffers use the revisited-output accumulator pattern: the
+  output block is initialized from the input at grid step 0 and all later
+  reads/writes go through the output ref (constant ``index_map`` keeps the
+  block resident in VMEM across the sequential TPU grid).
+
+On this CPU container kernels execute with ``interpret=True``; the emitted
+BlockSpecs are the TPU contract.  Lane width: ``block_size`` should be a
+multiple of 128 for peak TPU efficiency (any size is functionally correct).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .. import hetir as ir
+from ..segments import SegNode
+from .base import Backend, HostState, Launch
+from .semantics import Env, eval_stmts
+
+
+def _coalesced_buffers(seg: SegNode) -> set:
+    """Buffers where every LD/ST index is exactly a GET_GLOBAL_ID register."""
+    gid_regs: set = set()
+    access: Dict[str, List[str]] = {}
+
+    def walk(stmts):
+        for s in stmts:
+            if isinstance(s, ir.Op):
+                if s.opcode == ir.GET_GLOBAL_ID:
+                    gid_regs.add(s.dest.name)
+                elif s.opcode in (ir.LD_GLOBAL, ir.ST_GLOBAL, ir.ATOMIC_ADD):
+                    idx = s.args[1]
+                    access.setdefault(s.args[0], []).append(
+                        idx.name if isinstance(idx, ir.Reg) else "#imm")
+            elif isinstance(s, (ir.Pred, ir.Loop)):
+                walk(s.body)
+
+    walk(seg.stmts)
+    return {buf for buf, idxs in access.items()
+            if all(i in gid_regs for i in idxs)}
+
+
+class PallasBackend(Backend):
+    name = "pallas"
+
+    def __init__(self, interpret: bool = True):
+        self.interpret = interpret
+        self._cache: Dict[Tuple, object] = {}
+
+    def translation_cache_size(self) -> int:
+        return len(self._cache)
+
+    # ------------------------------------------------------------------
+    def _translate(self, seg: SegNode, launch: Launch, reg_sig: Tuple,
+                   glb_sig: Tuple, shared_sig):
+        key = (id(seg), launch.num_blocks, launch.block_size,
+               tuple(sorted(launch.scalars.items())), reg_sig, glb_sig,
+               shared_sig)
+        hit = self._cache.get(key)
+        if hit is not None:
+            return hit
+
+        B, T = launch.num_blocks, launch.block_size
+        scalars = dict(launch.scalars)
+        reg_names = tuple(n for n, _, _ in reg_sig)
+        reg_dtypes = {n: dt for n, _, dt in reg_sig}
+        glb_names = tuple(n for n, _, _ in glb_sig)
+        glb_shapes = {n: (shape, dt) for n, shape, dt in glb_sig}
+        coalesced = {b for b in _coalesced_buffers(seg)
+                     if b in glb_shapes and glb_shapes[b][0] == (B * T,)}
+        written_order = tuple(sorted(seg.gwrites))
+        has_shared = shared_sig is not None
+        S = shared_sig[0][1] if has_shared else 0
+        new_regs = tuple(sorted(r.name for r in seg.defs
+                                if r.name not in reg_names))
+        new_dt = {r.name: ir.np_dtype(r.dtype) for r in seg.defs
+                  if r.name in new_regs}
+
+        row_spec = pl.BlockSpec((1, T), lambda b: (b, 0))
+
+        in_specs: List[pl.BlockSpec] = [row_spec] * len(reg_names)
+        if has_shared:
+            in_specs.append(pl.BlockSpec((1, S), lambda b: (b, 0)))
+        for n in glb_names:
+            if n in coalesced:
+                in_specs.append(pl.BlockSpec((T,), lambda b: (b,)))
+            else:
+                in_specs.append(pl.BlockSpec(glb_shapes[n][0],
+                                             lambda b: (0,)))
+
+        out_specs: List[pl.BlockSpec] = []
+        out_shapes: List[jax.ShapeDtypeStruct] = []
+        for n in reg_names:
+            out_specs.append(row_spec)
+            out_shapes.append(jax.ShapeDtypeStruct((B, T), reg_dtypes[n]))
+        for n in new_regs:
+            out_specs.append(row_spec)
+            out_shapes.append(jax.ShapeDtypeStruct((B, T), new_dt[n]))
+        if has_shared:
+            out_specs.append(pl.BlockSpec((1, S), lambda b: (b, 0)))
+            out_shapes.append(jax.ShapeDtypeStruct((B, S), shared_sig[1]))
+        for n in written_order:
+            shape, dt = glb_shapes[n]
+            if n in coalesced:
+                out_specs.append(pl.BlockSpec((T,), lambda b: (b,)))
+            else:
+                out_specs.append(pl.BlockSpec(shape, lambda b: (0,)))
+            out_shapes.append(jax.ShapeDtypeStruct(shape, dt))
+
+        n_in = len(reg_names) + int(has_shared) + len(glb_names)
+
+        def kernel(*refs):
+            in_refs, out_refs = refs[:n_in], refs[n_in:]
+            b = pl.program_id(0)
+
+            reg_in = dict(zip(reg_names, in_refs[:len(reg_names)]))
+            sh_ref = in_refs[len(reg_names)] if has_shared else None
+            glb_in = dict(zip(glb_names,
+                              in_refs[len(reg_names) + int(has_shared):]))
+            out_reg_refs = dict(zip(reg_names + new_regs, out_refs))
+            o = len(reg_names) + len(new_regs)
+            out_sh_ref = out_refs[o] if has_shared else None
+            out_glb_refs = dict(zip(written_order,
+                                    out_refs[o + int(has_shared):]))
+
+            # revisited-output init for written, non-coalesced buffers
+            for n in written_order:
+                if n not in coalesced:
+                    @pl.when(b == 0)
+                    def _init(n=n):
+                        out_glb_refs[n][...] = glb_in[n][...]
+
+            glbs = {}
+            for n in glb_names:
+                if n in written_order and n not in coalesced:
+                    glbs[n] = out_glb_refs[n][...]
+                else:
+                    glbs[n] = glb_in[n][...]
+
+            env = Env(regs={k: v[...] for k, v in reg_in.items()},
+                      shared=sh_ref[...] if has_shared else None,
+                      globals_=glbs, scalars=scalars,
+                      num_blocks=B, block_size=T, block_offset=b)
+            env.lane_shape = (1, T)
+            env.coalesced = coalesced
+            env.tile_base = b * T
+            eval_stmts(seg.stmts, env, mask=None)
+
+            for k, ref in out_reg_refs.items():
+                if k in env.regs:
+                    ref[...] = jnp.broadcast_to(
+                        env.regs[k], (1, T)).astype(ref.dtype)
+                elif k in reg_in:  # untouched register: pass through
+                    ref[...] = reg_in[k][...]
+                else:  # defined only in a zero-trip loop: zeros
+                    ref[...] = jnp.zeros((1, T), ref.dtype)
+            if has_shared:
+                out_sh_ref[...] = env.shared.reshape(1, S)
+            for n in written_order:
+                out_glb_refs[n][...] = env.globals[n]
+
+        call = pl.pallas_call(
+            kernel,
+            grid=(B,),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=out_shapes,
+            interpret=self.interpret,
+        )
+        meta = dict(reg_names=reg_names, new_regs=new_regs,
+                    glb_names=glb_names, written=written_order,
+                    has_shared=has_shared, coalesced=coalesced)
+        self._cache[key] = (jax.jit(call), meta)
+        return self._cache[key]
+
+    # ------------------------------------------------------------------
+    def run_segment(self, seg: SegNode, state: HostState,
+                    launch: Launch) -> None:
+        reg_names = tuple(sorted(state.regs))
+        reg_sig = tuple((n, state.regs[n].shape, state.regs[n].dtype.str)
+                        for n in reg_names)
+        glb_names = tuple(sorted(state.globals_))
+        glb_sig = tuple((n, state.globals_[n].shape,
+                         state.globals_[n].dtype.str) for n in glb_names)
+        shared_sig = None if state.shared is None else \
+            (state.shared.shape, state.shared.dtype.str)
+
+        call, meta = self._translate(seg, launch, reg_sig, glb_sig,
+                                     shared_sig)
+
+        args = [jnp.asarray(state.regs[n]) for n in reg_names]
+        if meta["has_shared"]:
+            args.append(jnp.asarray(state.shared))
+        args += [jnp.asarray(state.globals_[n]) for n in glb_names]
+
+        outs = call(*args)
+        i = 0
+        regs = {}
+        for n in meta["reg_names"] + meta["new_regs"]:
+            regs[n] = outs[i]  # stays on device between segments
+            i += 1
+        state.regs = regs
+        if meta["has_shared"]:
+            state.shared = outs[i]
+            i += 1
+        for n in meta["written"]:
+            state.globals_[n] = outs[i]
+            i += 1

@@ -1,0 +1,281 @@
+"""Shared lane-vector semantics for hetIR ops.
+
+Both the vectorized backend (arrays shaped ``[num_blocks, block_size]``) and
+the Pallas backend (arrays shaped ``[1, block_size]`` inside one grid step)
+evaluate segments through this module.  All per-thread values carry the lane
+axis last; collectives reduce over the lane axis only (i.e. within a block),
+matching hetIR's definition of collectives over the *active threads of the
+block*.
+
+Predication (`@PRED`) is realized as an explicit active-mask stack — the
+paper's "software-managed predication" (§4.4): both branch outcomes share a
+single instruction stream and inactive lanes are masked at register writes,
+memory stores, and collective participation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import hetir as ir
+
+
+class Env:
+    """Mutable evaluation environment for one segment."""
+
+    def __init__(self, regs: Dict[str, Any], shared, globals_: Dict[str, Any],
+                 scalars: Dict[str, Any], num_blocks: int, block_size: int,
+                 block_offset: Any = 0):
+        self.regs = regs
+        self.shared = shared
+        self.globals = globals_
+        self.scalars = scalars
+        self.num_blocks = num_blocks      # total blocks in the launch
+        self.block_size = block_size
+        self.block_offset = block_offset  # first block id of the lane arrays
+        self.lane_shape: Optional[Tuple[int, ...]] = None  # set on first use
+        # Pallas fast path: buffers tiled per block (indices are global ids
+        # and must be rebased to tile-local offsets).  Empty for other
+        # backends.
+        self.coalesced: set = set()
+        self.tile_base = 0
+
+    def write_reg(self, reg: ir.Reg, value, mask):
+        value = jnp.asarray(value, dtype=ir.np_dtype(reg.dtype))
+        value = jnp.broadcast_to(value, self.lane_shape)
+        if mask is not None and reg.name in self.regs:
+            old = jnp.broadcast_to(
+                jnp.asarray(self.regs[reg.name],
+                            dtype=ir.np_dtype(reg.dtype)), self.lane_shape)
+            value = jnp.where(mask, value, old)
+        self.regs[reg.name] = value
+
+    def read_reg(self, reg: ir.Reg):
+        v = self.regs[reg.name]
+        return jnp.broadcast_to(jnp.asarray(v, ir.np_dtype(reg.dtype)),
+                                self.lane_shape)
+
+
+def _lane_ids(env: Env):
+    """[rows, block_size] thread / block index arrays."""
+    rows = env.lane_shape[0]
+    tid = jax.lax.broadcasted_iota(jnp.int32, env.lane_shape, 1)
+    bid = jax.lax.broadcasted_iota(jnp.int32, env.lane_shape, 0)
+    bid = bid + jnp.asarray(env.block_offset, jnp.int32)
+    return bid, tid
+
+
+def _arg(env: Env, a, dtype=None):
+    if isinstance(a, ir.Reg):
+        return env.read_reg(a)
+    return jnp.asarray(a, dtype)
+
+
+def eval_stmts(stmts: Sequence[ir.Stmt], env: Env, mask) -> None:
+    for s in stmts:
+        if isinstance(s, ir.Op):
+            eval_op(s, env, mask)
+        elif isinstance(s, ir.Pred):
+            cond = env.read_reg(s.cond)
+            inner = cond if mask is None else jnp.logical_and(mask, cond)
+            eval_stmts(s.body, env, inner)
+        elif isinstance(s, ir.Loop):
+            count = s.count if isinstance(s.count, int) \
+                else int(env.scalars[s.count])
+            for it in range(count):  # trace-time unroll (uniform count)
+                env.regs[s.var.name] = jnp.full(
+                    env.lane_shape, it, dtype=jnp.int32)
+                eval_stmts(s.body, env, mask)
+        elif isinstance(s, ir.Barrier):
+            raise AssertionError(
+                "barrier inside a segment — segmentation bug")
+        else:  # pragma: no cover
+            raise TypeError(type(s))
+
+
+def eval_op(op: ir.Op, env: Env, mask) -> None:
+    oc = op.opcode
+    d = op.dest
+
+    # ---- identity ---------------------------------------------------------
+    if oc == ir.GET_GLOBAL_ID:
+        bid, tid = _lane_ids(env)
+        env.write_reg(d, bid * env.block_size + tid, mask)
+    elif oc == ir.GET_BLOCK_ID:
+        bid, _ = _lane_ids(env)
+        env.write_reg(d, bid, mask)
+    elif oc == ir.GET_THREAD_ID:
+        _, tid = _lane_ids(env)
+        env.write_reg(d, tid, mask)
+    elif oc == ir.GET_BLOCK_DIM:
+        env.write_reg(d, jnp.full(env.lane_shape, env.block_size,
+                                  jnp.int32), mask)
+    elif oc == ir.GET_NUM_BLOCKS:
+        env.write_reg(d, jnp.full(env.lane_shape, env.num_blocks,
+                                  jnp.int32), mask)
+
+    # ---- constants / moves ------------------------------------------------
+    elif oc == ir.CONST:
+        env.write_reg(d, jnp.full(env.lane_shape, op.args[0],
+                                  ir.np_dtype(d.dtype)), mask)
+    elif oc == ir.LD_PARAM:
+        env.write_reg(d, jnp.full(env.lane_shape, env.scalars[op.args[0]],
+                                  ir.np_dtype(d.dtype)), mask)
+    elif oc == ir.MOV:
+        env.write_reg(d, _arg(env, op.args[0]), mask)
+    elif oc == ir.CVT:
+        env.write_reg(d, _arg(env, op.args[0]).astype(
+            ir.np_dtype(d.dtype)), mask)
+
+    # ---- ALU ---------------------------------------------------------------
+    elif oc in _BINOPS:
+        a = _arg(env, op.args[0])
+        b = _arg(env, op.args[1])
+        env.write_reg(d, _BINOPS[oc](a, b), mask)
+    elif oc in _UNOPS:
+        env.write_reg(d, _UNOPS[oc](_arg(env, op.args[0])), mask)
+    elif oc == ir.FMA:
+        a, b, c = (_arg(env, x) for x in op.args)
+        env.write_reg(d, a * b + c, mask)
+    elif oc == ir.SELECT:
+        c, a, b = (_arg(env, x) for x in op.args)
+        env.write_reg(d, jnp.where(c, a, b), mask)
+
+    # ---- global memory -----------------------------------------------------
+    elif oc == ir.LD_GLOBAL:
+        buf = env.globals[op.args[0]]
+        idx = _global_idx(env, op.args[0], op.args[1])
+        safe = idx if mask is None else jnp.where(mask, idx, 0)
+        env.write_reg(d, jnp.take(buf, safe.reshape(-1), axis=0)
+                      .reshape(env.lane_shape), mask)
+    elif oc == ir.ST_GLOBAL:
+        buf = env.globals[op.args[0]]
+        idx = _global_idx(env, op.args[0], op.args[1])
+        val = _arg(env, op.args[2]).astype(buf.dtype)
+        val = jnp.broadcast_to(val, env.lane_shape)
+        oob = jnp.int32(buf.shape[0])
+        safe = idx if mask is None else jnp.where(mask, idx, oob)
+        env.globals[op.args[0]] = buf.at[safe.reshape(-1)].set(
+            val.reshape(-1), mode="drop")
+    elif oc == ir.ATOMIC_ADD:
+        buf = env.globals[op.args[0]]
+        idx = _global_idx(env, op.args[0], op.args[1])
+        val = _arg(env, op.args[2]).astype(buf.dtype)
+        val = jnp.broadcast_to(val, env.lane_shape)
+        oob = jnp.int32(buf.shape[0])
+        safe = idx if mask is None else jnp.where(mask, idx, oob)
+        old = jnp.take(buf, jnp.where(safe >= oob, 0, safe).reshape(-1),
+                       axis=0).reshape(env.lane_shape)
+        env.globals[op.args[0]] = buf.at[safe.reshape(-1)].add(
+            val.reshape(-1), mode="drop")
+        if d is not None:
+            env.write_reg(d, old, mask)
+
+    # ---- shared memory -----------------------------------------------------
+    elif oc == ir.LD_SHARED:
+        idx = _arg(env, op.args[0]).astype(jnp.int32)
+        safe = idx if mask is None else jnp.where(mask, idx, 0)
+        env.write_reg(d, jnp.take_along_axis(env.shared, safe, axis=1), mask)
+    elif oc == ir.ST_SHARED:
+        idx = _arg(env, op.args[0]).astype(jnp.int32)
+        val = _arg(env, op.args[1]).astype(env.shared.dtype)
+        val = jnp.broadcast_to(val, env.lane_shape)
+        oob = jnp.int32(env.shared.shape[1])
+        safe = idx if mask is None else jnp.where(mask, idx, oob)
+        rows = jax.lax.broadcasted_iota(jnp.int32, env.lane_shape, 0)
+        env.shared = env.shared.at[rows.reshape(-1), safe.reshape(-1)].set(
+            val.reshape(-1), mode="drop")
+
+    # ---- collectives (within block, over active lanes) ----------------------
+    elif oc == ir.VOTE_ANY:
+        p = _active(_arg(env, op.args[0]), mask)
+        env.write_reg(d, jnp.any(p, axis=-1, keepdims=True), mask)
+    elif oc == ir.VOTE_ALL:
+        p = _arg(env, op.args[0])
+        p = p if mask is None else jnp.logical_or(p, jnp.logical_not(mask))
+        env.write_reg(d, jnp.all(p, axis=-1, keepdims=True), mask)
+    elif oc == ir.VOTE_BALLOT:
+        p = _active(_arg(env, op.args[0]), mask)
+        env.write_reg(d, jnp.sum(p.astype(jnp.int32), axis=-1,
+                                 keepdims=True), mask)
+    elif oc == ir.REDUCE_ADD:
+        v = _arg(env, op.args[0])
+        v = v if mask is None else jnp.where(mask, v, jnp.zeros_like(v))
+        env.write_reg(d, jnp.sum(v, axis=-1, keepdims=True), mask)
+    elif oc == ir.REDUCE_MAX:
+        v = _arg(env, op.args[0])
+        neg = jnp.full_like(v, _min_value(v.dtype))
+        v = v if mask is None else jnp.where(mask, v, neg)
+        env.write_reg(d, jnp.max(v, axis=-1, keepdims=True), mask)
+    elif oc == ir.SCAN_ADD:
+        v = _arg(env, op.args[0])
+        v = v if mask is None else jnp.where(mask, v, jnp.zeros_like(v))
+        env.write_reg(d, jnp.cumsum(v, axis=-1), mask)
+    elif oc == ir.SHUFFLE:
+        v = _arg(env, op.args[0])
+        src = _arg(env, op.args[1]).astype(jnp.int32)
+        src = jnp.clip(src, 0, env.block_size - 1)
+        env.write_reg(d, jnp.take_along_axis(v, src, axis=-1), mask)
+
+    else:  # pragma: no cover
+        raise NotImplementedError(oc)
+
+
+def _global_idx(env: Env, buf_name: str, idx_arg):
+    """Index into a global buffer, rebased for per-block tiles (Pallas)."""
+    idx = _arg(env, idx_arg).astype(jnp.int32)
+    if buf_name in env.coalesced:
+        idx = idx - jnp.asarray(env.tile_base, jnp.int32)
+    return idx
+
+
+def _active(pred, mask):
+    return pred if mask is None else jnp.logical_and(pred, mask)
+
+
+def _min_value(dtype):
+    if jnp.issubdtype(dtype, jnp.floating):
+        return -jnp.inf
+    return jnp.iinfo(dtype).min
+
+
+def _int_or_float(a, b, fi, ff):
+    return ff(a, b) if jnp.issubdtype(a.dtype, jnp.floating) else fi(a, b)
+
+
+_BINOPS = {
+    ir.ADD: lambda a, b: a + b,
+    ir.SUB: lambda a, b: a - b,
+    ir.MUL: lambda a, b: a * b,
+    ir.DIV: lambda a, b: _int_or_float(a, b, lambda x, y: x // y,
+                                       lambda x, y: x / y),
+    ir.MOD: lambda a, b: a % b,
+    ir.MIN: jnp.minimum,
+    ir.MAX: jnp.maximum,
+    ir.AND: lambda a, b: (jnp.logical_and(a, b) if a.dtype == jnp.bool_
+                          else a & b),
+    ir.OR: lambda a, b: (jnp.logical_or(a, b) if a.dtype == jnp.bool_
+                         else a | b),
+    ir.XOR: lambda a, b: (jnp.logical_xor(a, b) if a.dtype == jnp.bool_
+                          else a ^ b),
+    ir.SHL: lambda a, b: a << b,
+    ir.SHR: lambda a, b: a >> b,
+    ir.LT: lambda a, b: a < b,
+    ir.LE: lambda a, b: a <= b,
+    ir.GT: lambda a, b: a > b,
+    ir.GE: lambda a, b: a >= b,
+    ir.EQ: lambda a, b: a == b,
+    ir.NE: lambda a, b: a != b,
+}
+
+_UNOPS = {
+    ir.NEG: lambda a: -a,
+    ir.ABS: jnp.abs,
+    ir.SQRT: jnp.sqrt,
+    ir.EXP: jnp.exp,
+    ir.NOT: lambda a: (jnp.logical_not(a) if a.dtype == jnp.bool_ else ~a),
+    ir.MOV: lambda a: a,
+}

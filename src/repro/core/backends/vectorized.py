@@ -1,0 +1,59 @@
+"""Vectorized-warp backend — software SIMT under ``jax.jit``.
+
+The Tenstorrent "vectorized warp on a core" strategy (paper §4.4): every
+block's threads become lanes of dense arrays ``[num_blocks, block_size]``;
+divergence is an explicit active-mask; one traced instruction stream serves
+all threads.  Each segment is staged and jitted once per
+(segment, launch-geometry, uniform-scalars) key — the runtime's translation
+cache (paper §4.2 "the runtime caches these translated kernels").
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import numpy as np
+
+from ..segments import SegNode
+from .base import Backend, HostState, Launch
+from .semantics import Env, eval_stmts
+
+
+class VectorizedBackend(Backend):
+    name = "vectorized"
+
+    def __init__(self):
+        self._cache: Dict[Tuple, object] = {}
+
+    def translation_cache_size(self) -> int:
+        return len(self._cache)
+
+    def _translate(self, seg: SegNode, launch: Launch):
+        key = (id(seg), launch.num_blocks, launch.block_size,
+               tuple(sorted(launch.scalars.items())))
+        fn = self._cache.get(key)
+        if fn is not None:
+            return fn
+
+        scalars = dict(launch.scalars)
+        B, T = launch.num_blocks, launch.block_size
+
+        @jax.jit
+        def run(regs: dict, shared, glbs: dict):
+            env = Env(dict(regs), shared, dict(glbs), scalars, B, T)
+            env.lane_shape = (B, T)
+            eval_stmts(seg.stmts, env, mask=None)
+            return env.regs, env.shared, env.globals
+
+        self._cache[key] = run
+        return run
+
+    def run_segment(self, seg: SegNode, state: HostState,
+                    launch: Launch) -> None:
+        run = self._translate(seg, launch)
+        regs, shared, glbs = run(state.regs, state.shared, state.globals_)
+        # keep state on-device between segments (registers are only pulled
+        # to host numpy at snapshot time — Engine.snapshot)
+        state.regs = dict(regs)
+        state.shared = shared
+        state.globals_ = dict(glbs)

@@ -1,0 +1,177 @@
+"""The hetGPU execution engine — segment walker + snapshot machinery.
+
+The engine owns the *control* state the paper puts in its snapshots: the
+position in the segmented program (node index), loop iteration counters, the
+per-thread virtual register file, shared memory, and global buffers.
+Backends only ever execute one straight-line segment; everything between
+segments (barrier semantics, loop back-edges, pause flags, snapshot /
+resume) lives here and is therefore **identical across backends** — which is
+precisely what makes cross-backend migration sound.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from . import hetir as ir
+from .backends.base import Backend, HostState, Launch
+from .segments import LoopEnd, LoopStart, Node, SegNode, segment_program
+from .state import Snapshot
+
+
+class Engine:
+    def __init__(self, program: ir.Program, backend: Backend,
+                 num_blocks: int, block_size: int,
+                 args: Dict[str, object], _from_snapshot: bool = False):
+        program.validate()
+        self.program = program
+        self.backend = backend
+        # segmentation is memoized on the Program so SegNode identities are
+        # stable across launches — the backends' translation caches key on
+        # them (paper §4.2: "the runtime caches these translated kernels")
+        nodes = getattr(program, "_nodes_cache", None)
+        if nodes is None:
+            nodes = segment_program(program)
+            program._nodes_cache = nodes
+        self.nodes = nodes
+        self.launch = Launch(program, num_blocks, block_size, scalars={})
+        self.node_idx = 0
+        self.loop_counters: Dict[int, int] = {}
+        self.finished = False
+
+        # registers that any segment reads — everything else is dead between
+        # segments and gets pruned from state (the paper's "only saving live
+        # registers" snapshot-size optimization, §8 Scalability)
+        self._live: set = set()
+        for n in self.nodes:
+            if isinstance(n, SegNode):
+                self._live.update(r.name for r in n.uses)
+            elif isinstance(n, LoopStart):
+                self._live.add(n.var.name)
+
+        if _from_snapshot:
+            return
+
+        globals_: Dict[str, np.ndarray] = {}
+        for p in program.buffers():
+            if p.name not in args:
+                raise ValueError(f"missing buffer argument {p.name}")
+            buf = np.asarray(args[p.name], dtype=ir.np_dtype(p.dtype))
+            if buf.ndim != 1:
+                raise ValueError(f"buffer {p.name} must be 1-D")
+            globals_[p.name] = buf.copy()
+        for p in program.scalars():
+            if p.name not in args:
+                raise ValueError(f"missing scalar argument {p.name}")
+            self.launch.scalars[p.name] = ir.np_dtype(p.dtype).type(
+                args[p.name])
+
+        shared = None
+        if program.shared_size:
+            shared = np.zeros((num_blocks, program.shared_size),
+                              dtype=ir.np_dtype(program.shared_dtype))
+        self.state = HostState(regs={}, shared=shared, globals_=globals_)
+
+    # ------------------------------------------------------------------
+    def run(self, max_segments: Optional[int] = None,
+            pause_flag: Optional[Callable[[], bool]] = None) -> bool:
+        """Execute until completion, ``max_segments`` executed segments, or
+        ``pause_flag()`` turning true at a barrier.  Returns True iff the
+        program ran to completion."""
+        executed = 0
+        while self.node_idx < len(self.nodes):
+            if max_segments is not None and executed >= max_segments:
+                return False
+            node = self.nodes[self.node_idx]
+            if isinstance(node, SegNode):
+                self.backend.run_segment(node, self.state, self.launch)
+                self._prune_dead_regs()
+                executed += 1
+                self.node_idx += 1
+                # a barrier boundary — the paper's cooperative pause point
+                if pause_flag is not None and pause_flag() \
+                        and self.node_idx < len(self.nodes):
+                    return False
+            elif isinstance(node, LoopStart):
+                if self._trip_count(node) <= 0:
+                    # zero-trip loop: jump past the matching LoopEnd
+                    self.node_idx = next(
+                        n.index for n in self.nodes
+                        if isinstance(n, LoopEnd)
+                        and n.loop_id == node.loop_id) + 1
+                    continue
+                self.loop_counters[node.loop_id] = 0
+                self._set_loop_var(node, 0)
+                self.node_idx += 1
+            elif isinstance(node, LoopEnd):
+                start = self.nodes[node.start_index]
+                cnt = self.loop_counters[node.loop_id] + 1
+                trip = self._trip_count(start)
+                if cnt < trip:
+                    self.loop_counters[node.loop_id] = cnt
+                    self._set_loop_var(start, cnt)
+                    self.node_idx = node.start_index + 1
+                else:
+                    del self.loop_counters[node.loop_id]
+                    self.node_idx += 1
+        self.finished = True
+        return True
+
+    def _trip_count(self, start: LoopStart) -> int:
+        if isinstance(start.count, int):
+            return start.count
+        return int(self.launch.scalars[start.count])
+
+    def _set_loop_var(self, start: LoopStart, value: int) -> None:
+        self.state.regs[start.var.name] = np.full(
+            (self.launch.num_blocks, self.launch.block_size), value,
+            dtype=ir.np_dtype(start.var.dtype))
+
+    def _prune_dead_regs(self) -> None:
+        self.state.regs = {k: v for k, v in self.state.regs.items()
+                           if k in self._live}
+
+    # ------------------------------------------------------------------
+    def snapshot(self) -> Snapshot:
+        """Capture device-neutral state (only legal between segments —
+        which is the only place this can be called, by construction)."""
+        return Snapshot(
+            program_name=self.program.name,
+            num_blocks=self.launch.num_blocks,
+            block_size=self.launch.block_size,
+            node_idx=self.node_idx,
+            loop_counters=dict(self.loop_counters),
+            regs={k: np.asarray(v).copy()
+                  for k, v in self.state.regs.items()},
+            shared=None if self.state.shared is None
+            else np.asarray(self.state.shared).copy(),
+            globals_={k: np.asarray(v).copy()
+                      for k, v in self.state.globals_.items()},
+            scalars=dict(self.launch.scalars),
+        )
+
+    @classmethod
+    def resume(cls, program: ir.Program, backend: Backend,
+               snap: Snapshot) -> "Engine":
+        """Re-instantiate a snapshot on (possibly) a different backend —
+        the paper's cross-architecture restore."""
+        if snap.program_name != program.name:
+            raise ValueError(
+                f"snapshot is for {snap.program_name!r}, not {program.name!r}")
+        eng = cls(program, backend, snap.num_blocks, snap.block_size,
+                  args={}, _from_snapshot=True)
+        eng.launch.scalars = dict(snap.scalars)
+        eng.node_idx = snap.node_idx
+        eng.loop_counters = dict(snap.loop_counters)
+        eng.state = HostState(
+            regs={k: v.copy() for k, v in snap.regs.items()},
+            shared=None if snap.shared is None else snap.shared.copy(),
+            globals_={k: v.copy() for k, v in snap.globals_.items()},
+        )
+        eng.finished = eng.node_idx >= len(eng.nodes)
+        return eng
+
+    # ------------------------------------------------------------------
+    def result(self, buf: str) -> np.ndarray:
+        return np.asarray(self.state.globals_[buf])

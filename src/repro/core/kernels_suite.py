@@ -1,0 +1,392 @@
+"""The paper's microbenchmark/validation kernel suite, in hetIR (§5.3/§6.1).
+
+Ten kernels mirroring the paper's portability evaluation: vector add, SAXPY,
+tiled matrix multiply (shared memory + barriers), reduction (shared-memory
+tree + atomics), inclusive scan, bitcount via ballot vote, Monte-Carlo pi
+(divergence + RNG + atomics), a small neural-net layer (matvec + ReLU),
+a divergent 1-D stencil, and a persistent iterative kernel (the migration
+test target).
+
+Each returns a :class:`~repro.core.hetir.Program` plus a pure-numpy oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+from . import hetir as ir
+from .hetir import Builder, Ptr, Scalar
+
+
+# ---------------------------------------------------------------------------
+def vadd() -> Tuple[ir.Program, Callable]:
+    b = Builder("vadd", [Ptr("A"), Ptr("B"), Ptr("C"), Scalar("n")])
+    i = b.global_id(0)
+    with b.when(i < b.param("n")):
+        b.store("C", i, b.load("A", i) + b.load("B", i))
+    prog = b.done()
+
+    def oracle(args):
+        n = int(args["n"])
+        out = np.array(args["C"], dtype=np.float32)
+        out[:n] = np.asarray(args["A"])[:n] + np.asarray(args["B"])[:n]
+        return {"C": out}
+
+    return prog, oracle
+
+
+def saxpy() -> Tuple[ir.Program, Callable]:
+    b = Builder("saxpy", [Ptr("X"), Ptr("Y"), Scalar("n"),
+                          Scalar("a", ir.F32)])
+    i = b.global_id(0)
+    with b.when(i < b.param("n")):
+        y = b.load("Y", i) + b.param("a") * b.load("X", i)
+        b.store("Y", i, y)
+    prog = b.done()
+
+    def oracle(args):
+        n, a = int(args["n"]), np.float32(args["a"])
+        y = np.array(args["Y"], dtype=np.float32)
+        y[:n] = y[:n] + a * np.asarray(args["X"])[:n]
+        return {"Y": y}
+
+    return prog, oracle
+
+
+# ---------------------------------------------------------------------------
+def matmul_tiled(tile_k: int = 8) -> Tuple[ir.Program, Callable]:
+    """C[M,N] = A[M,K] @ B[K,N].  One block per row of C; ``block_size`` = N.
+    K is consumed in ``tile_k`` chunks staged through shared memory with a
+    barrier per tile — the paper's shared-memory matmul, and the canonical
+    barrier-segmented kernel for migration tests."""
+    b = Builder("matmul_tiled",
+                [Ptr("A"), Ptr("B"), Ptr("C"), Scalar("K"), Scalar("N"),
+                 Scalar("ktiles")],
+                shared_size=tile_k)
+    row = b.block_id()
+    col = b.thread_id()
+    n = b.param("N")
+    k = b.param("K")
+    acc = b.var(b.const(0.0, ir.F32), hint="acc")
+    with b.loop("ktiles", hint="kt") as kt:
+        # threads t < tile_k cooperatively stage A[row, kt*tile_k + t]
+        t = b.thread_id()
+        with b.when(t < b.const(tile_k)):
+            a_idx = row * k + kt * b.const(tile_k) + t
+            b.store_shared(t, b.load("A", a_idx))
+        b.barrier("tile-staged")
+        with b.loop(tile_k, hint="kk") as kk:
+            a_val = b.load_shared(kk)
+            b_idx = (kt * b.const(tile_k) + kk) * n + col
+            b.assign(acc, b.fma(a_val, b.load("B", b_idx), acc))
+        b.barrier("tile-consumed")
+    b.store("C", row * n + col, acc)
+    prog = b.done()
+
+    def oracle(args):
+        K, N = int(args["K"]), int(args["N"])
+        A = np.asarray(args["A"], np.float32)
+        B = np.asarray(args["B"], np.float32)
+        M = A.size // K
+        C = (A.reshape(M, K) @ B.reshape(K, N)).reshape(-1)
+        return {"C": C.astype(np.float32)}
+
+    return prog, oracle
+
+
+# ---------------------------------------------------------------------------
+def reduction() -> Tuple[ir.Program, Callable]:
+    """Block-level shared-memory tree reduction + one atomic per block."""
+    b = Builder("reduction", [Ptr("A"), Ptr("Out"), Scalar("n"),
+                              Scalar("log2t")],
+                shared_size=1024)
+    i = b.global_id(0)
+    t = b.thread_id()
+    x = b.var(b.const(0.0, ir.F32), hint="x")
+    with b.when(i < b.param("n")):
+        b.assign(x, b.load("A", i))
+    b.store_shared(t, x)
+    b.barrier("loaded")
+    dim = b.block_dim()
+    with b.loop("log2t", hint="lv") as lv:
+        # offset = block_dim >> (lv+1)
+        off = dim >> (lv + b.const(1))
+        with b.when(t < off):
+            s = b.load_shared(t) + b.load_shared(t + off)
+            b.store_shared(t, s)
+        b.barrier("tree-step")
+    with b.when(t.eq(b.const(0))):
+        b.atomic_add("Out", b.const(0), b.load_shared(b.const(0)))
+    prog = b.done()
+
+    def oracle(args):
+        n = int(args["n"])
+        s = np.asarray(args["A"], np.float32)[:n].sum()
+        out = np.array(args["Out"], np.float32)
+        out[0] += s
+        return {"Out": out}
+
+    return prog, oracle
+
+
+# ---------------------------------------------------------------------------
+def inclusive_scan() -> Tuple[ir.Program, Callable]:
+    """Per-block inclusive prefix sum (the paper rewrote warp-shuffle scan
+    with portable collectives — ours uses the SCAN_ADD intrinsic)."""
+    b = Builder("inclusive_scan", [Ptr("A"), Ptr("Out"), Ptr("BlockSums"),
+                                   Scalar("n")])
+    i = b.global_id(0)
+    x = b.var(b.const(0.0, ir.F32), hint="x")
+    with b.when(i < b.param("n")):
+        b.assign(x, b.load("A", i))
+    s = b.scan_add(x)
+    with b.when(i < b.param("n")):
+        b.store("Out", i, s)
+    t = b.thread_id()
+    last = b.block_dim() - b.const(1)
+    with b.when(t.eq(last)):
+        b.store("BlockSums", b.block_id(), s)
+    prog = b.done()
+
+    def oracle(args):
+        n = int(args["n"])
+        A = np.asarray(args["A"], np.float32)
+        T = args["_block_size"]
+        out = np.array(args["Out"], np.float32)
+        bs = np.array(args["BlockSums"], np.float32)
+        x = A.copy()
+        x[n:] = 0
+        blocks = x.reshape(-1, T)
+        scans = np.cumsum(blocks, axis=1, dtype=np.float32)
+        flat = scans.reshape(-1)
+        out[:n] = flat[:n]
+        bs[:scans.shape[0]] = scans[:, -1]
+        return {"Out": out, "BlockSums": bs}
+
+    return prog, oracle
+
+
+# ---------------------------------------------------------------------------
+def bitcount_vote() -> Tuple[ir.Program, Callable]:
+    """Count of threads per block with A[i] > thresh, via VOTE_BALLOT."""
+    b = Builder("bitcount_vote", [Ptr("A"), Ptr("Out"), Scalar("n"),
+                                  Scalar("thresh", ir.F32)])
+    i = b.global_id(0)
+    inb = i < b.param("n")
+    val = b.var(b.const(0.0, ir.F32), hint="val")
+    with b.when(inb):
+        b.assign(val, b.load("A", i))
+    hit = (val > b.param("thresh")) & inb
+    cnt = b.ballot(hit)
+    with b.when(b.thread_id().eq(b.const(0))):
+        b.store("Out", b.block_id(), cnt.astype(ir.F32))
+    prog = b.done()
+
+    def oracle(args):
+        n, th = int(args["n"]), np.float32(args["thresh"])
+        T = args["_block_size"]
+        A = np.asarray(args["A"], np.float32).copy()
+        mask = np.zeros(A.size, bool)
+        mask[:n] = A[:n] > th
+        counts = mask.reshape(-1, T).sum(axis=1)
+        out = np.array(args["Out"], np.float32)
+        out[:counts.size] = counts
+        return {"Out": out}
+
+    return prog, oracle
+
+
+# ---------------------------------------------------------------------------
+def montecarlo_pi(iters: int = 16) -> Tuple[ir.Program, Callable]:
+    """Monte-Carlo pi with per-thread xorshift RNG — the paper's divergent
+    kernel (divergence + atomics)."""
+    b = Builder("montecarlo_pi", [Ptr("Count", ir.F32)])
+    i = b.global_id(0)
+    seed = (i + b.const(1)).astype(ir.U32)
+    x = b.var(seed * b.const(2654435761, ir.U32), hint="rng")
+    hits = b.var(b.const(0.0, ir.F32), hint="hits")
+    inv = b.const(float(1.0 / (1 << 24)), ir.F32)
+    with b.loop(iters, hint="mc"):
+        # xorshift32 twice -> u, v
+        def step(v):
+            v1 = v ^ (v << b.const(13, ir.U32))
+            v2 = v1 ^ (v1 >> b.const(17, ir.U32))
+            return v2 ^ (v2 << b.const(5, ir.U32))
+
+        r1 = step(x)
+        r2 = step(r1)
+        b.assign(x, r2)
+        u = (r1 >> b.const(8, ir.U32)).astype(ir.F32) * inv
+        v = (r2 >> b.const(8, ir.U32)).astype(ir.F32) * inv
+        d = u * u + v * v
+        with b.when(d < b.const(1.0, ir.F32)):
+            b.assign(hits, hits + b.const(1.0, ir.F32))
+    total = b.reduce_add(hits)
+    with b.when(b.thread_id().eq(b.const(0))):
+        b.atomic_add("Count", b.const(0), total)
+    prog = b.done()
+
+    def oracle(args):
+        # RNG-exact oracle computed in numpy
+        B, T = args["_num_blocks"], args["_block_size"]
+        n = B * T
+        gid = np.arange(n, dtype=np.uint32)
+        x = (gid + 1) * np.uint32(2654435761)
+        hits = np.zeros(n, np.float32)
+        with np.errstate(over="ignore"):
+            for _ in range(iters):
+                def step(v):
+                    v = v ^ (v << np.uint32(13))
+                    v = v ^ (v >> np.uint32(17))
+                    return v ^ (v << np.uint32(5))
+
+                r1 = step(x)
+                r2 = step(r1)
+                x = r2
+                u = (r1 >> np.uint32(8)).astype(np.float32) / (1 << 24)
+                v = (r2 >> np.uint32(8)).astype(np.float32) / (1 << 24)
+                hits += (u * u + v * v < 1.0).astype(np.float32)
+        out = np.array(args["Count"], np.float32)
+        out[0] += hits.sum()
+        return {"Count": out}
+
+    return prog, oracle
+
+
+# ---------------------------------------------------------------------------
+def nn_layer() -> Tuple[ir.Program, Callable]:
+    """Small neural-net layer: out = relu(W @ x + bias); one block per
+    output row, K-loop per thread (the paper's matvec+ReLU kernel)."""
+    b = Builder("nn_layer", [Ptr("W"), Ptr("X"), Ptr("Bias"), Ptr("Out"),
+                             Scalar("K"), Scalar("kchunks")])
+    row = b.block_id()
+    t = b.thread_id()
+    k = b.param("K")
+    dim = b.block_dim()
+    acc = b.var(b.const(0.0, ir.F32), hint="acc")
+    # threads stride over K; per-thread partials reduced block-wide
+    with b.loop("kchunks", hint="kc") as kc:
+        idx = kc * dim + t
+        with b.when(idx < k):
+            b.assign(acc, b.fma(b.load("W", row * k + idx),
+                                b.load("X", idx), acc))
+    total = b.reduce_add(acc)
+    with b.when(t.eq(b.const(0))):
+        val = total + b.load("Bias", row)
+        b.store("Out", row, b.maximum(val, b.const(0.0, ir.F32)))
+    prog = b.done()
+
+    def oracle(args):
+        K = int(args["K"])
+        W = np.asarray(args["W"], np.float32)
+        Xv = np.asarray(args["X"], np.float32)[:K]
+        Bv = np.asarray(args["Bias"], np.float32)
+        M = W.size // K
+        out = np.maximum(W.reshape(M, K) @ Xv + Bv[:M], 0)
+        res = np.array(args["Out"], np.float32)
+        res[:M] = out
+        return {"Out": res}
+
+    return prog, oracle
+
+
+# ---------------------------------------------------------------------------
+def stencil_1d() -> Tuple[ir.Program, Callable]:
+    """Divergent boundary-handling stencil."""
+    b = Builder("stencil_1d", [Ptr("A"), Ptr("Out"), Scalar("n")])
+    i = b.global_id(0)
+    n = b.param("n")
+    with b.when(i < n):
+        c = b.load("A", i)
+        left = b.var(c, hint="left")
+        right = b.var(c, hint="right")
+        with b.when(i > b.const(0)):
+            b.assign(left, b.load("A", i - b.const(1)))
+        with b.when(i < n - b.const(1)):
+            b.assign(right, b.load("A", i + b.const(1)))
+        b.store("Out", i, (left + c + right) * b.const(1.0 / 3.0, ir.F32))
+    prog = b.done()
+
+    def oracle(args):
+        n = int(args["n"])
+        A = np.asarray(args["A"], np.float32)[:n]
+        out = np.array(args["Out"], np.float32)
+        acc = A.copy()
+        acc[1:] += A[:-1]
+        acc[:-1] += A[1:]
+        acc[0] += A[0]
+        acc[-1] += A[-1]
+        out[:n] = acc / 3.0
+        return {"Out": out}
+
+    return prog, oracle
+
+
+# ---------------------------------------------------------------------------
+def persistent_counter(outer: str = "iters") -> Tuple[ir.Program, Callable]:
+    """The paper's migration-validation kernel: a persistent loop with
+    internal per-thread state, a barrier per iteration, and a running
+    global array update.  Loop counters + registers must survive
+    migration for the final state to match a non-migrated run."""
+    b = Builder("persistent_counter", [Ptr("State"), Scalar(outer)])
+    i = b.global_id(0)
+    carry = b.var(b.const(0.0, ir.F32), hint="carry")
+    with b.loop(outer, hint="it") as it:
+        prev = b.load("State", i)
+        b.assign(carry, carry + prev * b.const(0.5, ir.F32)
+                 + it.astype(ir.F32))
+        b.store("State", i, prev + carry)
+        b.barrier("iteration")
+    prog = b.done()
+
+    def oracle(args):
+        iters = int(args[outer])
+        st = np.asarray(args["State"], np.float32).copy()
+        carry = np.zeros_like(st)
+        for it in range(iters):
+            prev = st.copy()
+            carry = carry + prev * np.float32(0.5) + np.float32(it)
+            st = prev + carry
+        return {"State": st}
+
+    return prog, oracle
+
+
+# ---------------------------------------------------------------------------
+def dot_product() -> Tuple[ir.Program, Callable]:
+    b = Builder("dot_product", [Ptr("A"), Ptr("B"), Ptr("Out"), Scalar("n")])
+    i = b.global_id(0)
+    x = b.var(b.const(0.0, ir.F32), hint="x")
+    with b.when(i < b.param("n")):
+        b.assign(x, b.load("A", i) * b.load("B", i))
+    s = b.reduce_add(x)
+    with b.when(b.thread_id().eq(b.const(0))):
+        b.atomic_add("Out", b.const(0), s)
+    prog = b.done()
+
+    def oracle(args):
+        n = int(args["n"])
+        r = (np.asarray(args["A"], np.float32)[:n]
+             * np.asarray(args["B"], np.float32)[:n]).sum()
+        out = np.array(args["Out"], np.float32)
+        out[0] += r
+        return {"Out": out}
+
+    return prog, oracle
+
+
+SUITE: Dict[str, Callable] = {
+    "vadd": vadd,
+    "saxpy": saxpy,
+    "matmul_tiled": matmul_tiled,
+    "reduction": reduction,
+    "inclusive_scan": inclusive_scan,
+    "bitcount_vote": bitcount_vote,
+    "montecarlo_pi": montecarlo_pi,
+    "nn_layer": nn_layer,
+    "stencil_1d": stencil_1d,
+    "persistent_counter": persistent_counter,
+    "dot_product": dot_product,
+}

@@ -1,0 +1,140 @@
+"""HetSession — the hetGPU abstraction layer (paper §4.3).
+
+Presents the uniform device API the paper describes: buffer allocation,
+kernel launch with CUDA-like ``<<<grid, block>>>`` geometry, streams with
+in-order semantics, cooperative checkpoint (pause flag honoured at
+barriers), restore, and live migration between backends.  The per-backend
+"JIT modules" are the backends' translation caches.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from . import hetir as ir
+from .backends import get_backend
+from .backends.base import Backend
+from .engine import Engine
+from .state import Snapshot
+
+
+@dataclass
+class _KernelHandle:
+    program: ir.Program
+
+
+@dataclass
+class LaunchRecord:
+    engine: Engine
+    finished: bool = False
+
+
+class HetSession:
+    """One "device context" bound to a backend, with migration support."""
+
+    def __init__(self, backend: str = "vectorized"):
+        self.backend_name = backend
+        self.backend: Backend = get_backend(backend)
+        self._kernels: Dict[str, _KernelHandle] = {}
+        self._buffers: Dict[str, np.ndarray] = {}
+        self._streams: Dict[int, List[LaunchRecord]] = {0: []}
+        self.pause_flag = False  # the paper's cooperative pause flag
+        self.stats = {"launches": 0, "translation_ms": 0.0,
+                      "migrations": 0}
+
+    # -- module loading ------------------------------------------------
+    def load_kernel(self, program: ir.Program) -> str:
+        """Register a hetIR "binary".  Translation happens lazily at first
+        launch (paper §4.2 Module Loading and JIT)."""
+        program.validate()
+        self._kernels[program.name] = _KernelHandle(program)
+        return program.name
+
+    # -- memory management ----------------------------------------------
+    def gpu_malloc(self, name: str, shape, dtype=np.float32) -> np.ndarray:
+        buf = np.zeros(shape, dtype=dtype)
+        self._buffers[name] = buf
+        return buf
+
+    def memcpy_h2d(self, name: str, host: np.ndarray) -> None:
+        self._buffers[name] = np.array(host, copy=True)
+
+    def memcpy_d2h(self, name: str) -> np.ndarray:
+        return self._buffers[name].copy()
+
+    # -- kernel launch ----------------------------------------------------
+    def launch(self, kernel: str, grid: int, block: int,
+               args: Dict[str, object], stream: int = 0,
+               blocking: bool = True) -> LaunchRecord:
+        handle = self._kernels[kernel]
+        merged = {}
+        for p in handle.program.params:
+            if p.name in args:
+                merged[p.name] = args[p.name]
+            elif isinstance(p, ir.Ptr) and p.name in self._buffers:
+                merged[p.name] = self._buffers[p.name]
+            else:
+                raise ValueError(f"missing argument {p.name}")
+        t0 = time.perf_counter()
+        eng = Engine(handle.program, self.backend, grid, block, merged)
+        rec = LaunchRecord(engine=eng)
+        self._streams.setdefault(stream, []).append(rec)
+        self.stats["launches"] += 1
+        if blocking:
+            rec.finished = eng.run(pause_flag=lambda: self.pause_flag)
+            self._writeback(handle.program, eng, args)
+        self.stats["translation_ms"] += (time.perf_counter() - t0) * 1e3
+        return rec
+
+    def _writeback(self, program: ir.Program, eng: Engine,
+                   args: Dict[str, object]) -> None:
+        """Propagate kernel writes back into session buffers."""
+        for p in program.buffers():
+            if p.name in self._buffers and p.name not in args:
+                self._buffers[p.name] = eng.result(p.name)
+
+    def device_synchronize(self, stream: int = 0) -> None:
+        for rec in self._streams.get(stream, []):
+            if not rec.finished:
+                rec.finished = rec.engine.run(
+                    pause_flag=lambda: self.pause_flag)
+
+    # -- checkpoint / restore / migration ---------------------------------
+    def checkpoint(self, rec: LaunchRecord) -> bytes:
+        """Serialize a paused (or finished) launch — the migration payload."""
+        return rec.engine.snapshot().to_bytes()
+
+    def restore(self, kernel: str, blob: bytes) -> LaunchRecord:
+        snap = Snapshot.from_bytes(blob)
+        eng = Engine.resume(self._kernels[kernel].program, self.backend,
+                            snap)
+        rec = LaunchRecord(engine=eng, finished=eng.finished)
+        self._streams[0].append(rec)
+        return rec
+
+    def run_to_completion(self, rec: LaunchRecord) -> None:
+        rec.finished = rec.engine.run(pause_flag=lambda: self.pause_flag)
+
+
+def migrate(rec: LaunchRecord, src: HetSession, dst: HetSession,
+            kernel: str) -> LaunchRecord:
+    """Live-migrate a launch from one session/backend to another
+    (paper §6.3). Returns the resumed launch on ``dst``; timing stats are
+    recorded on both sessions."""
+    t0 = time.perf_counter()
+    blob = src.checkpoint(rec)  # capture at barrier
+    t1 = time.perf_counter()
+    new = dst.restore(kernel, blob)  # reload + reshard onto new device
+    t2 = time.perf_counter()
+    src.stats["migrations"] += 1
+    dst.stats["migrations"] += 1
+    dst.stats.setdefault("last_migration", {})
+    dst.stats["last_migration"] = {
+        "checkpoint_ms": (t1 - t0) * 1e3,
+        "restore_ms": (t2 - t1) * 1e3,
+        "payload_bytes": len(blob),
+    }
+    return new

@@ -1,0 +1,116 @@
+"""Barrier segmentation of hetIR programs.
+
+The paper's state-capture design hinges on splitting a kernel into
+*segments* separated by barriers: "we break the kernel into segments
+separated by global barriers ... Each segment is a separate kernel."
+A snapshot is only taken between segments, where every thread of a block is
+at a known, aligned point — so the snapshot is just (segment index, register
+file, shared memory, global memory), with no machine PC involved.
+
+We flatten a structured :class:`~repro.core.hetir.Program` into a linear
+list of *nodes*:
+
+* ``SegNode``   — a straight-line chunk of statements with no top-level
+  barrier (it may contain @PRED regions and barrier-free loops);
+* ``LoopStart`` / ``LoopEnd`` — control nodes for loops whose body contains
+  barriers (the engine maintains an iteration counter per loop — part of the
+  device-neutral snapshot, like the paper's loop-counter registers).
+
+Execution then proceeds node by node; between any two nodes the engine may
+pause, snapshot, and resume on a different backend.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Sequence, Union
+
+from . import hetir as ir
+
+
+@dataclass
+class SegNode:
+    index: int
+    stmts: List[ir.Stmt]
+    label: str = ""
+    # analysis results filled by ``segment_program``
+    defs: List[ir.Reg] = field(default_factory=list)
+    uses: List[ir.Reg] = field(default_factory=list)
+    greads: set = field(default_factory=set)
+    gwrites: set = field(default_factory=set)
+    uses_shared: bool = False
+
+
+@dataclass
+class LoopStart:
+    index: int
+    loop_id: int
+    var: ir.Reg
+    count: Union[str, int]  # scalar param name or literal trip count
+
+
+@dataclass
+class LoopEnd:
+    index: int
+    loop_id: int
+    start_index: int
+
+
+Node = Union[SegNode, LoopStart, LoopEnd]
+
+
+def segment_program(prog: ir.Program) -> List[Node]:
+    """Flatten ``prog.body`` into engine nodes, splitting at barriers."""
+    nodes: List[Node] = []
+    loop_counter = [0]
+
+    def emit_seg(stmts: List[ir.Stmt], label: str) -> None:
+        if not stmts:
+            return
+        seg = SegNode(index=len(nodes), stmts=stmts, label=label)
+        seg.defs, seg.uses = ir.body_defs_uses(stmts)
+        seg.greads, seg.gwrites = ir.body_global_accesses(stmts)
+        seg.uses_shared = ir.body_uses_shared(stmts)
+        nodes.append(seg)
+
+    def walk(body: Sequence[ir.Stmt]) -> None:
+        pending: List[ir.Stmt] = []
+        for s in body:
+            if isinstance(s, ir.Barrier):
+                emit_seg(pending, label=s.label)
+                pending = []
+            elif isinstance(s, ir.Loop) and ir._contains_barrier(s.body):
+                # flush statements before the loop, then expand the loop
+                emit_seg(pending, label="pre-loop")
+                pending = []
+                loop_counter[0] += 1
+                lid = loop_counter[0]
+                start = LoopStart(index=len(nodes), loop_id=lid, var=s.var,
+                                  count=s.count)
+                nodes.append(start)
+                walk(s.body)
+                # implicit barrier at loop back-edge: segments inside ended
+                nodes.append(LoopEnd(index=len(nodes), loop_id=lid,
+                                     start_index=start.index))
+            else:
+                pending.append(s)
+        emit_seg(pending, label="tail")
+
+    walk(prog.body)
+    # fix node indices after construction order
+    for i, n in enumerate(nodes):
+        if isinstance(n, SegNode):
+            n.index = i
+        elif isinstance(n, LoopStart):
+            n.index = i
+        else:
+            n.index = i
+    # re-resolve start_index (indices may have shifted): map loop_id -> start
+    starts = {n.loop_id: n.index for n in nodes if isinstance(n, LoopStart)}
+    for n in nodes:
+        if isinstance(n, LoopEnd):
+            n.start_index = starts[n.loop_id]
+    return nodes
+
+
+def seg_nodes(nodes: Sequence[Node]) -> List[SegNode]:
+    return [n for n in nodes if isinstance(n, SegNode)]

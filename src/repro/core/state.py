@@ -1,0 +1,97 @@
+"""Device-neutral execution state — the paper's snapshot format.
+
+A :class:`Snapshot` captures exactly what the paper's state-capture design
+prescribes (§4.2 "State Representation"):
+
+* an array of **per-thread virtual register files** — here, a dict mapping
+  hetIR register name → ndarray of shape ``[num_blocks, block_size]``;
+* the **program position** — not a machine PC but the *node index* in the
+  segmented program (all threads of all blocks are aligned at a barrier);
+* **loop counters** for barrier-containing loops (uniform scalars);
+* **shared memory** contents per block (``[num_blocks, shared_size]``);
+* **global memory** buffers.
+
+Everything is stored as host numpy arrays, so a snapshot taken from any
+backend (scalar interpreter, vectorized jnp, Pallas) can be re-instantiated
+on any other — the cross-architecture migration property.
+"""
+from __future__ import annotations
+
+import io
+import json
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+FORMAT_VERSION = 1
+
+
+@dataclass
+class Snapshot:
+    program_name: str
+    num_blocks: int
+    block_size: int
+    node_idx: int
+    loop_counters: Dict[int, int]
+    regs: Dict[str, np.ndarray]        # [num_blocks, block_size] each
+    shared: Optional[np.ndarray]       # [num_blocks, shared_size] or None
+    globals_: Dict[str, np.ndarray]    # buffer name -> host array
+    scalars: Dict[str, object] = field(default_factory=dict)
+
+    # -- serialization ------------------------------------------------------
+    def to_bytes(self) -> bytes:
+        """Serialize to a self-describing npz blob (the migration payload)."""
+        meta = {
+            "version": FORMAT_VERSION,
+            "program_name": self.program_name,
+            "num_blocks": self.num_blocks,
+            "block_size": self.block_size,
+            "node_idx": self.node_idx,
+            "loop_counters": {str(k): int(v)
+                              for k, v in self.loop_counters.items()},
+            "scalars": {k: (float(v) if isinstance(v, float) else int(v))
+                        for k, v in self.scalars.items()},
+            "reg_names": sorted(self.regs),
+            "global_names": sorted(self.globals_),
+            "has_shared": self.shared is not None,
+        }
+        arrays = {f"reg_{k}": np.asarray(v) for k, v in self.regs.items()}
+        arrays.update({f"glb_{k}": np.asarray(v)
+                       for k, v in self.globals_.items()})
+        if self.shared is not None:
+            arrays["shared"] = np.asarray(self.shared)
+        buf = io.BytesIO()
+        np.savez(buf, __meta__=np.frombuffer(
+            json.dumps(meta).encode(), dtype=np.uint8), **arrays)
+        return buf.getvalue()
+
+    @classmethod
+    def from_bytes(cls, blob: bytes) -> "Snapshot":
+        with np.load(io.BytesIO(blob)) as z:
+            meta = json.loads(bytes(z["__meta__"].tobytes()).decode())
+            if meta["version"] != FORMAT_VERSION:
+                raise ValueError(f"snapshot version {meta['version']} "
+                                 f"!= {FORMAT_VERSION}")
+            regs = {k: z[f"reg_{k}"] for k in meta["reg_names"]}
+            globals_ = {k: z[f"glb_{k}"] for k in meta["global_names"]}
+            shared = z["shared"] if meta["has_shared"] else None
+        return cls(
+            program_name=meta["program_name"],
+            num_blocks=meta["num_blocks"],
+            block_size=meta["block_size"],
+            node_idx=meta["node_idx"],
+            loop_counters={int(k): v
+                           for k, v in meta["loop_counters"].items()},
+            regs=regs,
+            shared=shared,
+            globals_=globals_,
+            scalars=meta["scalars"],
+        )
+
+    def nbytes(self) -> int:
+        n = sum(v.nbytes for v in self.regs.values())
+        n += sum(v.nbytes for v in self.globals_.values())
+        if self.shared is not None:
+            n += self.shared.nbytes
+        return n

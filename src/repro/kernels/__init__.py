@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the compute hot-spots: flash attention (prefill),
+# RG-LRU scan, chunked gated linear attention (mLSTM core), grouped matmul
+# (MoE experts), and hetIR-generated kernels (the paper's compiler feeding
+# the kernel layer).  Each kernel package: kernel.py (pl.pallas_call +
+# BlockSpec), ops.py (jit'd wrapper), ref.py (pure-jnp oracle).

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window=None):
+    """q,k,v: [B,H,S,d]; full-matrix softmax attention."""
+    B, H, Sq, d = q.shape
+    Sk = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e30)
+    p = jnp.exp(s - m)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p / l, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,3 @@
+from .ops import het_kernel
+
+__all__ = ["het_kernel"]

@@ -1,0 +1,29 @@
+"""hetIR-generated Pallas kernels — the paper's compiler feeding kernels/.
+
+``het_kernel(program)`` runs a hetIR "binary" through the core Pallas
+backend (one ``pl.pallas_call`` per barrier segment) and returns a callable
+with numpy-array semantics.  This is the kernel-layer integration of the
+paper's contribution: the same portable binary that executes on the
+interpreter and vectorized backends lowers to TPU kernels here.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core import Engine, get_backend
+from repro.core import hetir as ir
+
+
+def het_kernel(program: ir.Program, grid: int, block: int):
+    """Returns fn(**args) -> dict of output buffers, executed on the
+    Pallas backend."""
+    backend = get_backend("pallas")
+
+    def run(**args) -> Dict[str, np.ndarray]:
+        eng = Engine(program, backend, grid, block, dict(args))
+        assert eng.run()
+        return {p.name: eng.result(p.name) for p in program.buffers()}
+
+    return run

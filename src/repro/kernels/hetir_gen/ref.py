@@ -1,0 +1,20 @@
+"""Oracle for hetIR-generated kernels: the scalar interpreter backend."""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core import Engine, get_backend
+from repro.core import hetir as ir
+
+
+def het_kernel_ref(program: ir.Program, grid: int, block: int):
+    backend = get_backend("interp")
+
+    def run(**args) -> Dict[str, np.ndarray]:
+        eng = Engine(program, backend, grid, block, dict(args))
+        assert eng.run()
+        return {p.name: eng.result(p.name) for p in program.buffers()}
+
+    return run

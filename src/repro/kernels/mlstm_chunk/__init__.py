@@ -1,0 +1,3 @@
+from .ops import mlstm_chunk
+
+__all__ = ["mlstm_chunk"]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: per-step gated linear attention scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_chunk_ref(q, k, v, lf, gi):
+    """q,k: [BH,S,dk]; v: [BH,S,dv]; lf,gi: [BH,S,1].
+    C_t = exp(lf_t)·C_{t-1} + i_t·k_t v_t^T ;  y_t = q_t @ C_t."""
+    BH, S, dk = q.shape
+    dv = v.shape[-1]
+
+    def step(C, inp):
+        q_t, k_t, v_t, lf_t, i_t = inp     # [BH,dk],[BH,dk],[BH,dv],[BH,1]
+        C = jnp.exp(lf_t.astype(jnp.float32))[..., None] * C \
+            + (i_t.astype(jnp.float32) * k_t.astype(jnp.float32))[..., None] \
+            * v_t.astype(jnp.float32)[:, None, :]
+        y = jnp.einsum("bk,bkv->bv", q_t.astype(jnp.float32), C)
+        return C, y
+
+    C0 = jnp.zeros((BH, dk, dv), jnp.float32)
+    xs = (q.transpose(1, 0, 2), k.transpose(1, 0, 2),
+          v.transpose(1, 0, 2), lf.transpose(1, 0, 2),
+          gi.transpose(1, 0, 2))
+    CT, ys = jax.lax.scan(step, C0, xs)
+    return ys.transpose(1, 0, 2).astype(q.dtype), CT

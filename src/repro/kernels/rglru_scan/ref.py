@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the RG-LRU recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, x, h0):
+    """h_t = a_t * h_{t-1} + x_t.  a,x: [B,S,D]; h0: [B,D].
+    Returns (h [B,S,D], h_final [B,D] f32)."""
+    def step(h, inp):
+        a_t, x_t = inp
+        h = a_t.astype(jnp.float32) * h + x_t.astype(jnp.float32)
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                          (a.transpose(1, 0, 2), x.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2).astype(a.dtype), hT

@@ -1,0 +1,270 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first lines: jax locks the device count on first init.
+# Everything below may import jax.
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.configs.base import SHAPES, default_parallel, shape_applicable  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
+                               make_production_mesh)
+from repro.models import registry as R  # noqa: E402
+from repro.optim import adamw_init  # noqa: E402
+from repro.parallel import MeshRules, make_serve_step, make_train_step  # noqa: E402
+from repro.parallel.steps import make_prefill_step  # noqa: E402
+
+ART_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" \
+    / "dryrun"
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _abstract_opt(cfg, params):
+    return jax.eval_shape(lambda p: adamw_init(p, cfg.opt_state_dtype),
+                          params)
+
+
+def _analytic_bytes_per_device(tree, specs, axis_size) -> float:
+    """Sum of leaf bytes divided by their sharded axis product."""
+    total = 0.0
+    for leaf, spec in zip(jax.tree.leaves(tree),
+                          jax.tree.leaves(specs, is_leaf=lambda x:
+                                          isinstance(x, P))):
+        n = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                n *= axis_size[a]
+        total += leaf.size * leaf.dtype.itemsize / n
+    return total
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               pcfg_override=None, cfg_overrides=None):
+    """Lower + compile one (arch × shape × mesh) cell; returns metrics."""
+    import dataclasses
+    cfg = configs.get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pcfg = pcfg_override or default_parallel(cfg, shape)
+    rules = MeshRules(cfg, pcfg, mesh)
+    n_chips = int(np.prod(mesh.devices.shape))
+
+    params = R.abstract_params(cfg)
+    pspecs = rules.param_specs()
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt = _abstract_opt(cfg, params)
+        ospecs = rules.opt_specs(pspecs)
+        batch = R.train_input_specs(cfg, shape)
+        bspecs = rules.batch_specs(batch)
+        step_fn = make_train_step(cfg, pcfg, rules)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs),
+                                       _ns(mesh, bspecs),
+                                       NamedSharding(mesh, P())))
+        with mesh:
+            lowered = jitted.lower(
+                params, opt, batch, jax.ShapeDtypeStruct((), jnp.int32))
+        state_bytes = (_analytic_bytes_per_device(params, pspecs,
+                                                  rules.axis_size)
+                       + _analytic_bytes_per_device(
+                           opt["m"], pspecs, rules.axis_size) * 2)
+    elif shape.kind == "prefill":
+        batch = R.train_input_specs(cfg, shape)
+        bspecs = rules.batch_specs(batch)
+        step_fn = make_prefill_step(cfg, rules)
+        jitted = jax.jit(step_fn, in_shardings=(_ns(mesh, pspecs),
+                                                _ns(mesh, bspecs)))
+        with mesh:
+            lowered = jitted.lower(params, batch)
+        state_bytes = _analytic_bytes_per_device(params, pspecs,
+                                                 rules.axis_size)
+    else:  # decode
+        tokens, caches, pos = R.decode_input_specs(cfg, shape)
+        cspecs = rules.cache_specs(caches)
+        tspecs = rules.batch_specs({"tokens": tokens})["tokens"]
+        step_fn = make_serve_step(cfg, rules)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(_ns(mesh, pspecs),
+                                       NamedSharding(mesh, tspecs),
+                                       _ns(mesh, cspecs),
+                                       NamedSharding(mesh, P())))
+        with mesh:
+            lowered = jitted.lower(params, tokens, caches, pos)
+        state_bytes = (_analytic_bytes_per_device(params, pspecs,
+                                                  rules.axis_size)
+                       + _analytic_bytes_per_device(caches, cspecs,
+                                                    rules.axis_size))
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    # ---- analyses ------------------------------------------------------
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {k: int(getattr(mem, k)) for k in dir(mem)
+                    if k.endswith("_size_in_bytes")
+                    and isinstance(getattr(mem, k), (int, np.integer))}
+    except Exception as e:  # pragma: no cover
+        mem_info = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, list) else cost
+        flops_flat = float(cost.get("flops", -1.0))
+        bytes_flat = float(cost.get("bytes accessed", -1.0))
+    except Exception as e:  # pragma: no cover
+        flops_flat, bytes_flat = -1.0, -1.0
+
+    # loop-weighted per-device accounting from the optimized HLO
+    # (XLA cost_analysis counts while bodies once — see hlo_analysis)
+    hlo = compiled.as_text()
+    analysis = hlo_analysis.analyze_hlo(hlo, default_group=n_chips)
+    flops = float(analysis["flops"])
+    bytes_accessed = float(analysis["bytes"])
+    coll = dict(analysis["collectives"])
+
+    # ---- roofline terms (per spec formulas) ------------------------------
+    N = R.active_param_count(cfg)
+    if shape.kind == "train":
+        D_tokens = shape.seq_len * shape.global_batch
+        model_flops = 6.0 * N * D_tokens
+    elif shape.kind == "prefill":
+        D_tokens = shape.seq_len * shape.global_batch
+        model_flops = 2.0 * N * D_tokens
+    else:
+        D_tokens = shape.global_batch  # one token per sequence
+        model_flops = 2.0 * N * D_tokens
+
+    # flops / bytes / collective bytes from the analyzer are PER-DEVICE
+    compute_s = flops / PEAK_FLOPS_BF16 if flops > 0 else None
+    memory_s = bytes_accessed / HBM_BW if bytes_accessed > 0 else None
+    collective_s = coll.get("total", 0.0) / ICI_BW  # per-device bytes / link
+
+    result = {
+        "status": "ok",
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+        "hlo_flops": flops,                # per-device, loop-weighted
+        "hlo_bytes": bytes_accessed,       # per-device, loop-weighted
+        "hlo_flops_flat": flops_flat,      # raw cost_analysis (body-once)
+        "hlo_bytes_flat": bytes_flat,
+        "collective_bytes": coll,          # per-device, loop-weighted
+        "model_flops": model_flops,        # whole-job analytic 6·N·D
+        "params_total": R.param_count(cfg),
+        "params_active": N,
+        "state_bytes_per_device": state_bytes,
+        "memory_analysis": mem_info,
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+        },
+        "parallel": {
+            "grad_accum": pcfg.grad_accum, "seq_shard": pcfg.seq_shard,
+            "kv_shard": pcfg.kv_shard, "remat": pcfg.remat,
+        },
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="single arch (default: all)")
+    ap.add_argument("--shape", default=None,
+                    help="single shape (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=str(ART_DIR))
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (hillclimb variants)")
+    ap.add_argument("--pset", action="append", default=[],
+                    help="ParallelCfg override key=value")
+    args = ap.parse_args()
+
+    def _parse(v: str):
+        for cast in (int, float):
+            try:
+                return cast(v)
+            except ValueError:
+                pass
+        return {"true": True, "false": False}.get(v.lower(), v)
+
+    cfg_overrides = dict(kv.split("=", 1) for kv in args.set)
+    cfg_overrides = {k: _parse(v) for k, v in cfg_overrides.items()}
+    pcfg_overrides = dict(kv.split("=", 1) for kv in args.pset)
+    pcfg_overrides = {k: _parse(v) for k, v in pcfg_overrides.items()}
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    archs = [args.arch] if args.arch else configs.list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                cell = f"{arch}__{shape}__{mesh_name}"
+                fpath = out_dir / f"{cell}__{args.tag}.json"
+                if fpath.exists():
+                    print(f"[skip-cached] {cell}")
+                    continue
+                print(f"[lower+compile] {cell} ...", flush=True)
+                t0 = time.time()
+                try:
+                    pov = None
+                    if pcfg_overrides:
+                        import dataclasses as _dc
+                        base_p = default_parallel(
+                            configs.get_config(arch), SHAPES[shape])
+                        pov = _dc.replace(base_p, **pcfg_overrides)
+                    res = lower_cell(arch, shape, mp,
+                                     pcfg_override=pov,
+                                     cfg_overrides=cfg_overrides or None)
+                except Exception as e:
+                    res = {"status": "error", "error": str(e),
+                           "trace": traceback.format_exc()}
+                    failures += 1
+                    print(f"  ERROR: {e}")
+                res["tag"] = args.tag
+                fpath.write_text(json.dumps(res, indent=1))
+                print(f"  -> {res['status']} in {time.time()-t0:.1f}s",
+                      flush=True)
+    print(f"done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,397 @@
+"""Post-SPMD HLO analysis: loop-weighted FLOPs / bytes / collective traffic.
+
+``compiled.cost_analysis()`` on XLA:CPU counts while-loop bodies ONCE and
+reports per-device numbers, which silently undercounts scan-over-layers /
+grad-accum models by orders of magnitude.  This module computes per-device,
+trip-count-weighted totals directly from the optimized HLO text:
+
+* computations are parsed structurally (header line ending in ``{``,
+  closing ``}`` line) and costed bottom-up through the call graph
+  (`while` bodies × known_trip_count, fusions, calls, conditionals);
+* FLOPs: dots = 2·prod(out)·K (K from contracting dims), elementwise =
+  prod(out); fusion FLOPs come from the fused computation;
+* bytes: operand+output sizes of top-level (non-fused) ops — fusion
+  internals cost 0 bytes, the fusion call line carries the HBM traffic;
+* collectives use ring-model per-device byte counts:
+    all-reduce         2·bytes(out)·(n-1)/n
+    all-gather         bytes(out)·(n-1)/n
+    reduce-scatter     bytes(out)·(n-1)
+    all-to-all         bytes(out)·(n-1)/n
+    collective-permute bytes(out)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\)|[^\s(]+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*((?:\([^)]*\)|[^\s(]+))\s+"
+    r"([\w\-]+)\(")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(|\.)")
+
+# ops that move no data / do no work
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "iota", "partition-id", "replica-id",
+             "get-dimension-size", "opt-barrier", "domain", "token"}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shapes_in(type_str: str) -> List[Tuple[str, int]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out.append((dt, n))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    return sum(n * _DTYPE_BYTES[dt] for dt, n in _shapes_in(type_str))
+
+
+def _shape_elems(type_str: str) -> int:
+    return sum(n for _, n in _shapes_in(type_str))
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"source_target_pairs", line)
+    if m:  # collective-permute
+        return 2
+    return default
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] += v * mult
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+                     r"((?:\([^)]*\)|[^\s(]+))\s")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+class HloAnalyzer:
+    def __init__(self, hlo: str, default_group: int):
+        self.default_group = default_group
+        self.comps: Dict[str, List[str]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo)
+        # per-computation symbol table: result name -> type string
+        # (optimized HLO prints operands WITHOUT types, so byte/FLOP
+        # accounting must resolve them through the defs)
+        self.symtab: Dict[str, Dict[str, str]] = {}
+        for name, body in self.comps.items():
+            tab: Dict[str, str] = {}
+            for line in body:
+                dm = _DEF_RE.match(line)
+                if dm:
+                    tab[dm.group(1)] = dm.group(2)
+            self.symtab[name] = tab
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+        self._sliced_memo: Dict[str, Dict[int, int]] = {}
+
+    # -- structural parse --------------------------------------------------
+    def _parse(self, hlo: str) -> None:
+        cur: Optional[str] = None
+        body: List[str] = []
+        for raw in hlo.splitlines():
+            line = raw.rstrip()
+            stripped = line.strip()
+            if cur is None:
+                # computation header: column-0 `[ENTRY ]%name (args) -> type {`
+                # (op lines are indented; `/*index=N*/` comments mean the
+                # param list may contain `=`, so no `=` filtering)
+                if not raw[:1].isspace() and stripped.endswith("{") \
+                        and "->" in stripped:
+                    m = _HEADER_RE.match(stripped)
+                    if m:
+                        cur = m.group(2)
+                        body = []
+                        if m.group(1):
+                            self.entry = cur
+            else:
+                if stripped == "}" or stripped.startswith("} "):
+                    self.comps[cur] = body
+                    cur = None
+                else:
+                    body.append(stripped)
+
+    # -- operand helpers ----------------------------------------------------
+    def _operand_types(self, line: str, comp: str) -> List[str]:
+        """Types of the operand list of an op line (via the symtab)."""
+        _, _, tail = line.partition("(")
+        # operand list ends at the first "), " attribute separator or at
+        # the closing paren of the op
+        cut = len(tail)
+        for marker in ("), ", ") "):
+            idx = tail.find(marker)
+            if idx >= 0:
+                cut = min(cut, idx)
+        args = tail[:cut]
+        tab = self.symtab.get(comp, {})
+        return [tab[n] for n in _OPERAND_RE.findall(args) if n in tab]
+
+    # -- per-line costing ---------------------------------------------------
+    def _line_cost(self, line: str, in_fusion: bool, comp: str = "") -> Cost:
+        c = Cost()
+        m = _OP_RE.match(line)
+        if not m:
+            return c
+        out_type, op = m.group(1), m.group(2)
+        if op in _FREE_OPS:
+            return c
+
+        # nested computation references
+        trips = 1
+        mt = re.search(r"known_trip_count[^0-9]*(\d+)", line)
+        if mt:
+            trips = int(mt.group(1))
+
+        if op == "while":
+            mb = re.search(r"body=%?([\w.\-]+)", line)
+            mc = re.search(r"condition=%?([\w.\-]+)", line)
+            if mb and mb.group(1) in self.comps:
+                c.add(self._comp_cost(mb.group(1), in_fusion), trips)
+            if mc and mc.group(1) in self.comps:
+                c.add(self._comp_cost(mc.group(1), in_fusion), trips)
+            return c
+        if op == "fusion":
+            mcalls = re.search(r"calls=%?([\w.\-]+)", line)
+            called = mcalls.group(1) if mcalls else None
+            if called in self.comps:
+                inner = self._comp_cost(called, True)
+                c.flops += inner.flops
+                for k, v in inner.coll.items():
+                    c.coll[k] += v
+            if not in_fusion:
+                c.bytes += self._fusion_bytes(line, out_type, comp, called)
+            return c
+        if op in ("call", "async-start"):
+            mc = re.search(r"to_apply=%?([\w.\-]+)", line)
+            if mc and mc.group(1) in self.comps:
+                c.add(self._comp_cost(mc.group(1), in_fusion))
+            return c
+        if op == "conditional":
+            branches = re.findall(
+                r"(?:true_computation|false_computation|"
+                r"branch_computations=\{[^}]*)=?%?([\w.\-]+)", line)
+            best = Cost()
+            for bname in branches:
+                if bname in self.comps:
+                    bc = self._comp_cost(bname, in_fusion)
+                    if bc.flops >= best.flops:
+                        best = bc
+            c.add(best)
+            return c
+
+        # collectives
+        cm = _COLL_RE.search(line)
+        if cm and op.replace("-start", "") in _COLL_KINDS:
+            kind = cm.group(2)
+            nbytes = _shape_bytes(cm.group(1))
+            n = _group_size(line, self.default_group)
+            if kind == "all-reduce":
+                moved = 2 * nbytes * (n - 1) / max(n, 1)
+            elif kind == "all-gather":
+                moved = nbytes * (n - 1) / max(n, 1)
+            elif kind == "reduce-scatter":
+                moved = nbytes * (n - 1)
+            elif kind == "all-to-all":
+                moved = nbytes * (n - 1) / max(n, 1)
+            else:
+                moved = nbytes
+            c.coll[kind] += moved
+            c.coll["total"] += moved
+            c.coll[f"count_{kind}"] += 1
+            if not in_fusion:
+                c.bytes += self._line_bytes(line, out_type, comp)
+            return c
+
+        # slicing ops move only the slice, not the (possibly huge) operand
+        # buffer — every scan iteration dynamic-slices its stacked xs, so
+        # charging full operands would overcount by the trip count.
+        if op == "dynamic-slice" or op == "slice":
+            c.bytes += 2 * _shape_bytes(out_type) if not in_fusion else 0
+            c.flops += 0
+            return c
+        if op == "dynamic-update-slice":
+            ops_ = self._operand_types(line, comp)
+            upd = _shape_bytes(ops_[1]) if len(ops_) > 1 \
+                else _shape_bytes(out_type)
+            if not in_fusion:
+                c.bytes += 3 * upd  # read update + read/write touched rows
+            return c
+        if op == "gather":
+            if not in_fusion:
+                c.bytes += 2 * _shape_bytes(out_type)
+            return c
+        if op == "scatter":
+            ops_ = self._operand_types(line, comp)
+            upd = _shape_bytes(ops_[-1]) if ops_ else _shape_bytes(out_type)
+            if not in_fusion:
+                c.bytes += 3 * upd
+            c.flops += _shape_elems(out_type) * 0  # negligible
+            return c
+
+        # plain compute op
+        if op == "dot":
+            c.flops += self._dot_flops(line, out_type, comp)
+        elif op == "convolution":
+            c.flops += 2 * _shape_elems(out_type)
+        elif op in ("reduce", "reduce-window", "scatter", "select-and-scatter",
+                    "sort", "map"):
+            ops_ = self._operand_types(line, comp)
+            c.flops += sum(_shape_elems(t) for t in ops_)
+        else:
+            c.flops += _shape_elems(out_type)
+        if not in_fusion:
+            c.bytes += self._line_bytes(line, out_type, comp)
+        return c
+
+    def _dot_flops(self, line: str, out_type: str, comp: str) -> float:
+        out_elems = _shape_elems(out_type)
+        ops_ = self._operand_types(line, comp)
+        mlc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        if not ops_ or mlc is None:
+            return 2.0 * out_elems
+        lhs = _SHAPE_RE.search(ops_[0])
+        lhs_dims = [int(d) for d in lhs.group(2).split(",")] \
+            if lhs and lhs.group(2) else []
+        k = 1
+        for i in (int(x) for x in mlc.group(1).split(",") if x):
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+        return 2.0 * out_elems * k
+
+    def _line_bytes(self, line: str, out_type: str, comp: str) -> float:
+        return _shape_bytes(out_type) + sum(
+            _shape_bytes(t) for t in self._operand_types(line, comp))
+
+    def _fusion_bytes(self, line: str, out_type: str, comp: str,
+                      called: Optional[str]) -> float:
+        """HBM traffic of a fusion call: output + operands — but operands
+        that are only *sliced/gathered* inside the fused computation move
+        only the slice (scan xs are dynamic-sliced per iteration; charging
+        the full stacked buffer would overcount by the trip count)."""
+        total = _shape_bytes(out_type)
+        op_types = self._operand_types(line, comp)
+        sliced = self._sliced_params(called) if called else {}
+        for i, t in enumerate(op_types):
+            if i in sliced:
+                total += sliced[i]
+            else:
+                total += _shape_bytes(t)
+        return total
+
+    def _sliced_params(self, called: str) -> Dict[int, int]:
+        """Map fusion-parameter index -> bytes actually touched, for
+        parameters whose only consumers are dynamic-slice / gather reads
+        or dynamic-update-slice writes INTO the parameter (scan xs reads
+        and scan carry/grad-stack writes — charging the full stacked
+        buffer would overcount by the trip count)."""
+        if called in self._sliced_memo:
+            return self._sliced_memo[called]
+        body = self.comps.get(called, ())
+        tab = self.symtab.get(called, {})
+        params: Dict[str, int] = {}
+        for ln in body:
+            m = re.match(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*\S+\s+"
+                         r"parameter\((\d+)\)", ln)
+            if m:
+                params[m.group(1)] = int(m.group(2))
+        out: Dict[int, int] = {}
+        for pname, pidx in params.items():
+            touched = 0
+            ok = True
+            for ln in body:
+                if f"%{pname}" not in ln:
+                    continue
+                dm = _DEF_RE.match(ln)
+                if dm and dm.group(1) == pname:
+                    continue  # the def line itself
+                om = _OP_RE.match(ln)
+                opk = om.group(2) if om else ""
+                args = _OPERAND_RE.findall(ln.partition("(")[2])
+                if opk in ("dynamic-slice", "gather", "slice") \
+                        and args and args[0] == pname:
+                    touched += 2 * _shape_bytes(om.group(1))
+                elif opk == "dynamic-update-slice" and args \
+                        and args[0] == pname:
+                    # write of the update slice into the buffer
+                    upd_t = tab.get(args[1], "") if len(args) > 1 else ""
+                    touched += 3 * _shape_bytes(upd_t)
+                else:
+                    ok = False
+                    break
+            if ok and touched:
+                out[pidx] = touched
+        self._sliced_memo[called] = out
+        return out
+
+    # -- computation costing -------------------------------------------------
+    def _comp_cost(self, name: str, in_fusion: bool) -> Cost:
+        key = (name, in_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = Cost()  # break cycles defensively
+        total = Cost()
+        for line in self.comps.get(name, ()):
+            total.add(self._line_cost(line, in_fusion, name))
+        self._memo[key] = total
+        return total
+
+    def analyze(self) -> Dict[str, object]:
+        entry = self.entry or next(iter(self.comps), None)
+        if entry is None:
+            return {"flops": 0.0, "bytes": 0.0, "collectives": {}}
+        c = self._comp_cost(entry, False)
+        return {"flops": c.flops, "bytes": c.bytes,
+                "collectives": dict(c.coll)}
+
+
+def analyze_hlo(hlo: str, default_group: int) -> Dict[str, object]:
+    return HloAnalyzer(hlo, default_group).analyze()
+
+
+# backwards-compatible helpers ------------------------------------------------
+
+def collective_bytes(hlo: str, default_group: int) -> Dict[str, float]:
+    res = analyze_hlo(hlo, default_group)
+    return dict(res["collectives"])
+
+
+_CALL_RE = _COLL_RE  # used by debug tooling

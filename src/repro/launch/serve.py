@@ -1,0 +1,59 @@
+"""Production serving launcher: continuous batched decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import SHAPES, default_parallel
+from repro.models import decode_step, init_params, prefill
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke_config(args.arch) if args.smoke \
+        else configs.get_config(args.arch)
+    rng = np.random.default_rng(0)
+    params = init_params(jax.random.key(0), cfg)
+    B, S = args.batch, args.prompt_len
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    if cfg.encoder_decoder:
+        batch["enc_embeds"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)) * 0.02,
+            jnp.dtype(cfg.compute_dtype))
+    if cfg.frontend == "patch":
+        batch["embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_tokens, cfg.d_model)) * 0.02,
+            jnp.dtype(cfg.compute_dtype))
+        batch["tokens"] = batch["tokens"][:, cfg.frontend_tokens:]
+
+    logits, caches = jax.jit(lambda p, b: prefill(
+        p, b, cfg, cache_len=S + args.steps))(params, batch)
+    step = jax.jit(lambda p, t, c, q: decode_step(p, t, c, q, cfg))
+    toks = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(args.steps - 1):
+        logits, caches = step(params, toks, caches,
+                              jnp.asarray(S + i, jnp.int32))
+        toks = jnp.argmax(logits[:, -1], axis=-1)[:, None] \
+            .astype(jnp.int32)
+    jax.block_until_ready(toks)
+    n = (args.steps - 1) * B
+    print(f"{n} tokens in {time.perf_counter()-t0:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

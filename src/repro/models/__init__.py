@@ -1,0 +1,5 @@
+from .model import (decode_step, forward_train, init_caches, init_params,
+                    prefill)
+
+__all__ = ["init_params", "forward_train", "prefill", "decode_step",
+           "init_caches"]

@@ -1,0 +1,772 @@
+"""Model primitives: norms, RoPE, GQA attention (full/windowed, chunked),
+SwiGLU/GELU FFN, sort-based MoE, RG-LRU, mLSTM, sLSTM.
+
+Everything is a pure function over dict-pytree params.  Attention uses
+online-softmax q-chunking (flash-style in pure jnp) so the 32k prefill
+shapes never materialize an S×S score matrix — the Pallas flash kernel in
+``repro.kernels`` replaces the inner loop on real TPU.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def apply_norm(x, p, cfg: ModelConfig):
+    if cfg.norm == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def init_norm(cfg: ModelConfig, dtype):
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.ones((cfg.d_model,), dtype),
+            "bias": jnp.zeros((cfg.d_model,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.exp(-math.log(theta)
+                   * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> Params:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "wq": jax.random.normal(k1, (d, h * hd), dtype) * s,
+        "wk": jax.random.normal(k2, (d, hkv * hd), dtype) * s,
+        "wv": jax.random.normal(k3, (d, hkv * hd), dtype) * s,
+        "wo": jax.random.normal(k4, (h * hd, d), dtype) * s,
+    }
+
+
+import functools as _functools
+
+
+def _attn_probs(qc, k, c0, *, causal, window, q_offset, scale, Sk):
+    """Normalized attention probabilities for one q chunk (f32)."""
+    s = jnp.einsum("bchd,bshd->bhcs", qc.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = c0 + jnp.arange(qc.shape[1]) + q_offset     # [C]
+    kpos = jnp.arange(Sk)                               # [Sk]
+    mask = jnp.ones((qc.shape[1], Sk), bool)
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if window is not None:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e30)
+    p = jnp.exp(s - m)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return p / l
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _mha_chunked(q, k, v, causal: bool, window: Optional[int],
+                 q_offset: int = 0, q_chunk: int = 512):
+    """Online q-chunked attention, flat heads.  q/k/v: [B,S,H,hd] (GQA kv
+    pre-repeated so the head dim TP-shards cleanly).  Never materializes
+    Sq×Sk; the custom VJP recomputes probabilities chunk-by-chunk so the
+    backward never stores them either (flash-style backward in jnp —
+    §Perf llama3-405b iteration 3)."""
+    out, _ = _mha_chunked_fwd(q, k, v, causal, window, q_offset, q_chunk)
+    return out
+
+
+def _mha_chunked_fwd(q, k, v, causal, window, q_offset, q_chunk):
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    def attend_chunk(qc, c0):
+        p = _attn_probs(qc, k, c0, causal=causal, window=window,
+                        q_offset=q_offset, scale=scale, Sk=Sk)
+        return jnp.einsum("bhcs,bshd->bchd", p, v.astype(jnp.float32))
+
+    if Sq <= q_chunk:
+        out = attend_chunk(q, 0)
+    else:
+        n = Sq // q_chunk
+        assert Sq % q_chunk == 0, "seq_len must be divisible by q_chunk"
+        qs = q.reshape(B, n, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+        def body(c, qc):
+            return c + 1, attend_chunk(qc, c * q_chunk)
+
+        _, outs = jax.lax.scan(body, 0, qs)
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype), (q, k, v)
+
+
+def _mha_chunked_bwd(causal, window, q_offset, q_chunk, res, do):
+    q, k, v = res
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    n = max(Sq // q_chunk, 1)
+    cq = Sq // n
+    qs = q.reshape(B, n, cq, H, hd).transpose(1, 0, 2, 3, 4)
+    dos = do.reshape(B, n, cq, H, hd).transpose(1, 0, 2, 3, 4) \
+        .astype(jnp.float32)
+
+    def body(carry, inp):
+        i, dk, dv = carry
+        qc, doc = inp
+        c0 = i * cq
+        p = _attn_probs(qc, k, c0, causal=causal, window=window,
+                        q_offset=q_offset, scale=scale, Sk=Sk)
+        # dv += p^T do ; dp = do v^T ; ds = p*(dp - rowsum(p*dp))
+        dv = dv + jnp.einsum("bhcs,bchd->bshd", p, doc)
+        dp = jnp.einsum("bchd,bshd->bhcs", doc, vf)
+        row = jnp.sum(p * dp, axis=-1, keepdims=True)
+        ds = p * (dp - row)
+        dqc = jnp.einsum("bhcs,bshd->bchd", ds, kf) * scale
+        dk = dk + jnp.einsum("bhcs,bchd->bshd", ds,
+                             qc.astype(jnp.float32)) * scale
+        return (i + 1, dk, dv), dqc
+
+    zeros = jnp.zeros((B, Sk, H, hd), jnp.float32)
+    (_, dk, dv), dqs = jax.lax.scan(body, (0, zeros, zeros), (qs, dos))
+    dq = dqs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+_mha_chunked.defvjp(lambda q, k, v, c, w, o, qc:
+                    _mha_chunked_fwd(q, k, v, c, w, o, qc),
+                    _mha_chunked_bwd)
+
+
+def _repeat_kv(k, n_heads: int):
+    """[B,S,Hkv,hd] -> [B,S,H,hd] (GQA repeat; h = kv*G + g)."""
+    G = n_heads // k.shape[2]
+    return jnp.repeat(k, G, axis=2) if G > 1 else k
+
+
+def attention(x, p, cfg: ModelConfig, *, causal: bool = True,
+              window: Optional[int] = None, positions=None,
+              kv_override: Optional[Tuple] = None, ac=None):
+    """Self-attention over x [B,S,D] (kv_override -> cross-attention)."""
+    ac = ac or (lambda t, kind: t)
+    x = ac(x, "mm_input")
+    B, S, D = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, h, hd)
+    if kv_override is None:
+        k = (x @ p["wk"]).reshape(B, S, hkv, hd)
+        v = (x @ p["wv"]).reshape(B, S, hkv, hd)
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        q_offset = 0
+    else:
+        k, v = kv_override
+        q_offset = 0
+        causal, window = False, None
+    q = ac(q, "heads4")
+    k = ac(_repeat_kv(k, h), "heads4")
+    v = ac(_repeat_kv(v, h), "heads4")
+    if cfg.attn_vjp == "flash":
+        o = _mha_chunked(q, k, v, causal, window, q_offset)
+    else:  # baseline: plain autodiff through the chunk scan
+        o, _ = _mha_chunked_fwd(q, k, v, causal, window, q_offset, 512)
+        o = o.astype(q.dtype)
+    o = ac(o.reshape(B, S, h * hd), "attn_mix")
+    return o @ p["wo"]
+
+
+def attention_decode(x, p, cfg: ModelConfig, cache, pos, *,
+                     window: Optional[int] = None):
+    """One-token decode against a cache.
+
+    cache: {"k","v": [B, S_cache, Hkv, hd]} — ring buffer when windowed.
+    pos: absolute position (scalar int32) of the new token.
+    """
+    B, S, D = x.shape  # S == 1
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, 1, h, hd)
+    k_new = (x @ p["wk"]).reshape(B, 1, hkv, hd)
+    v_new = (x @ p["wv"]).reshape(B, 1, hkv, hd)
+    posv = jnp.full((B, 1), pos)
+    q = rope(q, posv, cfg.rope_theta)
+    k_new = rope(k_new, posv, cfg.rope_theta)
+
+    S_cache = cache["k"].shape[1]
+    slot = pos % S_cache if window is not None else pos
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(
+        cache["k"].dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(
+        cache["v"].dtype), (0, slot, 0, 0))
+    new_cache = {"k": k, "v": v}
+
+    # positions of cache slots
+    if window is not None:
+        # ring buffer: slot i holds position  i + floor((pos - i)/S)*S ...
+        idx = jnp.arange(S_cache)
+        base = pos - ((pos - idx) % S_cache)
+        kpos = base
+        valid = (kpos >= 0) & (kpos >= pos - window + 1) & (kpos <= pos)
+    else:
+        idx = jnp.arange(S_cache)
+        kpos = idx
+        valid = idx <= pos
+
+    scale = 1.0 / math.sqrt(hd)
+    G = h // hkv
+    qh = q.reshape(B, 1, hkv, G, hd)
+    s = jnp.einsum("bckgh,bskh->bkgcs", qh.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e30)
+    pbar = jnp.exp(s - m)
+    l = jnp.sum(pbar, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgcs,bskh->bckgh", pbar / jnp.maximum(l, 1e-30),
+                   v.astype(jnp.float32))
+    o = o.reshape(B, 1, h * hd).astype(x.dtype)
+    return o @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int, dtype) -> Params:
+    d = cfg.d_model
+    s = 1.0 / math.sqrt(d)
+    if cfg.act == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"wg": jax.random.normal(k1, (d, d_ff), dtype) * s,
+                "wu": jax.random.normal(k2, (d, d_ff), dtype) * s,
+                "wd": jax.random.normal(k3, (d_ff, d), dtype)
+                / math.sqrt(d_ff)}
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (d, d_ff), dtype) * s,
+            "w2": jax.random.normal(k2, (d_ff, d), dtype)
+            / math.sqrt(d_ff)}
+
+
+def ffn(x, p, cfg: ModelConfig, ac=None):
+    ac = ac or (lambda t, kind: t)
+    x = ac(x, "mm_input")
+    if cfg.act == "swiglu":
+        h = ac(jax.nn.silu(x @ p["wg"]) * (x @ p["wu"]), "ffn_hidden")
+        return h @ p["wd"]
+    h = ac(jax.nn.gelu(x @ p["w1"]), "ffn_hidden")
+    return h @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# MoE (sort-based capacity dispatch — EP/expert-TP shardable)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {"router": jax.random.normal(k1, (d, e), dtype) * s}
+    if cfg.act == "swiglu":
+        p["wg"] = jax.random.normal(k2, (e, d, f), dtype) * s
+        p["wu"] = jax.random.normal(k3, (e, d, f), dtype) * s
+        p["wd"] = jax.random.normal(k4, (e, f, d), dtype) / math.sqrt(f)
+    else:
+        p["w1"] = jax.random.normal(k2, (e, d, f), dtype) * s
+        p["w2"] = jax.random.normal(k3, (e, f, d), dtype) / math.sqrt(f)
+    return p
+
+
+def moe_ffn(x, p, cfg: ModelConfig, ac=None):
+    if cfg.moe_impl == "grouped":
+        return moe_ffn_grouped(x, p, cfg, ac)
+    return _moe_ffn_global(x, p, cfg, ac)
+
+
+def _moe_ffn_global(x, p, cfg: ModelConfig, ac=None):
+    """Sort-based top-k MoE with static capacity (tokens over capacity are
+    dropped, matching capacity-factor semantics).  x: [B,S,D].
+    BASELINE formulation: one global sort/scatter over all tokens — the
+    data-dependent global scatter forces GSPMD into full-size all-reduces
+    (see EXPERIMENTS.md §Perf mixtral iteration 1)."""
+    ac = ac or (lambda t, kind: t)
+    x = ac(x, "mm_input")
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    C = int(math.ceil(T * K / E * m.capacity_factor))
+    C = max(1, min(C, T))
+
+    xf = x.reshape(T, D)
+    logits = (xf @ p["router"]).astype(jnp.float32)          # [T,E]
+    gates, idx = jax.lax.top_k(logits, K)                    # [T,K]
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    flat_e = idx.reshape(-1)                                  # [T*K]
+    order = jnp.argsort(flat_e)                               # stable
+    sorted_e = flat_e[order]
+    tok = order // K                                          # token of entry
+    # rank within expert
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))        # [E]
+    rank = jnp.arange(T * K) - starts[sorted_e]
+    keep = rank < C
+    slot_e = jnp.where(keep, sorted_e, E)                     # drop -> OOB
+    slot_c = jnp.where(keep, rank, 0)
+
+    buf = jnp.zeros((E, C, D), xf.dtype)
+    buf = buf.at[slot_e, slot_c].set(xf[tok], mode="drop")
+    buf = ac(buf, "moe_buf")
+
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"]))
+        h = ac(h * jnp.einsum("ecd,edf->ecf", buf, p["wu"]), "moe_hidden")
+        out_buf = ac(jnp.einsum("ecf,efd->ecd", h, p["wd"]), "moe_buf")
+    else:
+        h = ac(jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["w1"])),
+               "moe_hidden")
+        out_buf = ac(jnp.einsum("ecf,efd->ecd", h, p["w2"]), "moe_buf")
+
+    # gather back and combine with gate weights
+    gathered = out_buf[jnp.minimum(sorted_e, E - 1), slot_c]  # [T*K, D]
+    w = gates.reshape(-1)[order] * keep.astype(gates.dtype)
+    contrib = gathered * w[:, None].astype(gathered.dtype)
+    out = jnp.zeros((T, D), contrib.dtype).at[tok].add(contrib)
+    return out.reshape(B, S, D).astype(x.dtype)
+
+
+def moe_ffn_grouped(x, p, cfg: ModelConfig, ac=None):
+    """Group-local MoE dispatch (§Perf): routing, sort, capacity, scatter
+    and combine all happen WITHIN a batch row, so when the batch dim is
+    data-sharded every index operation is shard-local — no cross-device
+    scatter, no token all-reduces.  Capacity is enforced per row
+    (group-limited routing, as in production JAX MoE stacks).
+
+    The only cross-device communication left is the expert weight path
+    (EP when n_experts divides the axis, expert-TP otherwise).
+    """
+    ac = ac or (lambda t, kind: t)
+    x = ac(x, "mm_input")
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.n_experts, m.top_k
+    C = int(math.ceil(S * K / E * m.capacity_factor))
+    C = max(1, min(C, S * K))
+
+    logits = (x @ p["router"]).astype(jnp.float32)           # [B,S,E]
+    gates, idx = jax.lax.top_k(logits, K)                    # [B,S,K]
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    SK = S * K
+    flat_e = idx.reshape(B, SK)
+    order = jnp.argsort(flat_e, axis=1)                      # [B,SK]
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    tok = order // K                                          # [B,SK]
+    starts = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(E)))(
+        sorted_e)                                             # [B,E]
+    rank = jnp.arange(SK)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, axis=1)
+    keep = rank < C
+    slot_e = jnp.where(keep, sorted_e, E)                     # OOB -> drop
+    slot_c = jnp.where(keep, rank, 0)
+
+    xg = jnp.take_along_axis(x, tok[..., None], axis=1)       # [B,SK,D]
+    brow = jnp.arange(B)[:, None] * jnp.ones((1, SK), jnp.int32)
+    buf = jnp.zeros((B, E, C, D), x.dtype)
+    buf = buf.at[brow, slot_e, slot_c].set(xg, mode="drop")
+    buf = ac(buf, "moe_buf4")
+
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["wg"]))
+        h = ac(h * jnp.einsum("becd,edf->becf", buf, p["wu"]),
+               "moe_hidden4")
+        out_buf = ac(jnp.einsum("becf,efd->becd", h, p["wd"]), "moe_buf4")
+    else:
+        h = ac(jax.nn.gelu(jnp.einsum("becd,edf->becf", buf, p["w1"])),
+               "moe_hidden4")
+        out_buf = ac(jnp.einsum("becf,efd->becd", h, p["w2"]), "moe_buf4")
+
+    gathered = out_buf[brow, jnp.minimum(sorted_e, E - 1), slot_c]
+    w = jnp.take_along_axis(gates.reshape(B, SK), order, axis=1) \
+        * keep.astype(gates.dtype)
+    contrib = gathered * w[..., None].astype(gathered.dtype)
+    out = jnp.zeros((B, S, D), contrib.dtype)
+    out = out.at[brow, tok].add(contrib)
+    return out.astype(x.dtype)
+
+
+def moe_aux_loss(x, p, cfg: ModelConfig):
+    """Load-balancing auxiliary loss (Switch-style)."""
+    m = cfg.moe
+    T = x.shape[0] * x.shape[1]
+    logits = (x.reshape(T, -1) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(logits, m.top_k)
+    counts = jnp.zeros((m.n_experts,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0)
+    frac_tokens = counts / (T * m.top_k)
+    frac_probs = probs.mean(axis=0)
+    return m.n_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / recurrentgemma)
+# ---------------------------------------------------------------------------
+
+
+def init_rglru(key, cfg: ModelConfig, dtype) -> Params:
+    d, dr, cw = cfg.d_model, cfg.d_rnn or cfg.d_model, cfg.conv_width
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    sr = 1.0 / math.sqrt(dr)
+    return {
+        "w_in_rec": jax.random.normal(ks[0], (d, dr), dtype) * s,
+        "w_in_gate": jax.random.normal(ks[1], (d, dr), dtype) * s,
+        "w_out": jax.random.normal(ks[2], (dr, d), dtype) * sr,
+        "conv_w": jax.random.normal(ks[3], (cw, dr), dtype) * 0.1,
+        "w_r": jax.random.normal(ks[4], (dr, dr), dtype) * sr,
+        "w_i": jax.random.normal(ks[5], (dr, dr), dtype) * sr,
+        "lam": jnp.full((dr,), 4.0, dtype),  # sigmoid(4)≈0.98 slow decay
+    }
+
+
+_RG_C = 8.0
+
+
+def _rglru_gates(u, p):
+    r = jax.nn.sigmoid((u @ p["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ p["w_i"]).astype(jnp.float32))
+    log_a_base = -jax.nn.softplus(-p["lam"].astype(jnp.float32))  # log σ(Λ)
+    log_a = _RG_C * r * log_a_base[None, ...]
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return a, beta * i
+
+
+def _causal_conv(u, w, state=None):
+    """Depthwise causal conv along time.  u: [B,S,dr], w: [cw,dr].
+    state: [B,cw-1,dr] carried tail for decode."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    out = sum(full[:, i:i + u.shape[1]] * w[i] for i in range(cw))
+    new_state = full[:, -(cw - 1):] if cw > 1 else None
+    return out, new_state
+
+
+def rglru(x, p, cfg: ModelConfig, state=None, ac=None):
+    """x: [B,S,D] -> y [B,S,D].  state: {"h": [B,dr], "conv": [B,cw-1,dr]}."""
+    ac = ac or (lambda t, kind: t)
+    x = ac(x, "mm_input")
+    B, S, D = x.shape
+    u = ac(x @ p["w_in_rec"], "ffn_hidden")
+    gate = ac(jax.nn.gelu(x @ p["w_in_gate"]), "ffn_hidden")
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = _causal_conv(u, p["conv_w"], conv_state)
+    a, b = _rglru_gates(u, p)     # [B,S,dr] f32
+    bu = b * u.astype(jnp.float32)
+
+    h0 = jnp.zeros((B, u.shape[-1]), jnp.float32) if state is None \
+        else state["h"].astype(jnp.float32)
+
+    def step(h, inputs):
+        a_t, bu_t = inputs
+        h = a_t * h + bu_t
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2),
+                                     bu.transpose(1, 0, 2)))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    y = (h * gate) @ p["w_out"]
+    new_state = {"h": hT, "conv": new_conv} if new_conv is not None else \
+        {"h": hT, "conv": jnp.zeros((B, 0, u.shape[-1]), x.dtype)}
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    de = 2 * d
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "w_qkv": jax.random.normal(ks[0], (d, 3 * de), dtype) * s,
+        "w_o": jax.random.normal(ks[1], (de, d), dtype) / math.sqrt(de),
+        "w_if": jax.random.normal(ks[2], (d, 2 * cfg.n_heads), dtype) * s,
+        "w_skip": jax.random.normal(ks[3], (d, de), dtype) * s,
+    }
+
+
+def mlstm(x, p, cfg: ModelConfig, state=None, ac=None):
+    """Stabilized mLSTM.  state: {"C":[B,H,hk,hv],"n":[B,H,hk],
+    "m":[B,H]}.  Dispatches to the chunked form for full sequences when
+    ``cfg.mlstm_impl == "chunked"`` (decode stays per-step)."""
+    if cfg.mlstm_impl == "chunked" and x.shape[1] > 1:
+        return mlstm_chunked(x, p, cfg, state, ac=ac,
+                             chunk=cfg.mlstm_chunk)
+    return _mlstm_scan(x, p, cfg, state, ac=ac)
+
+
+def _mlstm_scan(x, p, cfg: ModelConfig, state=None, ac=None):
+    ac = ac or (lambda t, kind: t)
+    x = ac(x, "mm_input")
+    B, S, D = x.shape
+    H = cfg.n_heads
+    de = 2 * D
+    hd = de // H
+    qkv = ac(x @ p["w_qkv"], "ffn_hidden")
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, S, H, hd) / math.sqrt(hd)
+    k = k.reshape(B, S, H, hd) / math.sqrt(hd)
+    v = v.reshape(B, S, H, hd)
+    gates = (x @ p["w_if"]).astype(jnp.float32).reshape(B, S, 2, H)
+    log_i = -jax.nn.softplus(-gates[:, :, 0])   # log σ(i)
+    log_f = -jax.nn.softplus(-gates[:, :, 1])   # log σ(f)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = (state["C"].astype(jnp.float32),
+                      state["n"].astype(jnp.float32),
+                      state["m"].astype(jnp.float32))
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, li, lf = inp   # [B,H,hd] ×3, [B,H] ×2
+        m_new = jnp.maximum(lf + m, li)
+        f_sc = jnp.exp(lf + m - m_new)[..., None]
+        i_sc = jnp.exp(li - m_new)[..., None]
+        C = f_sc[..., None] * C + i_sc[..., None] * (
+            k_t[..., :, None] * v_t[..., None, :])
+        n = f_sc * n + i_sc * k_t
+        num = jnp.einsum("bhk,bhkv->bhv", q_t, C)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", q_t, n))
+        h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), h
+
+    xs = (q.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          log_i.transpose(1, 0, 2), log_f.transpose(1, 0, 2))
+    (CT, nT, mT), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, de).astype(x.dtype)
+    skip = jax.nn.silu(x @ p["w_skip"])
+    y = (h * skip) @ p["w_o"]
+    return y, {"C": CT, "n": nT, "m": mT}
+
+
+def mlstm_chunked(x, p, cfg: ModelConfig, state=None, ac=None,
+                  chunk: int = 128):
+    """Chunked stabilized mLSTM — same semantics as :func:`_mlstm_scan`
+    but the matrix state only crosses HBM once per *chunk* instead of once
+    per *token* (the §Perf fix for the xlstm memory roofline; mirrors the
+    ``mlstm_chunk`` Pallas kernel with running-max stabilization).
+
+    Derivation (per head; m_in = carry max, Ĉ/n̂ stored pre-scaled):
+        L[t]  = Σ_{u≤t} lf_u          (in-chunk cumulative log-forget)
+        z[u]  = li_u − L[u]
+        M[t]  = max(m_in, cummax z)   ;  m_t = L[t] + M[t]
+        Ĉ_t  = e^{m_in−M[t]} Ĉ_in + Σ_{u≤t} e^{z[u]−M[t]} k_u v_uᵀ
+        y_t   = q_t·Ĉ_t / max(|q_t·n̂_t|, e^{−m_t})
+    All exponents are ≤ 0, so the chunk math is overflow-free.
+    """
+    ac = ac or (lambda t, kind: t)
+    x = ac(x, "mm_input")
+    B, S, D = x.shape
+    H = cfg.n_heads
+    de = 2 * D
+    hd = de // H
+    qkv = ac(x @ p["w_qkv"], "ffn_hidden")
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    scale = 1.0 / math.sqrt(hd)
+    # [B,H,S,hd]
+    q = (q.reshape(B, S, H, hd) * scale).transpose(0, 2, 1, 3) \
+        .astype(jnp.float32)
+    k = (k.reshape(B, S, H, hd) * scale).transpose(0, 2, 1, 3) \
+        .astype(jnp.float32)
+    v = v.reshape(B, S, H, hd).transpose(0, 2, 1, 3).astype(jnp.float32)
+    gates = (x @ p["w_if"]).astype(jnp.float32).reshape(B, S, 2, H)
+    log_i = -jax.nn.softplus(-gates[:, :, 0]).transpose(0, 2, 1)  # [B,H,S]
+    log_f = -jax.nn.softplus(-gates[:, :, 1]).transpose(0, 2, 1)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = (state["C"].astype(jnp.float32),
+                      state["n"].astype(jnp.float32),
+                      state["m"].astype(jnp.float32))
+
+    bt = min(chunk, S)
+    assert S % bt == 0, "seq_len must divide the mLSTM chunk"
+    nc = S // bt
+
+    def to_chunks(t):  # [B,H,S,...] -> [nc,B,H,bt,...]
+        return t.reshape(t.shape[:2] + (nc, bt) + t.shape[3:]) \
+            .transpose(2, 0, 1, 3, *range(4, t.ndim + 1))
+
+    xs = (to_chunks(q), to_chunks(k), to_chunks(v),
+          to_chunks(log_f), to_chunks(log_i))
+
+    def chunk_step(carry, inp):
+        C, n, m_in = carry                     # [B,H,hd,hd],[B,H,hd],[B,H]
+        qc, kc, vc, lf, li = inp               # [B,H,bt,(hd)]
+        L = jnp.cumsum(lf, axis=-1)            # [B,H,bt]
+        z = li - L
+        g = jax.lax.cummax(z, axis=2)
+        M = jnp.maximum(m_in[..., None], g)    # [B,H,bt]
+        m_t = L + M
+
+        inter_w = jnp.exp(m_in[..., None] - M)           # [B,H,bt]
+        # intra decay matrix w[t,u] = e^{z[u] - M[t]} for u<=t
+        wmat = jnp.exp(z[..., None, :] - M[..., :, None])
+        tpos = jnp.arange(bt)
+        causal = tpos[:, None] >= tpos[None, :]          # [t, u]
+        wmat = jnp.where(causal[None, None], wmat, 0.0)  # [B,H,t,u]
+
+        s = jnp.einsum("bhtd,bhud->bhtu", qc, kc)
+        y_num = inter_w[..., None] * jnp.einsum("bhtd,bhdv->bhtv", qc, C) \
+            + jnp.einsum("bhtu,bhuv->bhtv", s * wmat, vc)
+        # q_t·n̂_t = inter_w·(q_t·n̂_in) + Σ_{u≤t} (q_t·k_u)·w[t,u]
+        qn = jnp.einsum("bhtd,bhd->bht", qc, n)
+        den = jnp.abs(inter_w * qn + jnp.sum(s * wmat, axis=-1))
+        h = y_num / jnp.maximum(den, jnp.exp(-m_t))[..., None]
+
+        # chunk-end state
+        w_end = jnp.exp(z - M[..., -1:])                 # [B,H,bt]
+        C_out = inter_w[..., -1, None, None] * C + jnp.einsum(
+            "bhud,bhuv->bhdv", kc * w_end[..., None], vc)
+        n_out = inter_w[..., -1, None] * n + jnp.einsum(
+            "bhud,bhu->bhd", kc, w_end)
+        m_out = m_t[..., -1]
+        return (C_out, n_out, m_out), h
+
+    (CT, nT, mT), hs = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    # hs: [nc,B,H,bt,hd] -> [B,S,de]
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd) \
+        .transpose(0, 2, 1, 3).reshape(B, S, de).astype(x.dtype)
+    skip = jax.nn.silu(x @ p["w_skip"])
+    y = (h * skip) @ p["w_o"]
+    return y, {"C": CT, "n": nT, "m": mT}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar memory)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "w_x": jax.random.normal(ks[0], (d, 4 * d), dtype) * s,
+        # block-diagonal recurrent weights, per head
+        "r": jax.random.normal(ks[1], (H, dh, 4 * dh), dtype)
+        / math.sqrt(dh),
+        "w_o": jax.random.normal(ks[2], (d, d), dtype) * s,
+    }
+
+
+def slstm(x, p, cfg: ModelConfig, state=None):
+    """sLSTM with exponential gating.  state: {"c","n","h":[B,D],
+    "m":[B,D]}."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    zx = x @ p["w_x"]   # [B,S,4D]
+
+    if state is None:
+        c0 = jnp.zeros((B, D), jnp.float32)
+        n0 = jnp.ones((B, D), jnp.float32)
+        h0 = jnp.zeros((B, D), jnp.float32)
+        m0 = jnp.zeros((B, D), jnp.float32)
+    else:
+        c0, n0, h0, m0 = (state[k].astype(jnp.float32)
+                          for k in ("c", "n", "h", "m"))
+
+    # recurrent weights laid out gate-major to match w_x's [4*D] layout
+    r = p["r"].astype(jnp.float32).reshape(H, dh, 4, dh)
+
+    def step(carry, zx_t):
+        c, n, h, m = carry
+        hh = h.reshape(B, H, dh)
+        zr = jnp.einsum("bhk,hkgj->bghj", hh, r).reshape(B, 4 * D)
+        z = zx_t.astype(jnp.float32) + zr
+        zi, zf, zz, zo = jnp.split(z, 4, axis=-1)
+        m_new = jnp.maximum(zf + m, zi)
+        i = jnp.exp(zi - m_new)
+        f = jnp.exp(zf + m - m_new)
+        c = f * c + i * jnp.tanh(zz)
+        n = f * n + i
+        h = jax.nn.sigmoid(zo) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    (cT, nT, hT, mT), hs = jax.lax.scan(step, (c0, n0, h0, m0),
+                                        zx.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype) @ p["w_o"]
+    return y, {"c": cT, "n": nT, "h": hT, "m": mT}

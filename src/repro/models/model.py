@@ -1,0 +1,475 @@
+"""Model assembly: layer-group scan, caches, train/prefill/decode entry
+points for all 10 assigned architectures.
+
+Layer stacks are ``lax.scan``-stacked by group (see configs.base) so the
+compiled HLO stays compact for the 512-device dry-run.  ``ac`` is an
+optional activation-constraint hook installed by ``repro.parallel`` to pin
+shardings on the residual stream / logits.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, DENSE_FFN, MLSTM, MOE_FFN, NO_FFN,
+                                RGLRU, SLSTM, SWA, BlockSpec, ModelConfig)
+from . import layers as L
+
+Params = Dict[str, Any]
+_ID_AC = lambda x, kind: x  # noqa: E731
+
+
+def _dt(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig, spec: BlockSpec) -> Params:
+    dtype = _dt(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p: Params = {"norm1": L.init_norm(cfg, dtype)}
+    if spec.mixer in (ATTN, SWA):
+        p["mixer"] = L.init_attention(ks[0], cfg, dtype)
+    elif spec.mixer == RGLRU:
+        p["mixer"] = L.init_rglru(ks[0], cfg, dtype)
+    elif spec.mixer == MLSTM:
+        p["mixer"] = L.init_mlstm(ks[0], cfg, dtype)
+    elif spec.mixer == SLSTM:
+        p["mixer"] = L.init_slstm(ks[0], cfg, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross_attn:
+        p["norm_cross"] = L.init_norm(cfg, dtype)
+        p["cross"] = L.init_attention(ks[1], cfg, dtype)
+    if spec.ffn == DENSE_FFN:
+        p["norm2"] = L.init_norm(cfg, dtype)
+        p["ffn"] = L.init_ffn(ks[2], cfg, cfg.d_ff, dtype)
+    elif spec.ffn == MOE_FFN:
+        p["norm2"] = L.init_norm(cfg, dtype)
+        p["ffn"] = L.init_moe(ks[2], cfg, dtype)
+    return p
+
+
+def _init_groups(key, cfg: ModelConfig, groups) -> list:
+    out = []
+    gkeys = jax.random.split(key, max(len(groups), 1))
+    for (repeat, body), gk in zip(groups, gkeys):
+        bkeys = jax.random.split(gk, repeat)
+
+        def one(k, body=body):
+            ks = jax.random.split(k, len(body))
+            return {f"slot{i}": init_block(ks[i], cfg, spec)
+                    for i, spec in enumerate(body)}
+
+        out.append(jax.vmap(one)(bkeys))
+    return out
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = _dt(cfg.param_dtype)
+    k_emb, k_head, k_groups, k_enc, k_front = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(cfg.d_model)
+    params: Params = {
+        "embed": jax.random.normal(k_emb, (cfg.padded_vocab, cfg.d_model),
+                                   dtype) * s,
+        "final_norm": L.init_norm(cfg, dtype),
+        "groups": _init_groups(k_groups, cfg, cfg.layer_groups),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            k_head, (cfg.d_model, cfg.padded_vocab), dtype) * s
+    if cfg.frontend != "none":
+        params["frontend"] = {"proj": jax.random.normal(
+            k_front, (cfg.d_model, cfg.d_model), dtype) * s}
+    if cfg.encoder_decoder:
+        enc_spec = BlockSpec(mixer=ATTN, ffn=DENSE_FFN)
+        params["enc"] = {
+            "groups": _init_groups(k_enc, cfg,
+                                   ((cfg.enc_layers, (enc_spec,)),)),
+            "final_norm": L.init_norm(cfg, dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _mixer_full(x, bp, spec, cfg, positions, causal, state=None,
+                ac: Callable = _ID_AC):
+    """Full-sequence mixer; returns (y, cache_entry_or_None)."""
+    h = L.apply_norm(x, bp["norm1"], cfg)
+    if spec.mixer in (ATTN, SWA):
+        win = cfg.window if spec.mixer == SWA else None
+        y = L.attention(h, bp["mixer"], cfg, causal=causal, window=win,
+                        positions=positions, ac=ac)
+        return y, None
+    if spec.mixer == RGLRU:
+        return L.rglru(h, bp["mixer"], cfg, state, ac=ac)
+    if spec.mixer == MLSTM:
+        return L.mlstm(h, bp["mixer"], cfg, state, ac=ac)
+    if spec.mixer == SLSTM:
+        return L.slstm(h, bp["mixer"], cfg, state)
+    raise ValueError(spec.mixer)
+
+
+def block_apply(x, bp, spec: BlockSpec, cfg: ModelConfig, positions,
+                enc_out=None, ac: Callable = _ID_AC, causal: bool = True,
+                aux: Optional[list] = None):
+    y, _ = _mixer_full(x, bp, spec, cfg, positions, causal, ac=ac)
+    x = ac(x + y, "residual")
+    if spec.cross_attn and enc_out is not None:
+        h = L.apply_norm(x, bp["norm_cross"], cfg)
+        kv = _cross_kv(enc_out, bp["cross"], cfg)
+        y = L.attention(h, bp["cross"], cfg, kv_override=kv, ac=ac)
+        x = ac(x + y, "residual")
+    if spec.ffn == DENSE_FFN:
+        h = L.apply_norm(x, bp["norm2"], cfg)
+        x = ac(x + L.ffn(h, bp["ffn"], cfg, ac=ac), "residual")
+    elif spec.ffn == MOE_FFN:
+        h = L.apply_norm(x, bp["norm2"], cfg)
+        if aux is not None:
+            aux.append(L.moe_aux_loss(h, bp["ffn"], cfg))
+        x = ac(x + L.moe_ffn(h, bp["ffn"], cfg, ac=ac), "residual")
+    return x
+
+
+def _cross_kv(enc_out, p, cfg: ModelConfig):
+    B, S, _ = enc_out.shape
+    k = (enc_out @ p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = (enc_out @ p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def _apply_groups(x, groups_params, groups_cfg, cfg: ModelConfig, positions,
+                  enc_out=None, ac: Callable = _ID_AC, causal: bool = True,
+                  remat: bool = True, aux_box: Optional[list] = None):
+    for (repeat, body), gp in zip(groups_cfg, groups_params):
+
+        def body_fn(xc, slot_params, body=body):
+            aux = [] if aux_box is not None else None
+            for i, spec in enumerate(body):
+                xc = block_apply(xc, slot_params[f"slot{i}"], spec, cfg,
+                                 positions, enc_out, ac, causal, aux)
+            a = (jnp.stack(aux).sum() if aux else
+                 jnp.zeros((), jnp.float32))
+            return xc, a
+
+        f = jax.checkpoint(body_fn) if remat else body_fn
+        x, auxs = jax.lax.scan(f, x, gp)
+        if aux_box is not None:
+            aux_box.append(auxs.sum())
+    return x
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, tokens, cfg: ModelConfig):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return x.astype(_dt(cfg.compute_dtype))
+
+
+def _logits(params, x, cfg: ModelConfig, ac: Callable = _ID_AC):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    # force the unembedding weight gathered over the FSDP axis (kept
+    # vocab-sharded over TP): otherwise GSPMD resolves the data-axis
+    # conflict (batch on x vs d_model on w) by replicating the batch and
+    # partial-summing f32 logits — orders of magnitude more traffic.
+    w = ac(w.astype(x.dtype), "lm_head_weight")
+    return ac((x @ w).astype(jnp.float32), "logits")
+
+
+def _assemble_input(params, batch, cfg: ModelConfig):
+    """tokens (+ stub-frontend embeds) -> (x [B,S,D], positions, loss_mask)."""
+    tokens = batch["tokens"]
+    x = _embed(params, tokens, cfg)
+    B, S_text = tokens.shape
+    if cfg.frontend != "none" and "embeds" in batch and not \
+            cfg.encoder_decoder:
+        e = batch["embeds"].astype(x.dtype) @ params["frontend"]["proj"] \
+            .astype(x.dtype)
+        x = jnp.concatenate([e, x], axis=1)
+        F = e.shape[1]
+        mask = jnp.concatenate([jnp.zeros((B, F), jnp.float32),
+                                jnp.ones((B, S_text), jnp.float32)], axis=1)
+    else:
+        mask = jnp.ones((B, S_text), jnp.float32)
+    positions = jnp.arange(x.shape[1])[None, :]
+    return x, positions, mask
+
+
+# ---------------------------------------------------------------------------
+# training forward
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params, batch, cfg: ModelConfig, *, ac: Callable = _ID_AC,
+                  remat: bool = True) -> jnp.ndarray:
+    """Next-token CE loss (+ MoE aux loss).  batch: {"tokens": [B,S]} plus
+    "embeds" for stub frontends / "enc_embeds" for enc-dec."""
+    aux_box: list = [] if cfg.moe is not None else None
+
+    if cfg.encoder_decoder:
+        enc_x = (batch["enc_embeds"].astype(_dt(cfg.compute_dtype))
+                 @ params["frontend"]["proj"].astype(
+                     _dt(cfg.compute_dtype)))
+        enc_pos = jnp.arange(enc_x.shape[1])[None, :]
+        enc_spec_groups = ((cfg.enc_layers,
+                            (BlockSpec(mixer=ATTN, ffn=DENSE_FFN),)),)
+        enc_out = _apply_groups(enc_x, params["enc"]["groups"],
+                                enc_spec_groups, cfg, enc_pos,
+                                causal=False, remat=remat, ac=ac)
+        enc_out = L.apply_norm(enc_out, params["enc"]["final_norm"], cfg)
+        x, positions, mask = _assemble_input(params, batch, cfg)
+        x = ac(x, "residual")
+        x = _apply_groups(x, params["groups"], cfg.layer_groups, cfg,
+                          positions, enc_out=enc_out, remat=remat,
+                          aux_box=aux_box, ac=ac)
+    else:
+        x, positions, mask = _assemble_input(params, batch, cfg)
+        x = ac(x, "residual")
+        x = _apply_groups(x, params["groups"], cfg.layer_groups, cfg,
+                          positions, remat=remat, aux_box=aux_box, ac=ac)
+
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    # predict next token for the text region only
+    F = x.shape[1] - batch["tokens"].shape[1]
+    xt = x[:, F:, :]
+    logits = _logits(params, ac(xt[:, :-1], "residual"), cfg)
+    labels = batch["tokens"][:, 1:]
+    lmask = mask[:, F + 1:]
+    # vocab-shard-safe CE: no gather along the (TP-sharded) vocab dim —
+    # logsumexp and the label logit both reduce over vocab shard-locally
+    # and combine with a small psum under GSPMD.
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    label_logit = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - label_logit
+    loss = (nll * lmask).sum() / jnp.maximum(lmask.sum(), 1.0)
+    if aux_box:
+        loss = loss + 0.01 * sum(aux_box) / max(len(aux_box), 1)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def _cache_len(cfg: ModelConfig, spec: BlockSpec, seq_len: int) -> int:
+    if spec.mixer == SWA and cfg.window is not None:
+        return min(cfg.window, seq_len)
+    return seq_len
+
+
+def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                     seq_len: int, enc_len: int = 0,
+                     dtype=None) -> Params:
+    dtype = dtype or _dt(cfg.compute_dtype)
+    hkv, hd, H = cfg.n_kv_heads, cfg.hd, cfg.n_heads
+    c: Params = {}
+    if spec.mixer in (ATTN, SWA):
+        Lc = _cache_len(cfg, spec, seq_len)
+        c["k"] = jnp.zeros((batch, Lc, hkv, hd), dtype)
+        c["v"] = jnp.zeros((batch, Lc, hkv, hd), dtype)
+    elif spec.mixer == RGLRU:
+        dr = cfg.d_rnn or cfg.d_model
+        c["h"] = jnp.zeros((batch, dr), jnp.float32)
+        c["conv"] = jnp.zeros((batch, cfg.conv_width - 1, dr), dtype)
+    elif spec.mixer == MLSTM:
+        de = 2 * cfg.d_model
+        hdm = de // H
+        c["C"] = jnp.zeros((batch, H, hdm, hdm), jnp.float32)
+        c["n"] = jnp.zeros((batch, H, hdm), jnp.float32)
+        c["m"] = jnp.full((batch, H), -1e30, jnp.float32)
+    elif spec.mixer == SLSTM:
+        D = cfg.d_model
+        c["c"] = jnp.zeros((batch, D), jnp.float32)
+        c["n"] = jnp.ones((batch, D), jnp.float32)
+        c["h"] = jnp.zeros((batch, D), jnp.float32)
+        c["m"] = jnp.zeros((batch, D), jnp.float32)
+    if spec.cross_attn:
+        c["cross_k"] = jnp.zeros((batch, enc_len, hkv, hd), dtype)
+        c["cross_v"] = jnp.zeros((batch, enc_len, hkv, hd), dtype)
+    return c
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int,
+                enc_len: int = 0) -> list:
+    """Abstract cache pytree matching the grouped-scan layout."""
+    out = []
+    for repeat, body in cfg.layer_groups:
+        slots = {f"slot{i}": init_block_cache(cfg, spec, batch, seq_len,
+                                              enc_len)
+                 for i, spec in enumerate(body)}
+        out.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (repeat,) + x.shape),
+            slots))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def block_decode(x, bp, spec: BlockSpec, cfg: ModelConfig, cache, pos):
+    new_cache = dict(cache)
+    h = L.apply_norm(x, bp["norm1"], cfg)
+    if spec.mixer in (ATTN, SWA):
+        win = cfg.window if spec.mixer == SWA else None
+        y, kv = L.attention_decode(h, bp["mixer"], cfg,
+                                   {"k": cache["k"], "v": cache["v"]},
+                                   pos, window=win)
+        new_cache["k"], new_cache["v"] = kv["k"], kv["v"]
+    elif spec.mixer == RGLRU:
+        y, st = L.rglru(h, bp["mixer"], cfg,
+                        {"h": cache["h"], "conv": cache["conv"]})
+        new_cache["h"], new_cache["conv"] = st["h"], st["conv"]
+    elif spec.mixer == MLSTM:
+        y, st = L.mlstm(h, bp["mixer"], cfg,
+                        {k: cache[k] for k in ("C", "n", "m")})
+        new_cache.update(st)
+    elif spec.mixer == SLSTM:
+        y, st = L.slstm(h, bp["mixer"], cfg,
+                        {k: cache[k] for k in ("c", "n", "h", "m")})
+        new_cache.update(st)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + y
+    if spec.cross_attn:
+        h = L.apply_norm(x, bp["norm_cross"], cfg)
+        y = L.attention(h, bp["cross"], cfg,
+                        kv_override=(cache["cross_k"], cache["cross_v"]))
+        x = x + y
+    if spec.ffn == DENSE_FFN:
+        x = x + L.ffn(L.apply_norm(x, bp["norm2"], cfg), bp["ffn"], cfg)
+    elif spec.ffn == MOE_FFN:
+        x = x + L.moe_ffn(L.apply_norm(x, bp["norm2"], cfg), bp["ffn"],
+                          cfg)
+    return x, new_cache
+
+
+def decode_step(params, tokens, caches, pos, cfg: ModelConfig, *,
+                ac: Callable = _ID_AC):
+    """One decode step.  tokens: [B,1] int32; pos: scalar int32 (number of
+    tokens already in the cache).  Returns (logits [B,1,V], new caches)."""
+    x = ac(_embed(params, tokens, cfg), "residual")
+    new_caches = []
+    for (repeat, body), gp, gc in zip(cfg.layer_groups, params["groups"],
+                                      caches):
+
+        def body_fn(xc, inp, body=body):
+            slot_params, cache_in = inp
+            cache_out = {}
+            for i, spec in enumerate(body):
+                xc, c = block_decode(xc, slot_params[f"slot{i}"], spec,
+                                     cfg, cache_in[f"slot{i}"], pos)
+                cache_out[f"slot{i}"] = c
+            return xc, cache_out
+
+        x, new_gc = jax.lax.scan(body_fn, x, (gp, gc))
+        new_caches.append(new_gc)
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    return _logits(params, x, cfg, ac), new_caches
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+
+def _mixer_prefill(x, bp, spec, cfg, positions, cache_len,
+                   ac: Callable = _ID_AC):
+    """Mixer over the full prompt, returning the filled cache."""
+    h = L.apply_norm(x, bp["norm1"], cfg)
+    B, S, _ = x.shape
+    if spec.mixer in (ATTN, SWA):
+        win = cfg.window if spec.mixer == SWA else None
+        y = L.attention(h, bp["mixer"], cfg, causal=True, window=win,
+                        positions=positions, ac=ac)
+        k = (h @ bp["mixer"]["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+        v = (h @ bp["mixer"]["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+        k = L.rope(k, positions, cfg.rope_theta)
+        if cache_len >= S:
+            pad = cache_len - S
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        else:  # windowed ring cache keeps the tail; slot(p) = p % cache_len
+            start = S - cache_len
+            k, v = k[:, start:], v[:, start:]
+            k = jnp.roll(k, shift=S % cache_len, axis=1)
+            v = jnp.roll(v, shift=S % cache_len, axis=1)
+        return y, {"k": k, "v": v}
+    if spec.mixer == RGLRU:
+        y, st = L.rglru(h, bp["mixer"], cfg, None)
+        return y, st
+    if spec.mixer == MLSTM:
+        return L.mlstm(h, bp["mixer"], cfg, None)
+    if spec.mixer == SLSTM:
+        return L.slstm(h, bp["mixer"], cfg, None)
+    raise ValueError(spec.mixer)
+
+
+def prefill(params, batch, cfg: ModelConfig, *, cache_len: Optional[int]
+            = None, ac: Callable = _ID_AC, enc_out=None):
+    """Process a full prompt; returns (last-position logits, caches)."""
+    x, positions, _ = _assemble_input(params, batch, cfg)
+    x = ac(x, "residual")
+    if cfg.encoder_decoder and enc_out is None and "enc_embeds" in batch:
+        enc_x = (batch["enc_embeds"].astype(x.dtype)
+                 @ params["frontend"]["proj"].astype(x.dtype))
+        enc_pos = jnp.arange(enc_x.shape[1])[None, :]
+        enc_groups = ((cfg.enc_layers,
+                       (BlockSpec(mixer=ATTN, ffn=DENSE_FFN),)),)
+        enc_out = _apply_groups(enc_x, params["enc"]["groups"], enc_groups,
+                                cfg, enc_pos, causal=False, remat=False)
+        enc_out = L.apply_norm(enc_out, params["enc"]["final_norm"], cfg)
+
+    S = x.shape[1]
+    cache_len = cache_len or S
+    caches = []
+    for (repeat, body), gp in zip(cfg.layer_groups, params["groups"]):
+
+        def body_fn(xc, slot_params, body=body):
+            cache_out = {}
+            for i, spec in enumerate(body):
+                clen = min(cache_len, _cache_len(cfg, spec, cache_len))
+                y, c = _mixer_prefill(xc, slot_params[f"slot{i}"], spec,
+                                      cfg, positions, clen, ac=ac)
+                xc = ac(xc + y, "residual")
+                bp = slot_params[f"slot{i}"]
+                if spec.cross_attn and enc_out is not None:
+                    h = L.apply_norm(xc, bp["norm_cross"], cfg)
+                    kv = _cross_kv(enc_out, bp["cross"], cfg)
+                    xc = ac(xc + L.attention(h, bp["cross"], cfg,
+                                             kv_override=kv, ac=ac),
+                            "residual")
+                    c["cross_k"], c["cross_v"] = kv
+                if spec.ffn == DENSE_FFN:
+                    xc = ac(xc + L.ffn(L.apply_norm(xc, bp["norm2"], cfg),
+                                       bp["ffn"], cfg, ac=ac), "residual")
+                elif spec.ffn == MOE_FFN:
+                    xc = ac(xc + L.moe_ffn(
+                        L.apply_norm(xc, bp["norm2"], cfg), bp["ffn"],
+                        cfg, ac=ac), "residual")
+                cache_out[f"slot{i}"] = c
+            return xc, cache_out
+
+        x, gc = jax.lax.scan(body_fn, x, gp)
+        caches.append(gc)
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    logits = _logits(params, x[:, -1:, :], cfg, ac)
+    return logits, caches

@@ -1,0 +1,96 @@
+"""Registry utilities: exact param counts and abstract input specs per
+(architecture × shape) cell — the single source of truth for the dry-run,
+smoke tests, and roofline accounting."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCfg
+from . import model as M
+
+WHISPER_CROSS_LEN = 1500  # encoder receptive field (30 s of audio)
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocating anything."""
+    return jax.eval_shape(partial(M.init_params, cfg=cfg),
+                          jax.random.key(0))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Exact parameter count, from the abstract init (not the analytic
+    formula — this is what roofline MODEL_FLOPS uses)."""
+    tree = abstract_params(cfg)
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token: MoE counts top_k of n_experts experts."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    n_mats = 3 if cfg.act == "swiglu" else 2
+    per_expert = n_mats * cfg.d_model * m.d_ff_expert
+    n_moe_layers = sum(1 for s in cfg.blocks() if s.ffn == "moe")
+    return total - (m.n_experts - m.top_k) * per_expert * n_moe_layers
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def _emb(b, s, d, dtype):
+    return jax.ShapeDtypeStruct((b, s, d), jnp.dtype(dtype))
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    """Abstract batch for train/prefill-style full-sequence forward."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.compute_dtype
+    if cfg.encoder_decoder:
+        # audio stub: precomputed frame embeddings; decoder gets text tokens
+        return {"enc_embeds": _emb(B, S, cfg.d_model, dt),
+                "tokens": _tok(B, S)}
+    if cfg.frontend == "patch":
+        F = cfg.frontend_tokens
+        return {"embeds": _emb(B, F, cfg.d_model, dt),
+                "tokens": _tok(B, S - F)}
+    return {"tokens": _tok(B, S)}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeCfg
+                       ) -> Tuple[Any, Any, Any]:
+    """(tokens, caches, pos) ShapeDtypeStructs for one decode step with a
+    cache of shape.seq_len tokens."""
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = WHISPER_CROSS_LEN if cfg.encoder_decoder else 0
+    caches = jax.eval_shape(
+        lambda: M.init_caches(cfg, B, S, enc_len=enc_len))
+    return _tok(B, 1), caches, jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def make_concrete(spec_tree, seed: int = 0):
+    """Instantiate a spec tree with deterministic synthetic data (smoke
+    tests / benchmarks)."""
+    rng = np.random.default_rng(seed)
+
+    def one(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jnp.asarray(rng.integers(0, 255, size=s.shape),
+                               dtype=s.dtype)
+        return jnp.asarray(rng.normal(size=s.shape) * 0.02, dtype=s.dtype)
+
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: isinstance(x,
+                                                     jax.ShapeDtypeStruct))

@@ -1,0 +1,4 @@
+from .adamw import adamw_init, adamw_update
+from .schedule import warmup_cosine
+
+__all__ = ["adamw_init", "adamw_update", "warmup_cosine"]

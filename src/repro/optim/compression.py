@@ -1,0 +1,52 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Drops the gradient reduce-scatter volume 4× (f32) / 2× (bf16).  Per-leaf
+symmetric int8 quantization with a per-leaf scale; the quantization error
+is carried in an error-feedback buffer and added back before the next
+quantization (Seide et al. / EF-SGD), which keeps SGD/Adam convergence
+unbiased in expectation.
+
+Opt-in via ``ParallelCfg.grad_compression="int8_ef"``; the buffers shard
+exactly like the gradients (they mirror the parameter specs).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params) -> Any:
+    """Zero error-feedback buffers mirroring the parameter pytree."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads, ef_buf) -> Tuple[Any, Any]:
+    """Quantize (grads + carried error) to int8; returns (quantized tree
+    of (q, scale), new error buffers)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        err = gf - q.astype(jnp.float32) * scale
+        return (q, scale), err
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef_buf)
+    qs, errs = zip(*[one(g, e) for g, e in zip(flat_g, flat_e)])
+    return jax.tree.unflatten(tdef, list(qs)), \
+        jax.tree.unflatten(tdef, list(errs))
+
+
+def decompress(qtree) -> Any:
+    return jax.tree.map(
+        lambda leaf: leaf[0].astype(jnp.float32) * leaf[1],
+        qtree, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and hasattr(x[0], "dtype"))
+
+
+def compressed_bytes(qtree) -> int:
+    return sum(leaf[0].size + 4 for leaf in jax.tree.leaves(
+        qtree, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and hasattr(x[0], "dtype")))

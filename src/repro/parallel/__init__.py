@@ -1,0 +1,4 @@
+from .sharding import MeshRules
+from .steps import make_serve_step, make_train_step
+
+__all__ = ["MeshRules", "make_train_step", "make_serve_step"]

@@ -1,0 +1,78 @@
+"""GPipe-style pipeline parallelism over a mesh axis (opt-in).
+
+The layer stack is split into ``n_stages`` contiguous stages, one per
+device along ``axis``; microbatches stream through with activations
+forwarded stage-to-stage via ``ppermute`` (the TPU ICI-neighbor
+collective).  Schedule: plain GPipe — ``M + S - 1`` ticks for M
+microbatches over S stages, bubble fraction ``(S-1)/(M+S-1)``.
+
+This is the production ``pod``-axis option noted in DESIGN.md §5; the
+default plan maps ``pod`` to FSDP/DP (better roofline for the assigned
+shapes), so pipeline() is exercised at small scale in
+tests/test_pipeline.py and available as a hillclimb lever for
+inter-pod-bandwidth-starved deployments.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(stage_fn: Callable, mesh: Mesh, axis: str,
+                   params_stacked, microbatches):
+    """Run ``y_mb = stage_S(...stage_1(x_mb))`` for every microbatch.
+
+    stage_fn(stage_params, x) -> y : one stage's computation.
+    params_stacked: pytree with leading dim n_stages (stage i's params).
+    microbatches:   [M, ...] stacked microbatch inputs.
+    Returns [M, ...] outputs (from the last stage).
+    """
+    S = mesh.devices.shape[list(mesh.axis_names).index(axis)]
+    M = microbatches.shape[0]
+    T = M + S - 1
+    perm = [(i, (i + 1) % S) for i in range(S)]
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P(axis), P()),   # params sharded by stage; mbs repl.
+             out_specs=P(),
+             check_rep=False)
+    def run(params_stage, mbs):
+        params_stage = jax.tree.map(lambda t: t[0], params_stage)
+        sid = jax.lax.axis_index(axis)
+        h0 = jnp.zeros_like(mbs[0])
+        outs0 = jnp.zeros((M,) + mbs.shape[1:], mbs.dtype)
+
+        def tick(carry, t):
+            h, outs = carry
+            # stage 0 ingests microbatch t (when in range)
+            mb_idx = jnp.clip(t, 0, M - 1)
+            inp = jnp.where(sid == 0,
+                            jax.lax.dynamic_index_in_dim(
+                                mbs, mb_idx, keepdims=False), h)
+            out = stage_fn(params_stage, inp)
+            # last stage emits microbatch (t - S + 1)
+            emit_idx = t - (S - 1)
+            valid = jnp.logical_and(sid == S - 1,
+                                    jnp.logical_and(emit_idx >= 0,
+                                                    emit_idx < M))
+            outs = jax.lax.cond(
+                valid,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, out, jnp.clip(emit_idx, 0, M - 1), axis=0),
+                lambda o: o, outs)
+            # rotate activations to the next stage
+            h_next = jax.lax.ppermute(out, axis, perm)
+            return (h_next, outs), None
+
+        (_, outs), _ = jax.lax.scan(tick, (h0, outs0), jnp.arange(T))
+        # only the last stage holds real outputs; psum broadcasts them
+        # (everyone else contributes zeros)
+        mask = (sid == S - 1).astype(outs.dtype)
+        return jax.lax.psum(outs * mask, axis)
+
+    return run(params_stacked, microbatches)

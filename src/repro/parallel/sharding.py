@@ -1,0 +1,252 @@
+"""Sharding rules: logical parallelism axes -> physical mesh axes.
+
+This is the cluster-scale analogue of hetGPU's backend modules: the model
+definition is mesh-agnostic (the "portable binary"); MeshRules lowers it
+onto whatever mesh exists — single-pod (16,16)=("data","model"),
+multi-pod (2,16,16)=("pod","data","model"), or any test mesh — the way
+hetIR lowers onto PTX/SPIR-V/Metalium.
+
+Logical axes:
+  fsdp  -> ("pod","data")∩mesh : ZeRO-3 parameter/optimizer sharding + DP
+  tp    -> "model"             : Megatron column/row sharding
+  sp    -> "model"             : sequence-parallel activations / KV caches
+  ep    -> "model" when n_experts divides it, else expert-TP fallback
+
+Every rule is divisibility-guarded: a dim that doesn't divide its axis is
+left unsharded (GSPMD would otherwise reject the in_sharding), which is how
+odd vocab (pre-padding), 24-head, or 40-expert shapes stay lowerable.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ATTN, DENSE_FFN, MLSTM, MOE_FFN, RGLRU,
+                                SLSTM, SWA, BlockSpec, ModelConfig,
+                                ParallelCfg, ShapeCfg)
+from repro.models import registry as R
+
+
+class MeshRules:
+    def __init__(self, cfg: ModelConfig, pcfg: ParallelCfg, mesh: Mesh):
+        self.cfg = cfg
+        self.pcfg = pcfg
+        self.mesh = mesh
+        self.axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.fsdp: Tuple[str, ...] = tuple(
+            a for a in pcfg.fsdp_axes if a in self.axis_size)
+        self.tp = pcfg.tp_axis if pcfg.tp_axis in self.axis_size else None
+
+    # -- helpers ---------------------------------------------------------
+    def _size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.axis_size[a]
+        return n
+
+    def _fit(self, dim: int, axes) -> Optional[Any]:
+        """axes if dim divides their product, else None (replicate)."""
+        if axes is None:
+            return None
+        if dim % self._size(axes) == 0:
+            return axes
+        # try a single-axis subset (e.g. drop "pod" from ("pod","data"))
+        if isinstance(axes, tuple) and len(axes) > 1:
+            for a in axes[::-1]:
+                if dim % self._size(a) == 0:
+                    return a
+        return None
+
+    def spec(self, shape: Tuple[int, ...], *axes) -> P:
+        assert len(axes) == len(shape), (shape, axes)
+        return P(*[self._fit(d, a) for d, a in zip(shape, axes)])
+
+    def shd(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # -- parameter specs ---------------------------------------------------
+    def param_specs(self):
+        """PartitionSpec pytree matching models.init_params structure."""
+        cfg = self.cfg
+        a_params = R.abstract_params(cfg)
+
+        def leaf_rule(path: Tuple[str, ...], leaf) -> P:
+            shape = leaf.shape
+            name = path[-1]
+            stacked = "groups" in path  # scan-stacked leaves: [repeat, ...]
+            core = shape[1:] if stacked else shape
+            s = self._core_rule(name, core, path)
+            return P(*((None,) + tuple(s))) if stacked else P(*s)
+
+        return _tree_map_with_path(leaf_rule, a_params)
+
+    def _core_rule(self, name: str, shape, path) -> Tuple:
+        fsdp, tp = self.fsdp, self.tp
+        f = lambda d, a: self._fit(d, a)  # noqa: E731
+        if name in ("embed",):
+            return (f(shape[0], tp), f(shape[1], fsdp))
+        if name == "lm_head":
+            return (f(shape[0], fsdp), f(shape[1], tp))
+        if name in ("wq", "wk", "wv", "wg", "wu", "w1", "w_in_rec",
+                    "w_in_gate", "w_qkv", "w_skip", "w_x", "w_r", "w_i",
+                    "proj"):
+            if len(shape) == 3:  # stacked MoE experts [E, D, F]
+                ep = self._ep_axis(shape[0])
+                return (ep, f(shape[1], fsdp if ep is None else None),
+                        None if ep == tp else f(shape[2], tp))
+            return (f(shape[0], fsdp), f(shape[1], tp))
+        if name in ("wo", "wd", "w2", "w_out", "w_o"):
+            if len(shape) == 3:  # [E, F, D]
+                ep = self._ep_axis(shape[0])
+                return (ep, None if ep == tp else f(shape[1], tp),
+                        f(shape[2], fsdp if ep is None else None))
+            return (f(shape[0], tp), f(shape[1], fsdp))
+        if name == "router":
+            return (f(shape[0], fsdp), None)
+        if name == "w_if":
+            return (f(shape[0], fsdp), None)
+        if name == "conv_w":
+            return (None, f(shape[1], tp))
+        if name == "lam":
+            return (f(shape[0], tp),)
+        if name == "r":  # sLSTM block-diag recurrence [H, dh, 4dh]
+            return (f(shape[0], tp), None, None)
+        if name in ("scale", "bias"):
+            return (None,) * len(shape)
+        # default: replicate
+        return (None,) * len(shape)
+
+    def _ep_axis(self, n_experts: int) -> Optional[str]:
+        """True expert-parallel axis when expert count divides `model`;
+        otherwise None -> expert-TP fallback shards d_ff instead."""
+        if self.tp and n_experts % self.axis_size[self.tp] == 0:
+            return self.tp
+        return None
+
+    def opt_specs(self, param_specs):
+        return {"m": param_specs, "v": param_specs, "count": P()}
+
+    # -- batch / cache specs -------------------------------------------------
+    def batch_specs(self, batch_tree):
+        def rule(path, leaf):
+            if leaf.ndim == 0:
+                return P()
+            b_axes = self._fit(leaf.shape[0], self.fsdp)
+            if leaf.ndim >= 2 and self.pcfg.seq_shard:
+                s_axes = self._fit(leaf.shape[1], self.tp)
+                rest = (None,) * (leaf.ndim - 2)
+                return P(b_axes, s_axes, *rest)
+            return P(b_axes, *((None,) * (leaf.ndim - 1)))
+
+        return _tree_map_with_path(rule, batch_tree)
+
+    def cache_specs(self, cache_tree):
+        """KV caches [B,S,Hkv,hd] / recurrent states [B,...]."""
+        def rule(path, leaf):
+            # stacked over layers: [L, B, ...]
+            shape = leaf.shape[1:]
+            b_axes = self._fit(shape[0], self.fsdp)
+            if len(shape) == 4:  # [B, S, Hkv, hd]
+                if self.pcfg.kv_shard == "seq":
+                    return P(None, b_axes, self._fit(shape[1], self.tp),
+                             None, None)
+                return P(None, b_axes, None,
+                         self._fit(shape[2], self.tp), None)
+            if len(shape) >= 2:
+                return P(None, b_axes, self._fit(shape[1], self.tp),
+                         *((None,) * (len(shape) - 2)))
+            return P(None, b_axes)
+
+        return _tree_map_with_path(rule, cache_tree)
+
+    def constrain_batch(self, batch_tree):
+        """Pin batch sharding on (micro)batch arrays.  Crucial inside the
+        grad-accum scan: slicing microbatches out of [A, B/A, ...] would
+        otherwise let GSPMD shard the accumulation dim and replicate the
+        microbatch."""
+        specs = self.batch_specs(batch_tree)
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, self.shd(s)),
+            batch_tree, specs)
+
+    # -- activation constraint hook (threaded into the model as `ac`) --------
+    def ac(self, x, kind: str):
+        if kind == "residual" and x.ndim == 3:
+            b = self._fit(x.shape[0], self.fsdp)
+            s = self._fit(x.shape[1], self.tp) if self.pcfg.seq_shard \
+                else None
+            return jax.lax.with_sharding_constraint(
+                x, self.shd(P(b, s, None)))
+        if kind == "logits" and x.ndim == 3:
+            b = self._fit(x.shape[0], self.fsdp)
+            v = self._fit(x.shape[-1], self.tp) \
+                if self.pcfg.shard_logits else None
+            return jax.lax.with_sharding_constraint(
+                x, self.shd(P(b, None, v)))
+        if kind == "lm_head_weight" and x.ndim == 2:
+            return jax.lax.with_sharding_constraint(
+                x, self.shd(P(None, self._fit(x.shape[1], self.tp))))
+        if kind == "heads4" and x.ndim == 4:
+            # [B,S,H,hd]: Megatron head sharding (replicate when H doesn't
+            # divide tp — small models)
+            b = self._fit(x.shape[0], self.fsdp)
+            return jax.lax.with_sharding_constraint(
+                x, self.shd(P(b, None, self._fit(x.shape[2], self.tp),
+                              None)))
+        if kind in ("attn_mix", "ffn_hidden") and x.ndim == 3:
+            b = self._fit(x.shape[0], self.fsdp)
+            return jax.lax.with_sharding_constraint(
+                x, self.shd(P(b, None, self._fit(x.shape[2], self.tp))))
+        if kind == "mm_input" and x.ndim == 3:
+            # Megatron-SP boundary: gather the (possibly seq-sharded)
+            # activation BEFORE a TP matmul — otherwise the GSPMD solver
+            # may resolve the conflict by fully gathering the weights
+            # (3.3 GB/layer on 405B) instead of the activation.
+            b = self._fit(x.shape[0], self.fsdp)
+            return jax.lax.with_sharding_constraint(
+                x, self.shd(P(b, None, None)))
+        if kind == "moe_buf" and x.ndim == 3:
+            # [E,C,D]: experts over EP when divisible; capacity over fsdp
+            ep = self._ep_axis(x.shape[0])
+            c = self._fit(x.shape[1], self.fsdp) if ep is None else None
+            return jax.lax.with_sharding_constraint(
+                x, self.shd(P(ep, c, None)))
+        if kind == "moe_hidden" and x.ndim == 3:
+            ep = self._ep_axis(x.shape[0])
+            c = self._fit(x.shape[1], self.fsdp) if ep is None else None
+            f = None if ep == self.tp else self._fit(x.shape[2], self.tp)
+            return jax.lax.with_sharding_constraint(
+                x, self.shd(P(ep, c, f)))
+        if kind == "moe_buf4" and x.ndim == 4:   # [B,E,C,D] grouped MoE
+            b = self._fit(x.shape[0], self.fsdp)
+            return jax.lax.with_sharding_constraint(
+                x, self.shd(P(b, self._ep_axis(x.shape[1]), None, None)))
+        if kind == "moe_hidden4" and x.ndim == 4:  # [B,E,C,F]
+            b = self._fit(x.shape[0], self.fsdp)
+            ep = self._ep_axis(x.shape[1])
+            f = None if ep == self.tp else self._fit(x.shape[3], self.tp)
+            return jax.lax.with_sharding_constraint(
+                x, self.shd(P(b, ep, None, f)))
+        return x
+
+
+def _tree_map_with_path(fn, tree):
+    """tree_map passing a tuple of dict-keys/list-indices as path."""
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(v, path + (str(i),)) for i, v in enumerate(node)]
+            return type(node)(t) if not isinstance(node, tuple) \
+                else tuple(t)
+        return fn(path, node)
+
+    return walk(tree, ())

@@ -1,0 +1,105 @@
+"""Distributed train/serve steps: grad accumulation, remat, AdamW, decode.
+
+``make_train_step`` returns (step_fn, in_shardings, out_shardings) ready for
+``jax.jit(...).lower(...)`` with abstract inputs — the dry-run path — or for
+real execution on a live mesh.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelCfg, ShapeCfg
+from repro.models import decode_step, forward_train
+from repro.optim import adamw_update, warmup_cosine
+from .sharding import MeshRules
+
+
+def make_train_step(cfg: ModelConfig, pcfg: ParallelCfg, rules: MeshRules,
+                    *, peak_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10000):
+    """Returns train_step(params, opt_state, batch, step) -> (params,
+    opt_state, metrics).  Gradient accumulation slices the global batch
+    into ``pcfg.grad_accum`` microbatches via lax.scan (activations for one
+    microbatch at a time)."""
+    A = pcfg.grad_accum
+    ac = rules.ac if rules is not None else (lambda x, k: x)
+    constrain = rules.constrain_batch if rules is not None else (
+        lambda b: b)
+    if rules is not None:
+        pspecs = rules.param_specs()
+
+        def pin_grads(grads):
+            # gradients land sharded exactly like their parameters: the
+            # per-microbatch batch reduction becomes a reduce-scatter over
+            # the FSDP axes instead of a full f32 all-reduce per layer.
+            return jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(
+                    g, rules.shd(s)), grads, pspecs)
+    else:
+        pin_grads = lambda g: g  # noqa: E731
+
+    def loss_fn(params, mb):
+        mb = constrain(mb)
+        return forward_train(params, mb, cfg, ac=ac, remat=pcfg.remat)
+
+    gdt = jnp.dtype(pcfg.grad_dtype)
+
+    def train_step(params, opt_state, batch, step):
+        if A == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = pin_grads(grads)
+        else:
+            def split(x):
+                return x.reshape((A, x.shape[0] // A) + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                loss_acc, grads_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grads = pin_grads(grads)
+                grads = jax.tree.map(
+                    lambda a, g: a + g.astype(gdt) / A,
+                    grads_acc, grads)
+                return (loss_acc + loss / A, pin_grads(grads)), None
+
+            zeros = pin_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, gdt), params))
+            (loss, grads), _ = jax.lax.scan(
+                acc_fn, (jnp.zeros((), jnp.float32), zeros), mbs)
+
+        lr = warmup_cosine(step, peak_lr=peak_lr, warmup_steps=warmup,
+                           total_steps=total_steps)
+        params, opt_state, metrics = adamw_update(
+            grads, opt_state, params, lr=lr)
+        metrics["loss"] = loss
+        metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, rules: Optional[MeshRules] = None):
+    """One batched decode step: (params, tokens, caches, pos) ->
+    (logits, new_caches)."""
+    ac = rules.ac if rules is not None else (lambda x, k: x)
+
+    def serve_step(params, tokens, caches, pos):
+        return decode_step(params, tokens, caches, pos, cfg, ac=ac)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules: Optional[MeshRules] = None,
+                      cache_len: Optional[int] = None):
+    from repro.models import prefill
+    ac = rules.ac if rules is not None else (lambda x, k: x)
+
+    def prefill_step(params, batch):
+        return prefill(params, batch, cfg, cache_len=cache_len, ac=ac)
+
+    return prefill_step

@@ -1,0 +1,3 @@
+from .train_loop import Trainer
+
+__all__ = ["Trainer"]

@@ -1,0 +1,194 @@
+"""Fault-tolerant, elastic training runtime.
+
+The hetGPU ideas at job scale:
+
+* **cooperative checkpointing** — a ``preempt_flag`` callable is checked at
+  every step boundary (the training "barrier"); when raised, the loop
+  snapshots and exits cleanly (the paper's pause-flag protocol);
+* **checkpoint/restart** — topology-neutral checkpoints (see
+  repro.checkpoint) + seekable data mean a restart resumes bit-exact;
+* **elastic resize / live migration** — ``Trainer.resize(new_mesh)``
+  re-fits the sharding rules to a different mesh and reshards the live
+  state through the neutral format (mesh A -> mesh B without a restart);
+* **failure injection** — ``failure_at`` simulates a node loss mid-run for
+  the fault-tolerance tests;
+* **straggler monitoring** — per-step wall-time EMA; steps slower than
+  ``straggler_factor``× the EMA are logged and counted (the signal a real
+  cluster uses to trigger re-layout or backup workers).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.configs.base import ModelConfig, ParallelCfg, ShapeCfg
+from repro.data import SyntheticLMData
+from repro.models import init_params
+from repro.models import registry as R
+from repro.optim import adamw_init
+from repro.parallel import MeshRules, make_train_step
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class TrainReport:
+    steps_run: int = 0
+    losses: List[float] = field(default_factory=list)
+    straggler_events: int = 0
+    checkpoints: List[int] = field(default_factory=list)
+    preempted: bool = False
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, shape: ShapeCfg, mesh,
+                 pcfg: Optional[ParallelCfg] = None, ckpt_dir=None,
+                 seed: int = 0, peak_lr: float = 1e-3):
+        self.cfg = cfg
+        self.shape = shape
+        self.pcfg = pcfg or ParallelCfg(grad_accum=1, remat=True,
+                                        seq_shard=False)
+        self.seed = seed
+        self.peak_lr = peak_lr
+        self.ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+        self.ckpt_dir = ckpt_dir
+        self._bind_mesh(mesh)
+        self.step = 0
+        self.state = None  # {"params":..., "opt":...}
+
+    # -- mesh binding (initial and elastic) ------------------------------
+    def _bind_mesh(self, mesh) -> None:
+        self.mesh = mesh
+        self.rules = MeshRules(self.cfg, self.pcfg, mesh)
+        self.pspecs = self.rules.param_specs()
+        self.ospecs = self.rules.opt_specs(self.pspecs)
+        abstract_batch = {
+            k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+            for k, v in SyntheticLMData(self.cfg, self.shape,
+                                        self.seed).batch_at(0).items()}
+        self.bspecs = self.rules.batch_specs(abstract_batch)
+        self.data = SyntheticLMData(self.cfg, self.shape, self.seed,
+                                    mesh=mesh, specs=self.bspecs)
+        step_fn = make_train_step(self.cfg, self.pcfg, self.rules,
+                                  peak_lr=self.peak_lr)
+        ns = lambda t: jax.tree.map(  # noqa: E731
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        self._jitted = jax.jit(
+            step_fn,
+            in_shardings=(ns(self.pspecs), ns(self.ospecs),
+                          ns(self.bspecs), NamedSharding(mesh, P())),
+        )
+
+    # -- state ------------------------------------------------------------
+    def init_state(self) -> None:
+        with self.mesh:
+            params = jax.jit(
+                lambda k: init_params(k, self.cfg),
+                out_shardings=jax.tree.map(
+                    lambda s: NamedSharding(self.mesh, s), self.pspecs,
+                    is_leaf=lambda x: isinstance(x, P)),
+            )(jax.random.key(self.seed))
+            opt = jax.jit(
+                lambda p: adamw_init(p, self.cfg.opt_state_dtype),
+                out_shardings=jax.tree.map(
+                    lambda s: NamedSharding(self.mesh, s), self.ospecs,
+                    is_leaf=lambda x: isinstance(x, P)),
+            )(params)
+        self.state = {"params": params, "opt": opt}
+        self.step = 0
+
+    def maybe_restore(self) -> bool:
+        if self.ckpt_dir is None:
+            return False
+        last = latest_step(self.ckpt_dir)
+        if last is None:
+            return False
+        template = {"params": R.abstract_params(self.cfg),
+                    "opt": jax.eval_shape(
+                        lambda p: adamw_init(p, self.cfg.opt_state_dtype),
+                        R.abstract_params(self.cfg))}
+        state, extra = restore(self.ckpt_dir, last, template,
+                               mesh=self.mesh)
+        self.state = state
+        self.step = int(extra["next_step"])
+        return True
+
+    def save_checkpoint(self) -> None:
+        if self.ckpt is None:
+            return
+        self.ckpt.save(self.step, self.state,
+                       specs={"params": self.pspecs, "opt": self.ospecs},
+                       extra={"next_step": self.step})
+        self.ckpt.wait()
+
+    # -- elastic resize / live migration ----------------------------------
+    def resize(self, new_mesh) -> None:
+        """Live-migrate the job onto a different mesh (the cluster-scale
+        analogue of the paper's cross-GPU kernel migration)."""
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  self.state)
+        old_step = self.step
+        self._bind_mesh(new_mesh)
+        # reshard through the neutral format
+        ns = lambda t: jax.tree.map(  # noqa: E731
+            lambda s: NamedSharding(new_mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        self.state = {
+            "params": jax.tree.map(jax.device_put, host_state["params"],
+                                   ns(self.pspecs)),
+            "opt": jax.tree.map(jax.device_put, host_state["opt"],
+                                ns(self.ospecs)),
+        }
+        self.step = old_step
+
+    # -- the loop -----------------------------------------------------------
+    def run(self, num_steps: int, *, checkpoint_every: int = 0,
+            preempt_flag: Optional[Callable[[], bool]] = None,
+            failure_at: Optional[int] = None,
+            straggler_factor: float = 3.0) -> TrainReport:
+        if self.state is None:
+            if not self.maybe_restore():
+                self.init_state()
+        report = TrainReport()
+        ema = None
+        target = self.step + num_steps
+        while self.step < target:
+            if failure_at is not None and self.step == failure_at:
+                raise SimulatedFailure(f"node lost at step {self.step}")
+            t0 = time.perf_counter()
+            batch = self.data.batch_at(self.step)
+            with self.mesh:
+                params, opt, metrics = self._jitted(
+                    self.state["params"], self.state["opt"], batch,
+                    jax.numpy.asarray(self.step, jax.numpy.int32))
+            loss = float(metrics["loss"])
+            self.state = {"params": params, "opt": opt}
+            self.step += 1
+            report.steps_run += 1
+            report.losses.append(loss)
+
+            dt = time.perf_counter() - t0
+            if ema is None:
+                ema = dt
+            elif dt > straggler_factor * ema:
+                report.straggler_events += 1
+            ema = 0.9 * ema + 0.1 * dt if ema else dt
+
+            if checkpoint_every and self.step % checkpoint_every == 0:
+                self.save_checkpoint()
+                report.checkpoints.append(self.step)
+            if preempt_flag is not None and preempt_flag():
+                # cooperative checkpoint at the step barrier, then stop
+                self.save_checkpoint()
+                report.preempted = True
+                break
+        return report

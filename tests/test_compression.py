@@ -1,0 +1,40 @@
+"""Gradient compression: error feedback keeps long-run updates unbiased."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.compression import (compress, compressed_bytes,
+                                     decompress, ef_init)
+
+
+def test_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)}
+    ef = ef_init(g)
+    q, ef2 = compress(g, ef)
+    back = decompress(q)
+    err = np.abs(np.asarray(back["w"]) - np.asarray(g["w"])).max()
+    scale = np.abs(np.asarray(g["w"])).max() / 127
+    assert err <= scale * 0.51 + 1e-6
+
+
+def test_error_feedback_cancels_bias():
+    """Sum of decompressed grads over many steps ≈ sum of true grads
+    (error feedback carries the residual forward)."""
+    rng = np.random.default_rng(1)
+    true_sum = np.zeros((32,), np.float32)
+    dec_sum = np.zeros((32,), np.float32)
+    ef = ef_init({"w": jnp.zeros(32)})
+    for _ in range(50):
+        g = {"w": jnp.asarray(rng.normal(size=32) * 0.01, jnp.float32)}
+        q, ef = compress(g, ef)
+        dec_sum += np.asarray(decompress(q)["w"])
+        true_sum += np.asarray(g["w"])
+    resid = np.abs(ef["w"]).max()
+    np.testing.assert_allclose(dec_sum, true_sum, atol=2 * resid + 1e-5)
+
+
+def test_compression_ratio():
+    g = {"w": jnp.ones((1024, 1024), jnp.float32)}
+    q, _ = compress(g, ef_init(g))
+    assert compressed_bytes(q) < g["w"].size * 4 / 3.9

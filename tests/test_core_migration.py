@@ -1,0 +1,143 @@
+"""Live-migration tests — the paper's §6.3 use case as a test suite.
+
+A kernel is paused at a barrier on backend A, its device-neutral snapshot is
+serialized, and execution resumes on backend B.  The final result must match
+a non-migrated run exactly (same traced fp semantics) or to fp tolerance
+(scalar interpreter's independent accumulation order).
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import Engine, HetSession, Snapshot, get_backend, migrate
+from repro.core import kernels_suite as suite
+
+RNG = np.random.default_rng(1)
+PAIRS = list(itertools.permutations(["interp", "vectorized", "pallas"], 2))
+
+
+def _mk_counter_args():
+    return {"State": RNG.normal(size=64).astype(np.float32), "iters": 6}
+
+
+@pytest.mark.parametrize("src,dst", PAIRS)
+def test_migrate_persistent_counter(src, dst):
+    prog, oracle = suite.persistent_counter()
+    args = _mk_counter_args()
+
+    # ground truth: non-migrated run
+    ref = Engine(prog, get_backend(src), 2, 32, dict(args))
+    assert ref.run()
+
+    # migrated run: pause mid-loop after 3 segments, resume elsewhere
+    eng = Engine(prog, get_backend(src), 2, 32, dict(args))
+    finished = eng.run(max_segments=3)
+    assert not finished, "should have paused mid-kernel"
+    snap = eng.snapshot()
+    blob = snap.to_bytes()  # serialize across the 'wire'
+    eng2 = Engine.resume(prog, get_backend(dst), Snapshot.from_bytes(blob))
+    assert eng2.run()
+
+    np.testing.assert_allclose(eng2.result("State"), ref.result("State"),
+                               rtol=1e-5, atol=1e-5)
+    # and both match the oracle
+    expect = oracle(dict(args))
+    np.testing.assert_allclose(eng2.result("State"), expect["State"],
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("src,dst", [("vectorized", "pallas"),
+                                     ("pallas", "interp")])
+def test_migrate_matmul_mid_tile(src, dst):
+    """The paper's §6.3 headline: iterative tiled matmul migrated midway."""
+    M, K, N, TK = 4, 32, 16, 8
+    A = RNG.normal(size=(M, K)).astype(np.float32)
+    B = RNG.normal(size=(K, N)).astype(np.float32)
+    args = {"A": A.reshape(-1), "B": B.reshape(-1),
+            "C": np.zeros(M * N, np.float32),
+            "K": K, "N": N, "ktiles": K // TK}
+    prog, oracle = suite.matmul_tiled(TK)
+
+    eng = Engine(prog, get_backend(src), M, N, dict(args))
+    assert not eng.run(max_segments=5)  # pause inside the k-tile loop
+    eng2 = Engine.resume(prog, get_backend(dst),
+                         Snapshot.from_bytes(eng.snapshot().to_bytes()))
+    assert eng2.run()
+    expect = oracle(dict(args))
+    np.testing.assert_allclose(eng2.result("C"), expect["C"],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_double_migration_chain():
+    """H100 -> AMD -> Tenstorrent in the paper; here
+    vectorized -> pallas -> interp."""
+    prog, oracle = suite.persistent_counter()
+    args = _mk_counter_args()
+    e1 = Engine(prog, get_backend("vectorized"), 2, 32, dict(args))
+    assert not e1.run(max_segments=2)
+    e2 = Engine.resume(prog, get_backend("pallas"), e1.snapshot())
+    assert not e2.run(max_segments=2)
+    e3 = Engine.resume(prog, get_backend("interp"), e2.snapshot())
+    assert e3.run()
+    expect = oracle(dict(args))
+    np.testing.assert_allclose(e3.result("State"), expect["State"],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pause_flag_cooperative_checkpoint():
+    """The paper's pause-flag protocol: flag set while running; kernel
+    stops at the next barrier, not immediately."""
+    prog, _ = suite.persistent_counter()
+    args = _mk_counter_args()
+    eng = Engine(prog, get_backend("vectorized"), 2, 32, dict(args))
+    calls = {"n": 0}
+
+    def flag():
+        calls["n"] += 1
+        return calls["n"] >= 2  # request pause after the second barrier
+
+    finished = eng.run(pause_flag=flag)
+    assert not finished
+    assert 0 < eng.node_idx < len(eng.nodes)
+
+
+def test_session_migrate_api():
+    """End-to-end through the HetSession abstraction layer (paper §4.3)."""
+    prog, oracle = suite.persistent_counter()
+    args = _mk_counter_args()
+
+    src = HetSession("vectorized")
+    dst = HetSession("pallas")
+    src.load_kernel(prog)
+    dst.load_kernel(prog)
+
+    src.pause_flag = False
+    rec = src.launch("persistent_counter", grid=2, block=32,
+                     args=dict(args), blocking=False)
+    # drive a few segments, then set the pause flag (cooperative checkpoint)
+    rec.engine.run(max_segments=3)
+    new_rec = migrate(rec, src, dst, "persistent_counter")
+    dst.run_to_completion(new_rec)
+    assert new_rec.finished
+
+    expect = oracle(dict(args))
+    np.testing.assert_allclose(new_rec.engine.result("State"),
+                               expect["State"], rtol=1e-4, atol=1e-4)
+    assert dst.stats["last_migration"]["payload_bytes"] > 0
+
+
+def test_snapshot_roundtrip_identity():
+    prog, _ = suite.persistent_counter()
+    args = _mk_counter_args()
+    eng = Engine(prog, get_backend("vectorized"), 2, 32, dict(args))
+    eng.run(max_segments=2)
+    snap = eng.snapshot()
+    back = Snapshot.from_bytes(snap.to_bytes())
+    assert back.node_idx == snap.node_idx
+    assert back.loop_counters == snap.loop_counters
+    assert set(back.regs) == set(snap.regs)
+    for k in snap.regs:
+        np.testing.assert_array_equal(back.regs[k], snap.regs[k])
+    for k in snap.globals_:
+        np.testing.assert_array_equal(back.globals_[k], snap.globals_[k])

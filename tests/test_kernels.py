@@ -1,0 +1,174 @@
+"""Per-kernel allclose tests: sweep shapes/dtypes in interpret mode against
+the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mlstm_chunk.kernel import mlstm_chunk_fwd
+from repro.kernels.mlstm_chunk.ref import mlstm_chunk_ref
+from repro.kernels.moe_gmm.kernel import moe_gmm_fwd
+from repro.kernels.moe_gmm.ref import moe_gmm_ref
+from repro.kernels.rglru_scan.kernel import rglru_scan_fwd
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,S,d", [(1, 1, 128, 64), (2, 2, 256, 64),
+                                     (1, 2, 384, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(B, H, S, d, causal, dtype):
+    q, k, v = (_rand((B, H, S, d), dtype) for _ in range(3))
+    out = flash_attention_fwd(q, k, v, causal=causal, bq=128, bk=128)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [64, 128, 999])
+def test_flash_attention_sliding_window(window):
+    B, H, S, d = 1, 2, 256, 64
+    q, k, v = (_rand((B, H, S, d)) for _ in range(3))
+    out = flash_attention_fwd(q, k, v, causal=True, window=window)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_uneven_tiles():
+    # S not a multiple of the block: masked tail keys must not contribute
+    B, H, S, d = 1, 1, 192, 64
+    q, k, v = (_rand((B, H, S, d)) for _ in range(3))
+    out = flash_attention_fwd(q, k, v, causal=True, bq=128, bk=128)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_grad_matches_ref():
+    B, H, S, d = 1, 1, 128, 64
+    q, k, v = (_rand((B, H, S, d)) for _ in range(3))
+
+    def loss_kernel(q, k, v):
+        return (flash_attention(q, k, v, True, None) ** 2).sum()
+
+    def loss_ref(q, k, v):
+        return (attention_ref(q, k, v, causal=True) ** 2).sum()
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# rglru scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,D", [(1, 128, 128), (2, 512, 256),
+                                   (1, 384, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan(B, S, D, dtype):
+    a = jnp.asarray(RNG.uniform(0.7, 0.999, (B, S, D)), dtype)
+    x = _rand((B, S, D), dtype, scale=0.1)
+    h0 = _rand((B, D), jnp.float32, scale=0.1)
+    h, hT = rglru_scan_fwd(a, x, h0)
+    h_ref, hT_ref = rglru_scan_ref(a, x, h0)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(h, np.float32),
+                               np.asarray(h_ref, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_ref),
+                               atol=tol, rtol=tol)
+
+
+def test_rglru_scan_time_tiling_invariance():
+    B, S, D = 1, 512, 128
+    a = jnp.asarray(RNG.uniform(0.8, 0.99, (B, S, D)), jnp.float32)
+    x = _rand((B, S, D), scale=0.1)
+    h0 = jnp.zeros((B, D), jnp.float32)
+    h1, _ = rglru_scan_fwd(a, x, h0, bs=64)
+    h2, _ = rglru_scan_fwd(a, x, h0, bs=256)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mlstm chunk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("BH,S,dk,dv", [(1, 128, 64, 64), (2, 256, 64, 128)])
+def test_mlstm_chunk(BH, S, dk, dv):
+    q = _rand((BH, S, dk), scale=0.5)
+    k = _rand((BH, S, dk), scale=0.5)
+    v = _rand((BH, S, dv), scale=0.5)
+    lf = jnp.asarray(np.log(RNG.uniform(0.9, 0.999, (BH, S, 1))),
+                     jnp.float32)
+    gi = jnp.asarray(RNG.uniform(0.1, 1.0, (BH, S, 1)), jnp.float32)
+    y, CT = mlstm_chunk_fwd(q, k, v, lf, gi, bt=64)
+    y_ref, CT_ref = mlstm_chunk_ref(q, k, v, lf, gi)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(CT), np.asarray(CT_ref),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_mlstm_chunk_tiling_invariance():
+    BH, S, dk, dv = 1, 256, 64, 64
+    q, k, v = (_rand((BH, S, d_), scale=0.5) for d_ in (dk, dk, dv))
+    lf = jnp.asarray(np.log(RNG.uniform(0.9, 0.999, (BH, S, 1))),
+                     jnp.float32)
+    gi = jnp.ones((BH, S, 1), jnp.float32)
+    y1, C1 = mlstm_chunk_fwd(q, k, v, lf, gi, bt=32)
+    y2, C2 = mlstm_chunk_fwd(q, k, v, lf, gi, bt=128)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# moe gmm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("E,C,D,F", [(4, 128, 128, 256), (8, 256, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gmm(E, C, D, F, dtype):
+    counts = jnp.asarray(RNG.integers(0, C + 1, size=E), jnp.int32)
+    x = _rand((E, C, D), dtype)
+    # contract: rows past counts[e] are zero
+    rows = jnp.arange(C)[None, :, None]
+    x = jnp.where(rows < counts[:, None, None], x, jnp.zeros_like(x))
+    w = _rand((E, D, F), dtype)
+    out = moe_gmm_fwd(x, w, counts)
+    ref = moe_gmm_ref(x, w, counts)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_moe_gmm_empty_experts_are_zero():
+    E, C, D, F = 4, 128, 64, 64
+    counts = jnp.asarray([0, 64, 0, 128], jnp.int32)
+    x = _rand((E, C, D))
+    rows = jnp.arange(C)[None, :, None]
+    x = jnp.where(rows < counts[:, None, None], x, jnp.zeros_like(x))
+    w = _rand((E, D, F))
+    out = np.asarray(moe_gmm_fwd(x, w, counts))
+    assert np.all(out[0] == 0)
+    assert np.all(out[2] == 0)

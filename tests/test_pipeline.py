@@ -1,0 +1,50 @@
+"""Pipeline-parallelism correctness: GPipe schedule over a mesh axis must
+match sequential layer application (subprocess with 4 host devices)."""
+import json
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.parallel.pipeline import pipeline_apply
+
+mesh = jax.make_mesh((4,), ("stage",))
+S, M, D = 4, 6, 16
+rng = np.random.default_rng(0)
+Ws = jnp.asarray(rng.normal(size=(S, D, D)) * 0.3, jnp.float32)
+bs = jnp.asarray(rng.normal(size=(S, D)) * 0.1, jnp.float32)
+mbs = jnp.asarray(rng.normal(size=(M, 8, D)), jnp.float32)
+
+def stage_fn(params, x):
+    W, b = params
+    return jnp.tanh(x @ W + b)
+
+out = pipeline_apply(stage_fn, mesh, "stage", (Ws, bs), mbs)
+
+# sequential reference
+ref = mbs
+for i in range(S):
+    ref = jnp.tanh(ref @ Ws[i] + bs[i])
+
+ok = bool(np.allclose(np.asarray(out), np.asarray(ref), atol=1e-5))
+print(json.dumps({"match": ok,
+                  "max_err": float(np.abs(np.asarray(out) - np.asarray(ref)).max())}))
+"""
+
+
+def test_gpipe_matches_sequential():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath("src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["match"], res

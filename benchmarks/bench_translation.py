@@ -1,8 +1,13 @@
 """Paper §6.2 — translation/JIT cost per backend (first launch vs cached).
 
 The paper reports 10-200 ms per kernel for PTX/SPIR-V/Metalium paths; here
-translation = staging hetIR segments through jax.jit (vectorized) or
-pl.pallas_call (pallas).
+translation = staging hetIR segments through the pass pipeline plus
+jax.jit (vectorized), pl.pallas_call (pallas), or closure staging (interp).
+Each (kernel, backend) pair gets a fresh shared
+:class:`~repro.core.cache.TranslationCache` and launches twice: the first
+launch pays translation (all misses), the relaunch must run entirely from
+cache (hit_rate > 0).  Rows also carry the pass-pipeline op reduction so
+the optimize-then-translate pipeline is visible in one table.
 """
 from __future__ import annotations
 
@@ -10,8 +15,25 @@ import time
 
 import numpy as np
 
-from repro.core import Engine, get_backend
+from repro.core import Engine, TranslationCache, get_backend
 from repro.core import kernels_suite as suite
+
+
+def _case(name, rng):
+    if name == "vadd":
+        return ({"A": rng.normal(size=128).astype(np.float32),
+                 "B": rng.normal(size=128).astype(np.float32),
+                 "C": np.zeros(128, np.float32), "n": 128}, 4, 32)
+    if name == "reduction":
+        return ({"A": rng.normal(size=128).astype(np.float32),
+                 "Out": np.zeros(1, np.float32), "n": 128,
+                 "log2t": 5}, 4, 32)
+    if name == "matmul_tiled":
+        return ({"A": np.ones(8 * 16, np.float32),
+                 "B": np.ones(16 * 16, np.float32),
+                 "C": np.zeros(8 * 16, np.float32),
+                 "K": 16, "N": 16, "ktiles": 2}, 8, 16)
+    return ({"Count": np.zeros(1, np.float32)}, 2, 32)
 
 
 def run() -> list:
@@ -19,41 +41,33 @@ def run() -> list:
     rng = np.random.default_rng(1)
     for name in ("vadd", "reduction", "matmul_tiled", "montecarlo_pi"):
         prog_fn = suite.SUITE[name]
-        for backend in ("vectorized", "pallas"):
+        for backend in ("interp", "vectorized", "pallas"):
             prog, _ = prog_fn()
-            be = get_backend(backend)
-            if name == "vadd":
-                args = {"A": rng.normal(size=128).astype(np.float32),
-                        "B": rng.normal(size=128).astype(np.float32),
-                        "C": np.zeros(128, np.float32), "n": 128}
-                grid, block = 4, 32
-            elif name == "reduction":
-                args = {"A": rng.normal(size=128).astype(np.float32),
-                        "Out": np.zeros(1, np.float32), "n": 128,
-                        "log2t": 5}
-                grid, block = 4, 32
-            elif name == "matmul_tiled":
-                args = {"A": np.ones(8 * 16, np.float32),
-                        "B": np.ones(16 * 16, np.float32),
-                        "C": np.zeros(8 * 16, np.float32),
-                        "K": 16, "N": 16, "ktiles": 2}
-                grid, block = 8, 16
-            else:
-                args = {"Count": np.zeros(1, np.float32)}
-                grid, block = 2, 32
+            args, grid, block = _case(name, rng)
+            cache = TranslationCache()
+            be = get_backend(backend, cache=cache)
 
             t0 = time.perf_counter()
             eng = Engine(prog, be, grid, block, dict(args))
             eng.run()
             first_ms = (time.perf_counter() - t0) * 1e3
+            misses_after_first = cache.stats()["misses"]
+
             t0 = time.perf_counter()
             eng2 = Engine(prog, be, grid, block, dict(args))
             eng2.run()
             cached_ms = (time.perf_counter() - t0) * 1e3
-            rows.append({"bench": "translation", "kernel": name,
-                         "backend": backend,
-                         "first_ms": round(first_ms, 1),
-                         "cached_ms": round(cached_ms, 1),
-                         "cache_entries":
-                         be.translation_cache_size()})
+
+            st = cache.stats()
+            opt = eng.opt_stats
+            rows.append({
+                "bench": "translation", "kernel": name, "backend": backend,
+                "first_ms": round(first_ms, 1),
+                "cached_ms": round(cached_ms, 1),
+                "cache_entries": be.translation_cache_size(),
+                "hits": st["hits"], "misses": st["misses"],
+                "hit_rate": round(st["hit_rate"], 3),
+                "relaunch_misses": st["misses"] - misses_after_first,
+                "ops_before": opt.ops_before, "ops_after": opt.ops_after,
+            })
     return rows

@@ -3,9 +3,14 @@
 # segmentation, device-neutral snapshots, and cross-backend live migration.
 from . import hetir
 from .backends import BACKENDS, get_backend
+from .cache import TranslationCache, global_cache
 from .engine import Engine
+from .passes import (DEFAULT_OPT_LEVEL, OPT_MAX, PipelineStats,
+                     get_optimized, optimize)
 from .runtime import HetSession, migrate
 from .state import Snapshot
 
 __all__ = ["hetir", "BACKENDS", "get_backend", "Engine", "HetSession",
-           "migrate", "Snapshot"]
+           "migrate", "Snapshot", "TranslationCache", "global_cache",
+           "optimize", "get_optimized", "PipelineStats", "OPT_MAX",
+           "DEFAULT_OPT_LEVEL"]

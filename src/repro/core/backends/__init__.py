@@ -9,6 +9,7 @@ Three targets, mirroring the paper's backend taxonomy:
 * :mod:`pallas_backend` — lowers each segment to a ``pl.pallas_call`` TPU
   kernel (the SIMT-hardware target; "each segment is a separate kernel").
 """
+from ..cache import TranslationCache
 from .interp import InterpBackend
 from .vectorized import VectorizedBackend
 from .pallas_backend import PallasBackend
@@ -20,5 +21,7 @@ BACKENDS = {
 }
 
 
-def get_backend(name: str):
-    return BACKENDS[name]()
+def get_backend(name: str, cache: TranslationCache = None):
+    """Instantiate a backend; ``cache`` overrides the process-wide shared
+    translation cache (tests pass a fresh one for counter isolation)."""
+    return BACKENDS[name](cache=cache)

@@ -8,11 +8,12 @@ for free.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from .. import hetir as ir
+from ..cache import TranslationCache, global_cache
 from ..segments import SegNode
 
 
@@ -22,6 +23,7 @@ class Launch:
     num_blocks: int
     block_size: int
     scalars: Dict[str, object] = field(default_factory=dict)
+    opt_level: int = 0  # pass-pipeline level the body was optimized at
 
 
 @dataclass
@@ -34,11 +36,32 @@ class HostState:
 class Backend:
     name = "abstract"
 
+    def __init__(self, cache: Optional[TranslationCache] = None):
+        # all backends share one translation cache (paper §4.2: "the runtime
+        # caches these translated kernels") unless handed a private one
+        self.cache = cache if cache is not None else global_cache()
+
     def run_segment(self, seg: SegNode, state: HostState,
                     launch: Launch) -> None:
         raise NotImplementedError
 
-    # Backends may cache per-segment compiled artifacts; exposed for the
+    def _cache_key(self, seg: SegNode, launch: Launch,
+                   *extra) -> Tuple:
+        """Content-addressed translation key: backend, program fingerprint,
+        opt level, segment index, plus backend-specific specialization."""
+        return (self.name, ir.program_fingerprint(launch.program),
+                launch.opt_level, seg.index) + tuple(extra)
+
+    # Cached per-segment compiled artifacts; exposed for the
     # translation-cost benchmark (the paper's JIT-cost table).
     def translation_cache_size(self) -> int:
-        return 0
+        return self.cache.size(self.name)
+
+    def cache_stats(self) -> Dict[str, object]:
+        return self.cache.stats()
+
+
+def scalar_signature(launch: Launch) -> Tuple:
+    """Uniform scalars as a hashable, dtype-insensitive key component
+    (scalars are baked into traced code as constants)."""
+    return tuple(sorted((k, float(v)) for k, v in launch.scalars.items()))

@@ -9,7 +9,7 @@ the implementations cross-check each other.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Callable, Dict, List, Sequence
 
 import numpy as np
 
@@ -21,9 +21,19 @@ from .base import Backend, HostState, Launch
 class InterpBackend(Backend):
     name = "interp"
 
+    def _translate(self, seg: SegNode, launch: Launch):
+        """"Translation" for the interpreter: stage the segment into a tree
+        of dispatch closures once, instead of re-walking the statement
+        structure on every block of every launch.  Geometry-independent, so
+        the key is just (backend, fingerprint, opt level, segment)."""
+        key = self._cache_key(seg, launch)
+        return self.cache.get_or_create(
+            key, lambda: _compile_stmts(seg.stmts))
+
     def run_segment(self, seg: SegNode, state: HostState,
                     launch: Launch) -> None:
         T = launch.block_size
+        plan = self._translate(seg, launch)
         # normalize to host numpy (previous segments may have run on a
         # jax-array backend — cross-backend migration mid-kernel)
         state.regs = {k: np.asarray(v) for k, v in state.regs.items()}
@@ -36,7 +46,7 @@ class InterpBackend(Backend):
                 regs = {k: v[b].copy() for k, v in state.regs.items()}
                 shared = state.shared[b] if state.shared is not None else None
                 ctx = _BlockCtx(b, T, launch, regs, shared, state.globals_)
-                _exec_stmts(seg.stmts, ctx, list(range(T)))
+                plan(ctx, list(range(T)))
                 for k, v in ctx.regs.items():
                     if k not in state.regs:
                         state.regs[k] = np.zeros(
@@ -65,26 +75,57 @@ class _BlockCtx:
         return self.regs[reg.name][t]
 
 
-def _exec_stmts(stmts: Sequence[ir.Stmt], ctx: _BlockCtx,
-                threads: List[int]) -> None:
-    if not threads:
-        return
+def _compile_stmts(stmts: Sequence[ir.Stmt]
+                   ) -> Callable[["_BlockCtx", List[int]], None]:
+    """Stage a segment body into nested closures: structural dispatch and
+    collective/scalar classification happen once at translation time."""
+    steps: List[Callable[["_BlockCtx", List[int]], None]] = []
     for s in stmts:
         if isinstance(s, ir.Op):
-            _exec_op(s, ctx, threads)
+            if s.opcode in ir.COLLECTIVE_OPS:
+                steps.append(lambda ctx, threads, s=s:
+                             _exec_collective(s, ctx, threads))
+            else:
+                steps.append(lambda ctx, threads, s=s:
+                             _exec_op(s, ctx, threads))
         elif isinstance(s, ir.Pred):
-            taken = [t for t in threads
-                     if bool(ctx.reg_read(s.cond, t))]
-            _exec_stmts(s.body, ctx, taken)  # divergence; implicit reconverge
+            inner = _compile_stmts(s.body)
+
+            def pred_step(ctx, threads, cond=s.cond, inner=inner):
+                taken = [t for t in threads
+                         if bool(ctx.reg_read(cond, t))]
+                if taken:  # divergence; implicit reconverge
+                    inner(ctx, taken)
+
+            steps.append(pred_step)
         elif isinstance(s, ir.Loop):
-            count = s.count if isinstance(s.count, int) \
-                else int(ctx.launch.scalars[s.count])
-            for it in range(count):
-                for t in threads:
-                    ctx.reg_write(s.var, t, it)
-                _exec_stmts(s.body, ctx, threads)
+            inner = _compile_stmts(s.body)
+
+            def loop_step(ctx, threads, loop=s, inner=inner):
+                count = loop.count if isinstance(loop.count, int) \
+                    else int(ctx.launch.scalars[loop.count])
+                for it in range(count):
+                    for t in threads:
+                        ctx.reg_write(loop.var, t, it)
+                    inner(ctx, threads)
+
+            steps.append(loop_step)
         elif isinstance(s, ir.Barrier):
             raise AssertionError("barrier inside segment")
+
+    def run(ctx: "_BlockCtx", threads: List[int]) -> None:
+        if not threads:
+            return
+        for step in steps:
+            step(ctx, threads)
+
+    return run
+
+
+def _exec_stmts(stmts: Sequence[ir.Stmt], ctx: _BlockCtx,
+                threads: List[int]) -> None:
+    """Uncached single-shot execution (kept for direct use in tests)."""
+    _compile_stmts(stmts)(ctx, threads)
 
 
 def _val(ctx: _BlockCtx, a, t: int):

@@ -32,8 +32,9 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from .. import hetir as ir
+from ..cache import TranslationCache
 from ..segments import SegNode
-from .base import Backend, HostState, Launch
+from .base import Backend, HostState, Launch, scalar_signature
 from .semantics import Env, eval_stmts
 
 
@@ -62,20 +63,20 @@ def _coalesced_buffers(seg: SegNode) -> set:
 class PallasBackend(Backend):
     name = "pallas"
 
-    def __init__(self, interpret: bool = True):
+    def __init__(self, interpret: bool = True,
+                 cache: "TranslationCache" = None):
+        super().__init__(cache)
         self.interpret = interpret
-        self._cache: Dict[Tuple, object] = {}
-
-    def translation_cache_size(self) -> int:
-        return len(self._cache)
 
     # ------------------------------------------------------------------
     def _translate(self, seg: SegNode, launch: Launch, reg_sig: Tuple,
                    glb_sig: Tuple, shared_sig):
-        key = (id(seg), launch.num_blocks, launch.block_size,
-               tuple(sorted(launch.scalars.items())), reg_sig, glb_sig,
-               shared_sig)
-        hit = self._cache.get(key)
+        # geometry, scalars, and the register/buffer shape+dtype signatures
+        # all specialize the emitted kernel, so they join the shared key
+        key = self._cache_key(seg, launch, launch.num_blocks,
+                              launch.block_size, scalar_signature(launch),
+                              reg_sig, glb_sig, shared_sig)
+        hit = self.cache.get(key)
         if hit is not None:
             return hit
 
@@ -189,8 +190,7 @@ class PallasBackend(Backend):
         meta = dict(reg_names=reg_names, new_regs=new_regs,
                     glb_names=glb_names, written=written_order,
                     has_shared=has_shared, coalesced=coalesced)
-        self._cache[key] = (jax.jit(call), meta)
-        return self._cache[key]
+        return self.cache.put(key, (jax.jit(call), meta))
 
     # ------------------------------------------------------------------
     def run_segment(self, seg: SegNode, state: HostState,

@@ -9,29 +9,22 @@ cache (paper §4.2 "the runtime caches these translated kernels").
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
-
 import jax
-import numpy as np
 
 from ..segments import SegNode
-from .base import Backend, HostState, Launch
+from .base import Backend, HostState, Launch, scalar_signature
 from .semantics import Env, eval_stmts
 
 
 class VectorizedBackend(Backend):
     name = "vectorized"
 
-    def __init__(self):
-        self._cache: Dict[Tuple, object] = {}
-
-    def translation_cache_size(self) -> int:
-        return len(self._cache)
-
     def _translate(self, seg: SegNode, launch: Launch):
-        key = (id(seg), launch.num_blocks, launch.block_size,
-               tuple(sorted(launch.scalars.items())))
-        fn = self._cache.get(key)
+        # content-addressed (fingerprint, not object identity): rebuilding
+        # an identical program still hits the shared cache
+        key = self._cache_key(seg, launch, launch.num_blocks,
+                              launch.block_size, scalar_signature(launch))
+        fn = self.cache.get(key)
         if fn is not None:
             return fn
 
@@ -45,8 +38,7 @@ class VectorizedBackend(Backend):
             eval_stmts(seg.stmts, env, mask=None)
             return env.regs, env.shared, env.globals
 
-        self._cache[key] = run
-        return run
+        return self.cache.put(key, run)
 
     def run_segment(self, seg: SegNode, state: HostState,
                     launch: Launch) -> None:

@@ -1,0 +1,102 @@
+"""Shared translation cache (paper §4.2, Module Loading and JIT).
+
+The paper's runtime JIT-translates each hetIR segment to the target's
+native code and "caches these translated kernels, so subsequent launches of
+the same kernel do not pay the translation cost again."  The seed runtime
+gave every backend its own ad-hoc ``_cache`` dict keyed on segment object
+identity, so translations were lost whenever a program was rebuilt and
+could never be observed or bounded.  :class:`TranslationCache` replaces
+those: one process-wide LRU, shared by every backend, keyed on
+
+    ``(backend name, program fingerprint, opt level, segment index, ...)``
+
+where the fingerprint is :func:`repro.core.hetir.program_fingerprint` — a
+content hash, so structurally identical programs built independently share
+translations.  Backends append whatever else their codegen specializes on
+(launch geometry, uniform scalars, register/buffer signatures), which is
+exactly what makes a relaunch hit and a geometry or dtype change miss.
+
+Hit/miss/eviction counters are surfaced through
+``HetSession.cache_stats()`` and ``benchmarks/bench_translation.py``.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Hashable, Optional
+
+
+class TranslationCache:
+    """Thread-safe LRU cache for per-segment translated kernels."""
+
+    def __init__(self, capacity: int = 1024):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------------
+    def get(self, key: Hashable) -> Optional[Any]:
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return self._entries[key]
+            self.misses += 1
+            return None
+
+    def put(self, key: Hashable, value: Any) -> Any:
+        with self._lock:
+            self._entries[key] = value
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+        return value
+
+    def get_or_create(self, key: Hashable, factory: Callable[[], Any]) -> Any:
+        """Lookup; on miss, run ``factory`` (the translation) and cache."""
+        value = self.get(key)
+        if value is None:
+            value = self.put(key, factory())
+        return value
+
+    # ------------------------------------------------------------------
+    def size(self, backend: Optional[str] = None) -> int:
+        """Entry count, optionally restricted to one backend's keys (every
+        backend key leads with the backend name)."""
+        with self._lock:
+            if backend is None:
+                return len(self._entries)
+            return sum(1 for k in self._entries
+                       if isinstance(k, tuple) and k and k[0] == backend)
+
+    def stats(self) -> Dict[str, object]:
+        with self._lock:
+            lookups = self.hits + self.misses
+            return {
+                "entries": len(self._entries),
+                "capacity": self.capacity,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": (self.hits / lookups) if lookups else 0.0,
+            }
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.hits = self.misses = self.evictions = 0
+
+
+# process-wide default: sessions and backends share translations unless
+# handed an explicit cache (tests inject fresh instances for isolation)
+_GLOBAL_CACHE = TranslationCache()
+
+
+def global_cache() -> TranslationCache:
+    return _GLOBAL_CACHE

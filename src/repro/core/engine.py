@@ -16,6 +16,7 @@ import numpy as np
 
 from . import hetir as ir
 from .backends.base import Backend, HostState, Launch
+from .passes import DEFAULT_OPT_LEVEL, OPT_MAX, get_optimized
 from .segments import LoopEnd, LoopStart, Node, SegNode, segment_program
 from .state import Snapshot
 
@@ -23,19 +24,30 @@ from .state import Snapshot
 class Engine:
     def __init__(self, program: ir.Program, backend: Backend,
                  num_blocks: int, block_size: int,
-                 args: Dict[str, object], _from_snapshot: bool = False):
+                 args: Dict[str, object], opt_level: int = None,
+                 _from_snapshot: bool = False):
         program.validate()
-        self.program = program
+        self.opt_level = DEFAULT_OPT_LEVEL if opt_level is None \
+            else max(0, min(int(opt_level), OPT_MAX))
+        self.source_program = program
+        # run the pass pipeline before translation (paper §4.2: the runtime
+        # "dynamically translates this IR to the target GPU's native code" —
+        # every backend then consumes the same optimized body).  Memoized per
+        # (program, level) so segmentation and fingerprints stay stable.
+        opt_prog, self.opt_stats = get_optimized(program, self.opt_level)
+        self.program = opt_prog
         self.backend = backend
-        # segmentation is memoized on the Program so SegNode identities are
-        # stable across launches — the backends' translation caches key on
-        # them (paper §4.2: "the runtime caches these translated kernels")
-        nodes = getattr(program, "_nodes_cache", None)
+        # segmentation is memoized on the (optimized) Program so SegNode
+        # identities are stable across launches — the shared translation
+        # cache keys on the program fingerprint + segment index
+        # (paper §4.2: "the runtime caches these translated kernels")
+        nodes = getattr(opt_prog, "_nodes_cache", None)
         if nodes is None:
-            nodes = segment_program(program)
-            program._nodes_cache = nodes
+            nodes = segment_program(opt_prog)
+            opt_prog._nodes_cache = nodes
         self.nodes = nodes
-        self.launch = Launch(program, num_blocks, block_size, scalars={})
+        self.launch = Launch(opt_prog, num_blocks, block_size, scalars={},
+                             opt_level=self.opt_level)
         self.node_idx = 0
         self.loop_counters: Dict[int, int] = {}
         self.finished = False
@@ -141,6 +153,7 @@ class Engine:
             num_blocks=self.launch.num_blocks,
             block_size=self.launch.block_size,
             node_idx=self.node_idx,
+            opt_level=self.opt_level,
             loop_counters=dict(self.loop_counters),
             regs={k: np.asarray(v).copy()
                   for k, v in self.state.regs.items()},
@@ -159,8 +172,11 @@ class Engine:
         if snap.program_name != program.name:
             raise ValueError(
                 f"snapshot is for {snap.program_name!r}, not {program.name!r}")
+        # re-optimize at the snapshot's level: node indices are positions in
+        # the *optimized* segmented program, and the pipeline is
+        # deterministic, so the destination sees the same node list
         eng = cls(program, backend, snap.num_blocks, snap.block_size,
-                  args={}, _from_snapshot=True)
+                  args={}, opt_level=snap.opt_level, _from_snapshot=True)
         eng.launch.scalars = dict(snap.scalars)
         eng.node_idx = snap.node_idx
         eng.loop_counters = dict(snap.loop_counters)

@@ -25,8 +25,9 @@ and atomics, persistent iterative kernels).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -628,3 +629,141 @@ def body_uses_shared(body: Sequence[Stmt]) -> bool:
         return False
 
     return walk(body)
+
+
+# --------------------------------------------------------------------------
+# Body rewriting helpers (used by the optimization passes in passes.py)
+# --------------------------------------------------------------------------
+
+
+def walk_ops(body: Sequence[Stmt]):
+    """Yield every :class:`Op` in ``body`` in program order, recursively."""
+    for s in body:
+        if isinstance(s, Op):
+            yield s
+        elif isinstance(s, (Pred, Loop)):
+            yield from walk_ops(s.body)
+
+
+def count_ops(body: Sequence[Stmt]) -> int:
+    """Static op count (Pred/Loop/Barrier structure nodes not counted)."""
+    return sum(1 for _ in walk_ops(body))
+
+
+def rewrite_body(body: Sequence[Stmt],
+                 fn: Callable[[Op], Union[Op, List[Stmt], None]]
+                 ) -> List[Stmt]:
+    """Structure-preserving rewrite: ``fn`` maps each op to a replacement op,
+    a list of statements, or ``None`` (delete).  Pred/Loop/Barrier nodes are
+    rebuilt around the rewritten bodies."""
+    out: List[Stmt] = []
+    for s in body:
+        if isinstance(s, Op):
+            r = fn(s)
+            if r is None:
+                continue
+            out.extend(r if isinstance(r, list) else [r])
+        elif isinstance(s, Pred):
+            out.append(Pred(s.cond, rewrite_body(s.body, fn)))
+        elif isinstance(s, Loop):
+            out.append(Loop(s.var, s.count, rewrite_body(s.body, fn)))
+        else:
+            out.append(s)
+    return out
+
+
+def reg_def_counts(body: Sequence[Stmt]) -> Dict[str, int]:
+    """How many ops (or loop headers) define each register name.  A count of
+    one means true SSA; ``Builder.assign`` re-targets give counts > 1."""
+    counts: Dict[str, int] = {}
+
+    def walk(stmts):
+        for s in stmts:
+            if isinstance(s, Op):
+                if s.dest is not None:
+                    counts[s.dest.name] = counts.get(s.dest.name, 0) + 1
+            elif isinstance(s, Pred):
+                walk(s.body)
+            elif isinstance(s, Loop):
+                counts[s.var.name] = counts.get(s.var.name, 0) + 1
+                walk(s.body)
+
+    walk(body)
+    return counts
+
+
+def reg_use_counts(body: Sequence[Stmt]) -> Dict[str, int]:
+    """How many times each register name is read (op args + @PRED conds)."""
+    counts: Dict[str, int] = {}
+
+    def walk(stmts):
+        for s in stmts:
+            if isinstance(s, Op):
+                for r in s.arg_regs():
+                    counts[r.name] = counts.get(r.name, 0) + 1
+            elif isinstance(s, Pred):
+                counts[s.cond.name] = counts.get(s.cond.name, 0) + 1
+                walk(s.body)
+            elif isinstance(s, Loop):
+                walk(s.body)
+
+    walk(body)
+    return counts
+
+
+# --------------------------------------------------------------------------
+# Stable program fingerprinting (translation-cache keys, paper §4.2)
+# --------------------------------------------------------------------------
+
+
+def _fingerprint_tokens(body: Sequence[Stmt], emit) -> None:
+    for s in body:
+        if isinstance(s, Op):
+            emit("op"); emit(s.opcode)
+            if s.dest is None:
+                emit("-")
+            else:
+                emit(f"%{s.dest.name}:{s.dest.dtype}:{int(s.dest.uniform)}")
+            for a in s.args:
+                if isinstance(a, Reg):
+                    emit(f"r%{a.name}:{a.dtype}:{int(a.uniform)}")
+                else:
+                    emit(f"i{type(a).__name__}:{a!r}")
+            for k in sorted(s.attrs):
+                emit(f"a{k}={s.attrs[k]!r}")
+        elif isinstance(s, Pred):
+            emit(f"pred %{s.cond.name}:{s.cond.dtype}")
+            _fingerprint_tokens(s.body, emit)
+            emit("endpred")
+        elif isinstance(s, Loop):
+            emit(f"loop %{s.var.name}:{s.var.dtype} {s.count!r}")
+            _fingerprint_tokens(s.body, emit)
+            emit("endloop")
+        elif isinstance(s, Barrier):
+            emit(f"bar {s.label}")
+
+
+def program_fingerprint(prog: Program) -> str:
+    """Stable content hash of a program — the translation-cache key
+    component (paper §4.2: translated kernels are cached and "reused on
+    subsequent launches").  Two independently built but structurally
+    identical programs fingerprint equal; any change to params, shared
+    memory, or the body changes the digest."""
+    cached = prog.__dict__.get("_fingerprint")
+    if cached is not None:
+        return cached
+    h = hashlib.sha256()
+
+    def emit(tok: str) -> None:
+        h.update(tok.encode())
+        h.update(b"\x00")
+
+    emit(prog.name)
+    for p in prog.params:
+        kind = "ptr" if isinstance(p, Ptr) else "scalar"
+        emit(f"{kind}:{p.name}:{p.dtype}")
+    emit(f"shared:{prog.shared_size}:{prog.shared_dtype}")
+    _fingerprint_tokens(prog.body, emit)
+    fp = h.hexdigest()
+    prog.__dict__["_fingerprint"] = fp
+    return fp

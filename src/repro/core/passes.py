@@ -1,0 +1,658 @@
+"""hetIR optimization-pass pipeline (paper §4.2, Dynamic Translation).
+
+The paper's runtime "dynamically translates this IR to the target GPU's
+native code" and "caches these translated kernels" — before translation it
+is free to canonicalize the IR, and because every backend consumes the same
+optimized body, one mid-level pipeline pays off on *all* targets at once
+(and shrinks the migration payload: dead registers never enter the
+snapshot's live set, the paper's §8 "only saving live registers"
+optimization).
+
+Passes (all semantics-preserving, verified bit-identical at every opt level
+by ``tests/test_passes.py``):
+
+* **constant folding** — ALU/compare/select ops over known constants become
+  ``CONST``; evaluation uses the exact numpy dtype semantics of the
+  interpreter backend so folded values are bit-identical to runtime values.
+  Transcendentals (``SQRT``/``EXP``) are never folded: their libm results
+  may differ between numpy (fold time) and XLA (run time) by an ULP.
+* **predicate simplification** — ``@PRED(const true)`` regions are spliced
+  inline, ``@PRED(const false)`` regions are dropped, empty regions and
+  redundant same-condition nests are removed.
+* **barrier-aware invariant hoisting** — pure register ops whose inputs are
+  loop-invariant move out of ``LOOP`` bodies (across BARRIERs, which only
+  order *memory*; register ops may legally cross them — memory ops and
+  collectives never move).
+* **uniform duplicate merging** — dominator-scoped value numbering merges
+  re-emitted constants / param loads / identity reads (the Builder emits a
+  fresh ``CONST`` per mention).
+* **FMA fusion** — single-use ``MUL`` feeding an ``ADD`` in the same region
+  fuses to ``FMA``.  All backends evaluate ``FMA`` as unfused ``a*b + c``,
+  so fusion is bit-exact.
+* **dead-code elimination** — pure ops whose dests are never read, and the
+  empty control regions they leave behind, are deleted.
+
+Entry point: :func:`optimize`, wired into :class:`~repro.core.engine.Engine`
+so every backend translates the optimized body; per-pass statistics are
+returned in :class:`PipelineStats` and surfaced through
+``HetSession.stats`` and ``benchmarks/bench_translation.py``.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import hetir as ir
+
+# --------------------------------------------------------------------------
+# Opcode classification
+# --------------------------------------------------------------------------
+
+# ops with observable effects beyond their dest register — never removed,
+# never moved
+SIDE_EFFECT_OPS = {ir.ST_GLOBAL, ir.ST_SHARED, ir.ATOMIC_ADD}
+
+_IDENTITY_OPS = {ir.GET_GLOBAL_ID, ir.GET_BLOCK_ID, ir.GET_THREAD_ID,
+                 ir.GET_BLOCK_DIM, ir.GET_NUM_BLOCKS}
+
+# pure register ops that may be hoisted across barriers (barriers order
+# memory, not registers) and out of predicate regions (writing a dead lane's
+# register early is unobservable — only stores are masked).  DIV/MOD are
+# excluded so hoisting can never introduce a divide-by-zero that the source
+# program guarded with a predicate or zero-trip loop.
+HOISTABLE_OPS = (_IDENTITY_OPS
+                 | {ir.CONST, ir.LD_PARAM, ir.MOV, ir.CVT, ir.SELECT, ir.FMA}
+                 | ir.ALU_UNARY
+                 | (ir.ALU_BINARY - {ir.DIV, ir.MOD})
+                 | ir.CMP_OPS)
+
+# value-numberable ops for duplicate merging: pure, thread-deterministic,
+# no memory or active-mask dependence
+_CSE_OPS = (_IDENTITY_OPS
+            | {ir.CONST, ir.LD_PARAM, ir.CVT, ir.SELECT, ir.FMA}
+            | ir.ALU_UNARY | ir.ALU_BINARY | ir.CMP_OPS) - {ir.MOV}
+
+
+def _is_pure(opcode: str) -> bool:
+    return opcode not in SIDE_EFFECT_OPS
+
+
+# --------------------------------------------------------------------------
+# Statistics
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class PipelineStats:
+    """Per-pass change counters for one :func:`optimize` run."""
+
+    level: int = 0
+    ops_before: int = 0
+    ops_after: int = 0
+    iterations: int = 0
+    per_pass: Dict[str, int] = field(default_factory=dict)
+
+    def record(self, pass_name: str, n: int) -> None:
+        self.per_pass[pass_name] = self.per_pass.get(pass_name, 0) + n
+
+    @property
+    def ops_removed(self) -> int:
+        return self.ops_before - self.ops_after
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"level": self.level, "ops_before": self.ops_before,
+                "ops_after": self.ops_after, "ops_removed": self.ops_removed,
+                "iterations": self.iterations, "per_pass": dict(self.per_pass)}
+
+
+# --------------------------------------------------------------------------
+# Constant folding
+# --------------------------------------------------------------------------
+
+def _fold_div(a, b):
+    if isinstance(a, (np.floating, float)):
+        return a / b
+    return a // b
+
+
+def _fold_bitop(fi, fb):
+    def f(a, b):
+        if isinstance(a, (bool, np.bool_)):
+            return fb(a, b)
+        return fi(a, b)
+    return f
+
+
+# exact-arithmetic folding tables, matching the interpreter backend's scalar
+# semantics op for op (and jnp's IEEE semantics for +,-,*,/ on f32)
+_FOLD_BIN = {
+    ir.ADD: lambda a, b: a + b,
+    ir.SUB: lambda a, b: a - b,
+    ir.MUL: lambda a, b: a * b,
+    ir.DIV: _fold_div,
+    ir.MOD: lambda a, b: a % b,
+    ir.MIN: min,
+    ir.MAX: max,
+    ir.AND: _fold_bitop(lambda a, b: a & b, lambda a, b: a and b),
+    ir.OR: _fold_bitop(lambda a, b: a | b, lambda a, b: a or b),
+    ir.XOR: _fold_bitop(lambda a, b: a ^ b,
+                        lambda a, b: bool(a) != bool(b)),
+    ir.SHL: lambda a, b: a << b,
+    ir.SHR: lambda a, b: a >> b,
+    ir.LT: lambda a, b: a < b,
+    ir.LE: lambda a, b: a <= b,
+    ir.GT: lambda a, b: a > b,
+    ir.GE: lambda a, b: a >= b,
+    ir.EQ: lambda a, b: a == b,
+    ir.NE: lambda a, b: a != b,
+}
+
+_FOLD_UN = {
+    ir.NEG: lambda a: -a,
+    ir.ABS: abs,
+    ir.NOT: lambda a: (not a) if isinstance(a, (bool, np.bool_)) else ~a,
+    ir.MOV: lambda a: a,
+}
+
+
+def fold_constants(body: List[ir.Stmt], prog: ir.Program
+                   ) -> Tuple[List[ir.Stmt], int]:
+    """Replace ops whose inputs are all known constants with ``CONST``.
+    Constant visibility is scoped to the structured region tree, so a value
+    defined under a predicate or loop never folds into code outside it."""
+    defs = ir.reg_def_counts(body)
+    consts: Dict[str, object] = {}
+    n = [0]
+
+    def try_fold(op: ir.Op) -> ir.Op:
+        d = op.dest
+        if d is None or defs.get(d.name, 0) != 1:
+            return op
+        if op.opcode == ir.CONST:
+            consts[d.name] = ir.np_dtype(d.dtype).type(op.args[0])
+            return op
+        foldable = (op.opcode in _FOLD_BIN or op.opcode in _FOLD_UN
+                    or op.opcode in (ir.CVT, ir.SELECT, ir.FMA))
+        if not foldable:
+            return op
+        vals = []
+        for a in op.args:
+            if isinstance(a, ir.Reg):
+                if a.name not in consts:
+                    return op
+                vals.append(consts[a.name])
+            else:
+                vals.append(a)
+        try:
+            with np.errstate(all="ignore"):
+                if op.opcode in (ir.SHL, ir.SHR) and not (
+                        0 <= int(vals[1]) < 32):
+                    return op  # out-of-width shifts differ numpy vs XLA
+                if op.opcode in (ir.MIN, ir.MAX) and any(
+                        isinstance(v, (np.floating, float))
+                        and np.isnan(v) for v in vals):
+                    return op  # NaN min/max differs across backends
+                if op.opcode in _FOLD_BIN:
+                    v = _FOLD_BIN[op.opcode](*vals)
+                elif op.opcode in _FOLD_UN:
+                    v = _FOLD_UN[op.opcode](*vals)
+                elif op.opcode == ir.CVT:
+                    v = vals[0]
+                    # float -> int of an out-of-range/NaN value is
+                    # backend-dependent (numpy vs XLA): never fold it
+                    if isinstance(v, (np.floating, float)) \
+                            and d.dtype in (ir.I32, ir.U32):
+                        info = np.iinfo(ir.np_dtype(d.dtype))
+                        if not (np.isfinite(v)
+                                and info.min <= v <= info.max):
+                            return op
+                elif op.opcode == ir.SELECT:
+                    v = vals[1] if bool(vals[0]) else vals[2]
+                else:  # FMA — two exact f32 ops, same as every backend
+                    v = vals[0] * vals[1] + vals[2]
+            v = ir.np_dtype(d.dtype).type(v)
+        except (ZeroDivisionError, OverflowError, TypeError, ValueError):
+            return op
+        consts[d.name] = v
+        n[0] += 1
+        return ir.Op(ir.CONST, d, (v.item(),))
+
+    def walk(stmts: Sequence[ir.Stmt]) -> List[ir.Stmt]:
+        out: List[ir.Stmt] = []
+        for s in stmts:
+            if isinstance(s, ir.Op):
+                out.append(try_fold(s))
+            elif isinstance(s, ir.Pred):
+                out.append(ir.Pred(s.cond, scoped(s.body)))
+            elif isinstance(s, ir.Loop):
+                out.append(ir.Loop(s.var, s.count, scoped(s.body)))
+            else:
+                out.append(s)
+        return out
+
+    def scoped(stmts: Sequence[ir.Stmt]) -> List[ir.Stmt]:
+        outer = set(consts)
+        out = walk(stmts)
+        for k in list(consts):
+            if k not in outer:
+                del consts[k]
+        return out
+
+    return walk(body), n[0]
+
+
+# --------------------------------------------------------------------------
+# Predicate simplification
+# --------------------------------------------------------------------------
+
+
+def simplify_predicates(body: List[ir.Stmt], prog: ir.Program
+                        ) -> Tuple[List[ir.Stmt], int]:
+    """Splice always-true @PRED regions, drop always-false and empty ones,
+    flatten redundant same-condition nests, and remove dead zero-trip
+    constant loops.  Constant-condition visibility is scoped to the region
+    tree: a CONST defined under some other predicate is only conditionally
+    written at level 0 (the interp backend masks register writes), so it
+    must never simplify a predicate outside its region."""
+    defs = ir.reg_def_counts(body)
+    uses = ir.reg_use_counts(body)
+    const_bools: Dict[str, bool] = {}
+    n = [0]
+
+    def walk(stmts: Sequence[ir.Stmt]) -> List[ir.Stmt]:
+        out: List[ir.Stmt] = []
+        for s in stmts:
+            if isinstance(s, ir.Op):
+                if (s.opcode == ir.CONST and s.dest is not None
+                        and s.dest.dtype == ir.BOOL
+                        and defs.get(s.dest.name, 0) == 1):
+                    const_bools[s.dest.name] = bool(s.args[0])
+                out.append(s)
+                continue
+            if isinstance(s, ir.Pred):
+                inner = scoped(s.body)
+                if not inner:
+                    n[0] += 1
+                elif s.cond.name in const_bools:
+                    n[0] += 1
+                    if const_bools[s.cond.name]:
+                        # uniform-true predicate: the active set inside
+                        # equals the enclosing one, so splicing is exact
+                        out.extend(inner)
+                elif (len(inner) == 1 and isinstance(inner[0], ir.Pred)
+                        and inner[0].cond.name == s.cond.name):
+                    n[0] += 1
+                    out.append(ir.Pred(s.cond, inner[0].body))
+                else:
+                    out.append(ir.Pred(s.cond, inner))
+            elif isinstance(s, ir.Loop):
+                inner = scoped(s.body)
+                dead = (isinstance(s.count, int) and s.count <= 0) \
+                    or not inner
+                if dead and uses.get(s.var.name, 0) == 0:
+                    n[0] += 1
+                else:
+                    out.append(ir.Loop(s.var, s.count, inner))
+            else:
+                out.append(s)
+        return out
+
+    def scoped(stmts: Sequence[ir.Stmt]) -> List[ir.Stmt]:
+        outer = set(const_bools)
+        out = walk(stmts)
+        for k in list(const_bools):
+            if k not in outer:
+                del const_bools[k]
+        return out
+
+    return walk(body), n[0]
+
+
+# --------------------------------------------------------------------------
+# Barrier-aware loop-invariant hoisting
+# --------------------------------------------------------------------------
+
+
+def hoist_invariants(body: List[ir.Stmt], prog: ir.Program
+                     ) -> Tuple[List[ir.Stmt], int]:
+    """Move pure ops whose inputs are defined entirely outside a loop to
+    just before that loop.  Hoisting crosses barrier segment boundaries —
+    sound for register-only ops, since barriers synchronize memory, not
+    registers; the op computes the same value every iteration either way.
+    Ops under a @PRED never move: the interp backend masks register writes
+    per-thread, so unconditionalizing a write is observable there."""
+    defs = ir.reg_def_counts(body)
+    n = [0]
+
+    def inside_names(stmts: Sequence[ir.Stmt]) -> set:
+        names = set()
+        for s in stmts:
+            if isinstance(s, ir.Op):
+                if s.dest is not None:
+                    names.add(s.dest.name)
+            elif isinstance(s, ir.Pred):
+                names |= inside_names(s.body)
+            elif isinstance(s, ir.Loop):
+                names.add(s.var.name)
+                names |= inside_names(s.body)
+        return names
+
+    def extract(stmts: Sequence[ir.Stmt], inside: set,
+                hoisted: List[ir.Stmt]) -> List[ir.Stmt]:
+        out: List[ir.Stmt] = []
+        for s in stmts:
+            if isinstance(s, ir.Op):
+                if (s.opcode in HOISTABLE_OPS and s.dest is not None
+                        and defs.get(s.dest.name, 0) == 1
+                        and all(r.name not in inside
+                                for r in s.arg_regs())):
+                    hoisted.append(s)
+                    inside.discard(s.dest.name)
+                    n[0] += 1
+                else:
+                    out.append(s)
+            elif isinstance(s, ir.Loop):
+                # hoisting through a nested loop is fine (its body runs
+                # unconditionally for all threads); through a @PRED is not
+                out.append(ir.Loop(s.var, s.count,
+                                   extract(s.body, inside, hoisted)))
+            else:
+                out.append(s)
+        return out
+
+    def process(stmts: Sequence[ir.Stmt]) -> List[ir.Stmt]:
+        out: List[ir.Stmt] = []
+        for s in stmts:
+            if isinstance(s, ir.Loop):
+                inner = process(s.body)
+                inside = inside_names(inner) | {s.var.name}
+                while True:
+                    hoisted: List[ir.Stmt] = []
+                    inner = extract(inner, inside, hoisted)
+                    if not hoisted:
+                        break
+                    out.extend(hoisted)
+                out.append(ir.Loop(s.var, s.count, inner))
+            elif isinstance(s, ir.Pred):
+                out.append(ir.Pred(s.cond, process(s.body)))
+            else:
+                out.append(s)
+        return out
+
+    return process(body), n[0]
+
+
+# --------------------------------------------------------------------------
+# Uniform duplicate merging (dominator-scoped value numbering)
+# --------------------------------------------------------------------------
+
+
+def merge_duplicates(body: List[ir.Stmt], prog: ir.Program
+                     ) -> Tuple[List[ir.Stmt], int]:
+    """Merge re-emitted identical pure ops (the Builder emits a fresh CONST
+    per mention) via value numbering scoped to the structured-region tree,
+    so a merge target always dominates the duplicate it replaces.
+
+    A duplicate nested under a @PRED is only merged when every use of its
+    dest lies inside that same predicate region: at level 0 the interp
+    backend writes the dup's register only for active threads, so a read
+    outside the region would observe the rename."""
+    defs = ir.reg_def_counts(body)
+    rename: Dict[str, ir.Reg] = {}
+    table: Dict[Tuple, ir.Reg] = {}
+    n = [0]
+
+    # pred-ancestor chains (tuples of Pred object ids) for every reg use
+    use_chains: Dict[str, List[Tuple[int, ...]]] = {}
+
+    def collect_uses(stmts: Sequence[ir.Stmt],
+                     chain: Tuple[int, ...]) -> None:
+        for s in stmts:
+            if isinstance(s, ir.Op):
+                for r in s.arg_regs():
+                    use_chains.setdefault(r.name, []).append(chain)
+            elif isinstance(s, ir.Pred):
+                use_chains.setdefault(s.cond.name, []).append(chain)
+                collect_uses(s.body, chain + (id(s),))
+            elif isinstance(s, ir.Loop):
+                collect_uses(s.body, chain)
+
+    collect_uses(body, ())
+
+    def uses_confined(name: str, chain: Tuple[int, ...]) -> bool:
+        return all(uc[:len(chain)] == chain
+                   for uc in use_chains.get(name, []))
+
+    def key_of(op: ir.Op) -> Optional[Tuple]:
+        if (op.opcode not in _CSE_OPS or op.dest is None
+                or defs.get(op.dest.name, 0) != 1):
+            return None
+        parts: List[object] = [op.opcode, op.dest.dtype, op.dest.uniform]
+        for a in op.args:
+            if isinstance(a, ir.Reg):
+                if defs.get(a.name, 0) != 1:
+                    return None  # value varies across redefinitions
+                parts.append(("r", a.name, a.dtype))
+            else:
+                parts.append(("i", type(a).__name__, repr(a)))
+        for k in sorted(op.attrs):
+            parts.append(("a", k, repr(op.attrs[k])))
+        return tuple(parts)
+
+    def sub(a):
+        return rename.get(a.name, a) if isinstance(a, ir.Reg) else a
+
+    def walk(stmts: Sequence[ir.Stmt],
+             chain: Tuple[int, ...]) -> List[ir.Stmt]:
+        marks: List[Tuple] = []
+        out: List[ir.Stmt] = []
+        for s in stmts:
+            if isinstance(s, ir.Op):
+                args = tuple(sub(a) for a in s.args)
+                op = s if args == s.args else \
+                    ir.Op(s.opcode, s.dest, args, dict(s.attrs))
+                k = key_of(op)
+                if k is not None:
+                    prior = table.get(k)
+                    if prior is not None and (
+                            not chain
+                            or uses_confined(op.dest.name, chain)):
+                        rename[op.dest.name] = prior
+                        n[0] += 1
+                        continue
+                    if prior is None:
+                        table[k] = op.dest
+                        marks.append(k)
+                out.append(op)
+            elif isinstance(s, ir.Pred):
+                out.append(ir.Pred(sub(s.cond),
+                                   walk(s.body, chain + (id(s),))))
+            elif isinstance(s, ir.Loop):
+                out.append(ir.Loop(s.var, s.count, walk(s.body, chain)))
+            else:
+                out.append(s)
+        for k in marks:
+            del table[k]
+        return out
+
+    return walk(body, ()), n[0]
+
+
+# --------------------------------------------------------------------------
+# FMA fusion
+# --------------------------------------------------------------------------
+
+
+def fuse_fma(body: List[ir.Stmt], prog: ir.Program
+             ) -> Tuple[List[ir.Stmt], int]:
+    """Fuse a single-use f32 ``MUL`` feeding an ``ADD`` in the same region
+    into ``FMA``.  Every backend evaluates FMA as the unfused ``a*b + c``,
+    so the fusion is bit-exact; DCE then deletes the orphaned MUL."""
+    defs = ir.reg_def_counts(body)
+    uses = ir.reg_use_counts(body)
+
+    # map mul-dest name -> (mul op, region path); paths gate fusion to the
+    # same structured region so activity masks line up exactly
+    muls: Dict[str, Tuple[ir.Op, Tuple[int, ...]]] = {}
+
+    def collect(stmts: Sequence[ir.Stmt], path: Tuple[int, ...]) -> None:
+        for i, s in enumerate(stmts):
+            if isinstance(s, ir.Op):
+                if (s.opcode == ir.MUL and s.dest is not None
+                        and s.dest.dtype == ir.F32
+                        and defs.get(s.dest.name, 0) == 1
+                        and uses.get(s.dest.name, 0) == 1
+                        and all(defs.get(r.name, 0) == 1
+                                for r in s.arg_regs())):
+                    muls[s.dest.name] = (s, path)
+            elif isinstance(s, (ir.Pred, ir.Loop)):
+                collect(s.body, path + (i,))
+
+    collect(body, ())
+    n = [0]
+
+    def walk(stmts: Sequence[ir.Stmt], path: Tuple[int, ...]
+             ) -> List[ir.Stmt]:
+        out: List[ir.Stmt] = []
+        for i, s in enumerate(stmts):
+            if isinstance(s, ir.Op):
+                if (s.opcode == ir.ADD and s.dest is not None
+                        and s.dest.dtype == ir.F32):
+                    for ai, other in ((0, 1), (1, 0)):
+                        a = s.args[ai]
+                        if (isinstance(a, ir.Reg) and a.name in muls
+                                and muls[a.name][1] == path):
+                            mul = muls[a.name][0]
+                            out.append(ir.Op(
+                                ir.FMA, s.dest,
+                                (mul.args[0], mul.args[1], s.args[other])))
+                            n[0] += 1
+                            break
+                    else:
+                        out.append(s)
+                else:
+                    out.append(s)
+            elif isinstance(s, ir.Pred):
+                out.append(ir.Pred(s.cond, walk(s.body, path + (i,))))
+            elif isinstance(s, ir.Loop):
+                out.append(ir.Loop(s.var, s.count, walk(s.body, path + (i,))))
+            else:
+                out.append(s)
+        return out
+
+    return walk(body, ()), n[0]
+
+
+# --------------------------------------------------------------------------
+# Dead-code elimination
+# --------------------------------------------------------------------------
+
+
+def eliminate_dead_code(body: List[ir.Stmt], prog: ir.Program
+                        ) -> Tuple[List[ir.Stmt], int]:
+    """Delete pure ops whose dests are never read, then the empty @PRED
+    regions and dead loops left behind; iterate to a fixpoint."""
+    total = 0
+    while True:
+        uses = ir.reg_use_counts(body)
+        removed = [0]
+
+        def walk(stmts: Sequence[ir.Stmt]) -> List[ir.Stmt]:
+            out: List[ir.Stmt] = []
+            for s in stmts:
+                if isinstance(s, ir.Op):
+                    if (s.dest is not None and _is_pure(s.opcode)
+                            and uses.get(s.dest.name, 0) == 0):
+                        removed[0] += 1
+                    else:
+                        out.append(s)
+                elif isinstance(s, ir.Pred):
+                    inner = walk(s.body)
+                    if inner:
+                        out.append(ir.Pred(s.cond, inner))
+                    else:
+                        removed[0] += 1
+                elif isinstance(s, ir.Loop):
+                    inner = walk(s.body)
+                    if inner or uses.get(s.var.name, 0) > 0:
+                        out.append(ir.Loop(s.var, s.count, inner))
+                    else:
+                        removed[0] += 1
+                else:
+                    out.append(s)
+            return out
+
+        body = walk(body)
+        if removed[0] == 0:
+            return body, total
+        total += removed[0]
+
+
+# --------------------------------------------------------------------------
+# Pipeline driver
+# --------------------------------------------------------------------------
+
+PassFn = Callable[[List[ir.Stmt], ir.Program], Tuple[List[ir.Stmt], int]]
+
+_PIPELINES: Dict[int, List[PassFn]] = {
+    0: [],
+    1: [fold_constants, eliminate_dead_code],
+    2: [fold_constants, simplify_predicates, hoist_invariants,
+        merge_duplicates, fuse_fma, fold_constants, eliminate_dead_code],
+}
+
+OPT_MAX = max(_PIPELINES)
+_MAX_PIPELINE_ITERS = 4
+
+DEFAULT_OPT_LEVEL = max(0, min(
+    int(os.environ.get("HETGPU_OPT_LEVEL", str(OPT_MAX))), OPT_MAX))
+
+
+def optimize(program: ir.Program, level: int = OPT_MAX
+             ) -> Tuple[ir.Program, PipelineStats]:
+    """Run the pass pipeline for ``level`` and return a new, semantically
+    identical :class:`~repro.core.hetir.Program` plus per-pass statistics.
+    ``level`` clamps into ``[0, OPT_MAX]``; level 0 is the identity."""
+    level = max(0, min(int(level), OPT_MAX))
+    stats = PipelineStats(level=level, ops_before=ir.count_ops(program.body))
+    body = list(program.body)
+    pipeline = _PIPELINES[level]
+    if pipeline:
+        for _ in range(_MAX_PIPELINE_ITERS):
+            stats.iterations += 1
+            changed = 0
+            for pass_fn in pipeline:
+                body, n = pass_fn(body, program)
+                stats.record(pass_fn.__name__, n)
+                changed += n
+            if changed == 0:
+                break
+    out = ir.Program(name=program.name, params=list(program.params),
+                     body=body, shared_size=program.shared_size,
+                     shared_dtype=program.shared_dtype)
+    out.validate()
+    stats.ops_after = ir.count_ops(body)
+    return out, stats
+
+
+def get_optimized(program: ir.Program, level: int
+                  ) -> Tuple[ir.Program, PipelineStats]:
+    """Memoized :func:`optimize` — one optimized body per (program, level),
+    so repeated launches (and the segmentation/node cache riding on the
+    optimized program) reuse identical objects."""
+    level = max(0, min(int(level), OPT_MAX))
+    memo = program.__dict__.setdefault("_opt_cache", {})
+    hit = memo.get(level)
+    if hit is None:
+        if level == 0:
+            stats = PipelineStats(level=0,
+                                  ops_before=ir.count_ops(program.body),
+                                  ops_after=ir.count_ops(program.body))
+            hit = (program, stats)
+        else:
+            hit = optimize(program, level)
+        memo[level] = hit
+    return hit

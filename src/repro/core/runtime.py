@@ -3,8 +3,12 @@
 Presents the uniform device API the paper describes: buffer allocation,
 kernel launch with CUDA-like ``<<<grid, block>>>`` geometry, streams with
 in-order semantics, cooperative checkpoint (pause flag honoured at
-barriers), restore, and live migration between backends.  The per-backend
-"JIT modules" are the backends' translation caches.
+barriers), restore, and live migration between backends.  The "JIT
+modules" are entries in the shared :class:`~repro.core.cache.
+TranslationCache` (paper §4.2), whose hit/miss/eviction counters this
+session surfaces via :meth:`HetSession.cache_stats` and ``stats``; kernels
+launch through the :mod:`~repro.core.passes` pipeline at the session's
+``opt_level``.
 """
 from __future__ import annotations
 
@@ -17,7 +21,9 @@ import numpy as np
 from . import hetir as ir
 from .backends import get_backend
 from .backends.base import Backend
+from .cache import TranslationCache
 from .engine import Engine
+from .passes import DEFAULT_OPT_LEVEL, OPT_MAX
 from .state import Snapshot
 
 
@@ -35,15 +41,31 @@ class LaunchRecord:
 class HetSession:
     """One "device context" bound to a backend, with migration support."""
 
-    def __init__(self, backend: str = "vectorized"):
+    def __init__(self, backend: str = "vectorized",
+                 opt_level: Optional[int] = None,
+                 cache: Optional[TranslationCache] = None):
         self.backend_name = backend
-        self.backend: Backend = get_backend(backend)
+        self.backend: Backend = get_backend(backend, cache=cache)
+        self.cache: TranslationCache = self.backend.cache
+        self.opt_level = DEFAULT_OPT_LEVEL if opt_level is None \
+            else max(0, min(int(opt_level), OPT_MAX))
         self._kernels: Dict[str, _KernelHandle] = {}
         self._buffers: Dict[str, np.ndarray] = {}
         self._streams: Dict[int, List[LaunchRecord]] = {0: []}
         self.pause_flag = False  # the paper's cooperative pause flag
         self.stats = {"launches": 0, "translation_ms": 0.0,
-                      "migrations": 0}
+                      "migrations": 0, "cache_hits": 0, "cache_misses": 0,
+                      "cache_evictions": 0}
+
+    def cache_stats(self) -> Dict[str, object]:
+        """Shared translation-cache counters (paper §4.2 JIT cache)."""
+        return self.cache.stats()
+
+    def _sync_cache_stats(self) -> None:
+        st = self.cache.stats()
+        self.stats["cache_hits"] = st["hits"]
+        self.stats["cache_misses"] = st["misses"]
+        self.stats["cache_evictions"] = st["evictions"]
 
     # -- module loading ------------------------------------------------
     def load_kernel(self, program: ir.Program) -> str:
@@ -79,14 +101,17 @@ class HetSession:
             else:
                 raise ValueError(f"missing argument {p.name}")
         t0 = time.perf_counter()
-        eng = Engine(handle.program, self.backend, grid, block, merged)
+        eng = Engine(handle.program, self.backend, grid, block, merged,
+                     opt_level=self.opt_level)
         rec = LaunchRecord(engine=eng)
         self._streams.setdefault(stream, []).append(rec)
         self.stats["launches"] += 1
+        self.stats["last_opt"] = eng.opt_stats.as_dict()
         if blocking:
             rec.finished = eng.run(pause_flag=lambda: self.pause_flag)
             self._writeback(handle.program, eng, args)
         self.stats["translation_ms"] += (time.perf_counter() - t0) * 1e3
+        self._sync_cache_stats()
         return rec
 
     def _writeback(self, program: ir.Program, eng: Engine,
@@ -117,6 +142,7 @@ class HetSession:
 
     def run_to_completion(self, rec: LaunchRecord) -> None:
         rec.finished = rec.engine.run(pause_flag=lambda: self.pause_flag)
+        self._sync_cache_stats()
 
 
 def migrate(rec: LaunchRecord, src: HetSession, dst: HetSession,

@@ -38,6 +38,10 @@ class Snapshot:
     shared: Optional[np.ndarray]       # [num_blocks, shared_size] or None
     globals_: Dict[str, np.ndarray]    # buffer name -> host array
     scalars: Dict[str, object] = field(default_factory=dict)
+    # pass-pipeline level the program was optimized at when the snapshot was
+    # taken: node_idx indexes the *optimized* segmented program, so restore
+    # must re-optimize at the same level (the pipeline is deterministic)
+    opt_level: int = 0
 
     # -- serialization ------------------------------------------------------
     def to_bytes(self) -> bytes:
@@ -48,9 +52,12 @@ class Snapshot:
             "num_blocks": self.num_blocks,
             "block_size": self.block_size,
             "node_idx": self.node_idx,
+            "opt_level": int(self.opt_level),
             "loop_counters": {str(k): int(v)
                               for k, v in self.loop_counters.items()},
-            "scalars": {k: (float(v) if isinstance(v, float) else int(v))
+            "scalars": {k: (float(v)
+                            if isinstance(v, (float, np.floating))
+                            else int(v))
                         for k, v in self.scalars.items()},
             "reg_names": sorted(self.regs),
             "global_names": sorted(self.globals_),
@@ -81,6 +88,7 @@ class Snapshot:
             num_blocks=meta["num_blocks"],
             block_size=meta["block_size"],
             node_idx=meta["node_idx"],
+            opt_level=int(meta.get("opt_level", 0)),
             loop_counters={int(k): v
                            for k, v in meta["loop_counters"].items()},
             regs=regs,

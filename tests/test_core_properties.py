@@ -10,7 +10,11 @@ Invariants under test:
 3. **Snapshot serialization** — to_bytes/from_bytes is lossless.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import Engine, Snapshot, get_backend
 from repro.core import hetir as ir

@@ -1,0 +1,219 @@
+"""Shared TranslationCache tests (paper §4.2 JIT cache).
+
+Relaunching an identical kernel must hit; changing launch geometry, buffer
+dtype, or the program body must miss; counters are exposed through
+``HetSession``; and a checkpoint taken from an *optimized* program must
+restore correctly on the other backend (node indices address the optimized
+segmented program).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Engine, HetSession, OPT_MAX, Snapshot,
+                        TranslationCache, get_backend, global_cache)
+from repro.core import hetir as ir
+from repro.core import kernels_suite as suite
+from repro.core.hetir import Builder, Ptr, Scalar
+
+RNG = np.random.default_rng(11)
+
+
+def _vadd_args(n=128):
+    return {"A": RNG.normal(size=n).astype(np.float32),
+            "B": RNG.normal(size=n).astype(np.float32),
+            "C": np.zeros(n, np.float32), "n": n}
+
+
+def _launch(backend, grid=4, block=32, args=None, level=OPT_MAX):
+    prog, _ = suite.vadd()
+    eng = Engine(prog, backend, grid, block,
+                 dict(args or _vadd_args()), opt_level=level)
+    assert eng.run()
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# hit/miss behaviour
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("name", ["interp", "vectorized", "pallas"])
+def test_relaunch_hits_cache(name):
+    cache = TranslationCache()
+    be = get_backend(name, cache=cache)
+    _launch(be)
+    st = cache.stats()
+    assert st["misses"] >= 1 and st["hits"] == 0
+    misses_first = st["misses"]
+    _launch(be)  # identical relaunch: translation fully cached
+    st = cache.stats()
+    assert st["misses"] == misses_first
+    assert st["hits"] >= 1
+    assert st["hit_rate"] > 0
+
+
+@pytest.mark.fast
+def test_geometry_change_misses():
+    cache = TranslationCache()
+    be = get_backend("vectorized", cache=cache)
+    _launch(be, grid=4, block=32)
+    misses = cache.stats()["misses"]
+    _launch(be, grid=2, block=64)  # same program, new geometry
+    assert cache.stats()["misses"] > misses
+
+
+def _mini_prog(dtype):
+    b = Builder("mini", [Ptr("A", dtype), Ptr("Out", dtype)])
+    i = b.global_id(0)
+    b.store("Out", i, b.load("A", i))
+    return b.done()
+
+
+@pytest.mark.fast
+def test_dtype_change_misses():
+    cache = TranslationCache()
+    be = get_backend("pallas", cache=cache)
+    for dtype, np_dt in ((ir.F32, np.float32), (ir.I32, np.int32)):
+        prog = _mini_prog(dtype)
+        args = {"A": np.arange(64).astype(np_dt),
+                "Out": np.zeros(64, np_dt)}
+        eng = Engine(prog, be, 2, 32, args)
+        assert eng.run()
+    st = cache.stats()
+    assert st["hits"] == 0 and st["misses"] == 2  # distinct fingerprints
+
+
+@pytest.mark.fast
+def test_identical_programs_share_translations():
+    """Content-addressed keys: two independently *built* programs with the
+    same structure share one cache entry (the seed's id()-keyed per-backend
+    dicts could never hit here)."""
+    cache = TranslationCache()
+    be = get_backend("vectorized", cache=cache)
+    for _ in range(2):
+        prog, _ = suite.saxpy()  # fresh Program object each time
+        eng = Engine(prog, be, 3, 32,
+                     {"X": np.ones(96, np.float32),
+                      "Y": np.ones(96, np.float32), "n": 96, "a": 2.0})
+        assert eng.run()
+    st = cache.stats()
+    assert st["hits"] >= 1
+    assert be.translation_cache_size() == st["misses"]
+
+
+@pytest.mark.fast
+def test_opt_levels_do_not_collide():
+    cache = TranslationCache()
+    be = get_backend("vectorized", cache=cache)
+    _launch(be, level=0)
+    _launch(be, level=OPT_MAX)  # different body -> different fingerprint
+    assert cache.stats()["hits"] == 0
+
+
+@pytest.mark.fast
+def test_lru_eviction_counted():
+    cache = TranslationCache(capacity=1)
+    be = get_backend("vectorized", cache=cache)
+    _launch(be, grid=4, block=32)
+    _launch(be, grid=2, block=64)
+    st = cache.stats()
+    assert st["evictions"] >= 1
+    assert st["entries"] == 1
+
+
+@pytest.mark.fast
+def test_cache_shared_across_backends():
+    """One cache serves every backend; keys lead with the backend name so
+    per-backend sizes stay separable."""
+    cache = TranslationCache()
+    interp = get_backend("interp", cache=cache)
+    vect = get_backend("vectorized", cache=cache)
+    _launch(interp)
+    _launch(vect)
+    assert cache.size("interp") >= 1
+    assert cache.size("vectorized") >= 1
+    assert cache.size() == cache.size("interp") + cache.size("vectorized")
+
+
+# ---------------------------------------------------------------------------
+# HetSession surface
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_session_exposes_cache_counters():
+    s = HetSession("vectorized", cache=TranslationCache())
+    prog, _ = suite.vadd()
+    s.load_kernel(prog)
+    args = _vadd_args(64)
+    s.launch("vadd", grid=2, block=32, args=args)
+    assert s.stats["cache_misses"] >= 1
+    assert s.stats["cache_hits"] == 0
+    assert s.stats["last_opt"]["level"] == s.opt_level
+    s.launch("vadd", grid=2, block=32, args=args)
+    assert s.stats["cache_hits"] >= 1
+    assert s.cache_stats()["hit_rate"] > 0
+
+
+@pytest.mark.fast
+def test_session_defaults_to_global_cache():
+    s = HetSession("interp")
+    assert s.cache is global_cache()
+
+
+# ---------------------------------------------------------------------------
+# migration of an optimized program
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("src,dst", [("vectorized", "interp"),
+                                     ("interp", "vectorized"),
+                                     ("vectorized", "pallas")])
+def test_optimized_checkpoint_restores_on_other_backend(src, dst):
+    """Checkpoint taken mid-kernel from an OPT_MAX-optimized program must
+    resume on a different backend and finish bit-identical to the
+    non-migrated optimized run (snapshot carries the opt level; the
+    deterministic pipeline re-creates the same segmented program)."""
+    prog, _ = suite.persistent_counter()
+    args = {"State": RNG.normal(size=64).astype(np.float32), "iters": 6}
+
+    ref = Engine(prog, get_backend(src), 2, 32, dict(args),
+                 opt_level=OPT_MAX)
+    assert ref.run()
+
+    eng = Engine(prog, get_backend(src), 2, 32, dict(args),
+                 opt_level=OPT_MAX)
+    assert not eng.run(max_segments=3), "should pause mid-kernel"
+    blob = eng.snapshot().to_bytes()
+    snap = Snapshot.from_bytes(blob)
+    assert snap.opt_level == OPT_MAX
+    eng2 = Engine.resume(prog, get_backend(dst), snap)
+    assert eng2.opt_level == OPT_MAX
+    assert eng2.run()
+    np.testing.assert_allclose(eng2.result("State"), ref.result("State"),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.fast
+def test_snapshot_roundtrip_preserves_f32_scalars():
+    """np.float32 scalar params must survive serialization exactly (they
+    are not Python floats; a naive isinstance check truncated them)."""
+    prog, _ = suite.saxpy()
+    eng = Engine(prog, get_backend("interp"), 1, 4,
+                 {"X": np.ones(4, np.float32),
+                  "Y": np.zeros(4, np.float32), "n": 4, "a": 2.5},
+                 opt_level=0)
+    snap = Snapshot.from_bytes(eng.snapshot().to_bytes())
+    assert snap.scalars["a"] == 2.5
+
+
+@pytest.mark.fast
+def test_snapshot_roundtrip_preserves_opt_level():
+    prog, _ = suite.persistent_counter()
+    args = {"State": np.ones(64, np.float32), "iters": 4}
+    eng = Engine(prog, get_backend("interp"), 2, 32, dict(args),
+                 opt_level=1)
+    eng.run(max_segments=1)
+    back = Snapshot.from_bytes(eng.snapshot().to_bytes())
+    assert back.opt_level == 1

@@ -1,9 +1,12 @@
-# The paper's primary contribution: hetIR (portable GPU kernel IR), the
-# multi-backend runtime (interp / vectorized / pallas), barrier-anchored
-# segmentation, device-neutral snapshots, and cross-backend live migration.
+"""The paper's primary contribution: hetIR (portable GPU kernel IR), the
+multi-backend runtime (interp / vectorized / pallas), barrier-anchored
+segmentation, device-neutral snapshots, cross-backend live migration, and
+the persistent cost-aware translation cache (see docs/ARCHITECTURE.md for
+the paper-section → module map)."""
 from . import hetir
 from .backends import BACKENDS, get_backend
-from .cache import TranslationCache, global_cache
+from .cache import (DiskStore, TranslationCache, global_cache,
+                    register_reviver)
 from .engine import Engine
 from .passes import (DEFAULT_OPT_LEVEL, OPT_MAX, PipelineStats,
                      get_optimized, optimize)
@@ -11,6 +14,6 @@ from .runtime import HetSession, migrate
 from .state import Snapshot
 
 __all__ = ["hetir", "BACKENDS", "get_backend", "Engine", "HetSession",
-           "migrate", "Snapshot", "TranslationCache", "global_cache",
-           "optimize", "get_optimized", "PipelineStats", "OPT_MAX",
-           "DEFAULT_OPT_LEVEL"]
+           "migrate", "Snapshot", "TranslationCache", "DiskStore",
+           "global_cache", "register_reviver", "optimize", "get_optimized",
+           "PipelineStats", "OPT_MAX", "DEFAULT_OPT_LEVEL"]

@@ -4,16 +4,24 @@ Between segments all state lives in host numpy arrays (:class:`HostState`) —
 this is the paper's design where segment kernels communicate registers and
 shared memory "via memory", and it is what makes snapshots backend-neutral
 for free.
+
+This module also owns the *persistence contract* for jitted translations
+(paper §4.2's cluster-lifetime JIT amortization): the vectorized and pallas
+backends trace their segments through ``jax.export`` at translate time, so
+the translation cache can write the serialized StableHLO artifact to its
+:class:`~repro.core.cache.DiskStore`.  A warm process revives the artifact
+with :func:`jax.export.deserialize` and pays only the (cheap) XLA compile —
+the expensive Python re-trace of the IR evaluator is skipped entirely.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
 from .. import hetir as ir
-from ..cache import TranslationCache, global_cache
+from ..cache import TranslationCache, global_cache, register_reviver
 from ..segments import SegNode
 
 
@@ -65,3 +73,66 @@ def scalar_signature(launch: Launch) -> Tuple:
     """Uniform scalars as a hashable, dtype-insensitive key component
     (scalars are baked into traced code as constants)."""
     return tuple(sorted((k, float(v)) for k, v in launch.scalars.items()))
+
+
+def state_signature(state: HostState) -> Tuple[Tuple, Tuple, Optional[Tuple]]:
+    """(reg, global, shared) shape+dtype signatures of the incoming state.
+    Jit-compiling backends fold these into the cache key: the exported
+    artifact is shape-exact, so the key must be too."""
+    reg_sig = tuple((n, tuple(np.shape(state.regs[n])),
+                     np.dtype(state.regs[n].dtype).str)
+                    for n in sorted(state.regs))
+    glb_sig = tuple((n, tuple(np.shape(state.globals_[n])),
+                     np.dtype(state.globals_[n].dtype).str)
+                    for n in sorted(state.globals_))
+    shared_sig = None if state.shared is None else \
+        (tuple(np.shape(state.shared)), np.dtype(state.shared.dtype).str)
+    return reg_sig, glb_sig, shared_sig
+
+
+# ---------------------------------------------------------------------------
+# jax.export persistence: serialize traced+lowered segments so a warm
+# process skips Python re-tracing (the dominant translation cost).
+# ---------------------------------------------------------------------------
+
+def export_translation(
+        jitted, example_args: Tuple,
+        cache: Optional[TranslationCache] = None) -> Tuple[Any,
+                                                           Optional[bytes]]:
+    """Trace ``jitted`` over ``example_args`` (arrays or ShapeDtypeStructs,
+    any pytree) with ``jax.export`` and return ``(live fn, payload bytes)``.
+    The live fn is the re-jitted exported call — same semantics, compiled
+    from the recorded StableHLO.  If export is unsupported for this
+    computation, fall back to the plain jitted fn with no payload (the
+    entry then lives in memory only) and record the failure on ``cache``
+    (``stats()['export_fallbacks']`` / ``['last_export_error']``) so the
+    lost persistence is diagnosable."""
+    import jax
+
+    try:
+        from jax import export as jexport
+        structs = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(np.shape(a), np.dtype(a.dtype)),
+            example_args)
+        exported = jexport.export(jitted)(*structs)
+        return jax.jit(exported.call), exported.serialize()
+    except Exception as exc:
+        if cache is not None:
+            cache.note_export_fallback(f"{type(exc).__name__}: {exc}")
+        return jitted, None
+
+
+def _revive_exported(blob: bytes):
+    import jax
+    from jax import export as jexport
+
+    return jax.jit(jexport.deserialize(blob).call)
+
+
+def _revive_exported_with_meta(payload: Tuple[bytes, Dict]):
+    blob, meta = payload
+    return _revive_exported(blob), meta
+
+
+register_reviver("jax-export", _revive_exported)
+register_reviver("jax-export-meta", _revive_exported_with_meta)

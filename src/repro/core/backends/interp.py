@@ -14,6 +14,7 @@ from typing import Callable, Dict, List, Sequence
 import numpy as np
 
 from .. import hetir as ir
+from ..cache import register_reviver
 from ..segments import SegNode
 from .base import Backend, HostState, Launch
 
@@ -23,12 +24,19 @@ class InterpBackend(Backend):
 
     def _translate(self, seg: SegNode, launch: Launch):
         """"Translation" for the interpreter: stage the segment into a tree
-        of dispatch closures once, instead of re-walking the statement
+        of dispatch-step objects once, instead of re-walking the statement
         structure on every block of every launch.  Geometry-independent, so
-        the key is just (backend, fingerprint, opt level, segment)."""
+        the key is just (backend, fingerprint, opt level, segment).  The
+        staged plan is plain picklable objects over IR dataclasses, so it
+        persists to the disk tier verbatim — a warm process unpickles the
+        plan and skips staging entirely."""
         key = self._cache_key(seg, launch)
-        return self.cache.get_or_create(
-            key, lambda: _compile_stmts(seg.stmts))
+
+        def translate():
+            plan = _compile_stmts(seg.stmts)
+            return plan, ("interp-plan", plan)
+
+        return self.cache.get_or_translate(key, translate)
 
     def run_segment(self, seg: SegNode, state: HostState,
                     launch: Launch) -> None:
@@ -75,51 +83,88 @@ class _BlockCtx:
         return self.regs[reg.name][t]
 
 
-def _compile_stmts(stmts: Sequence[ir.Stmt]
-                   ) -> Callable[["_BlockCtx", List[int]], None]:
-    """Stage a segment body into nested closures: structural dispatch and
+class _Plan:
+    """Staged segment body: a list of step objects.  Built once per cache
+    entry; plain data over IR dataclasses, so the whole tree pickles —
+    which is what makes interp translations directly persistable."""
+
+    def __init__(self, steps: List["_Step"]):
+        self.steps = steps
+
+    def __call__(self, ctx: "_BlockCtx", threads: List[int]) -> None:
+        if not threads:
+            return
+        for step in self.steps:
+            step(ctx, threads)
+
+
+class _Step:
+    pass
+
+
+class _OpStep(_Step):
+    def __init__(self, op: ir.Op):
+        self.op = op
+
+    def __call__(self, ctx, threads):
+        _exec_op(self.op, ctx, threads)
+
+
+class _CollectiveStep(_Step):
+    def __init__(self, op: ir.Op):
+        self.op = op
+
+    def __call__(self, ctx, threads):
+        _exec_collective(self.op, ctx, threads)
+
+
+class _PredStep(_Step):
+    def __init__(self, cond: ir.Reg, inner: _Plan):
+        self.cond = cond
+        self.inner = inner
+
+    def __call__(self, ctx, threads):
+        taken = [t for t in threads if bool(ctx.reg_read(self.cond, t))]
+        if taken:  # divergence; implicit reconverge
+            self.inner(ctx, taken)
+
+
+class _LoopStep(_Step):
+    def __init__(self, loop: ir.Loop, inner: _Plan):
+        self.loop = loop
+        self.inner = inner
+
+    def __call__(self, ctx, threads):
+        loop = self.loop
+        count = loop.count if isinstance(loop.count, int) \
+            else int(ctx.launch.scalars[loop.count])
+        for it in range(count):
+            for t in threads:
+                ctx.reg_write(loop.var, t, it)
+            self.inner(ctx, threads)
+
+
+def _compile_stmts(stmts: Sequence[ir.Stmt]) -> _Plan:
+    """Stage a segment body into a step tree: structural dispatch and
     collective/scalar classification happen once at translation time."""
-    steps: List[Callable[["_BlockCtx", List[int]], None]] = []
+    steps: List[_Step] = []
     for s in stmts:
         if isinstance(s, ir.Op):
             if s.opcode in ir.COLLECTIVE_OPS:
-                steps.append(lambda ctx, threads, s=s:
-                             _exec_collective(s, ctx, threads))
+                steps.append(_CollectiveStep(s))
             else:
-                steps.append(lambda ctx, threads, s=s:
-                             _exec_op(s, ctx, threads))
+                steps.append(_OpStep(s))
         elif isinstance(s, ir.Pred):
-            inner = _compile_stmts(s.body)
-
-            def pred_step(ctx, threads, cond=s.cond, inner=inner):
-                taken = [t for t in threads
-                         if bool(ctx.reg_read(cond, t))]
-                if taken:  # divergence; implicit reconverge
-                    inner(ctx, taken)
-
-            steps.append(pred_step)
+            steps.append(_PredStep(s.cond, _compile_stmts(s.body)))
         elif isinstance(s, ir.Loop):
-            inner = _compile_stmts(s.body)
-
-            def loop_step(ctx, threads, loop=s, inner=inner):
-                count = loop.count if isinstance(loop.count, int) \
-                    else int(ctx.launch.scalars[loop.count])
-                for it in range(count):
-                    for t in threads:
-                        ctx.reg_write(loop.var, t, it)
-                    inner(ctx, threads)
-
-            steps.append(loop_step)
+            steps.append(_LoopStep(s, _compile_stmts(s.body)))
         elif isinstance(s, ir.Barrier):
             raise AssertionError("barrier inside segment")
+    return _Plan(steps)
 
-    def run(ctx: "_BlockCtx", threads: List[int]) -> None:
-        if not threads:
-            return
-        for step in steps:
-            step(ctx, threads)
 
-    return run
+# a persisted interp plan is the live value itself
+register_reviver("interp-plan", lambda payload: payload)
 
 
 def _exec_stmts(stmts: Sequence[ir.Stmt], ctx: _BlockCtx,

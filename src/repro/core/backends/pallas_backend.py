@@ -34,7 +34,8 @@ from jax.experimental import pallas as pl
 from .. import hetir as ir
 from ..cache import TranslationCache
 from ..segments import SegNode
-from .base import Backend, HostState, Launch, scalar_signature
+from .base import (Backend, HostState, Launch, export_translation,
+                   scalar_signature, state_signature)
 from .semantics import Env, eval_stmts
 
 
@@ -76,10 +77,18 @@ class PallasBackend(Backend):
         key = self._cache_key(seg, launch, launch.num_blocks,
                               launch.block_size, scalar_signature(launch),
                               reg_sig, glb_sig, shared_sig)
-        hit = self.cache.get(key)
-        if hit is not None:
-            return hit
 
+        def translate():
+            return self._build(seg, launch, reg_sig, glb_sig, shared_sig)
+
+        return self.cache.get_or_translate(key, translate)
+
+    def _build(self, seg: SegNode, launch: Launch, reg_sig: Tuple,
+               glb_sig: Tuple, shared_sig):
+        """Emit, trace, and export the segment's ``pl.pallas_call`` kernel.
+        Returns ``((jitted fn, meta), persist)`` for the translation cache;
+        the persisted payload is the serialized ``jax.export`` artifact plus
+        ``meta``, so a warm process skips re-emitting and re-tracing."""
         B, T = launch.num_blocks, launch.block_size
         scalars = dict(launch.scalars)
         reg_names = tuple(n for n, _, _ in reg_sig)
@@ -190,19 +199,24 @@ class PallasBackend(Backend):
         meta = dict(reg_names=reg_names, new_regs=new_regs,
                     glb_names=glb_names, written=written_order,
                     has_shared=has_shared, coalesced=coalesced)
-        return self.cache.put(key, (jax.jit(call), meta))
+        example = tuple(
+            [jax.ShapeDtypeStruct(shape, np.dtype(dt))
+             for _, shape, dt in reg_sig]
+            + ([jax.ShapeDtypeStruct(shared_sig[0], np.dtype(shared_sig[1]))]
+               if has_shared else [])
+            + [jax.ShapeDtypeStruct(shape, np.dtype(dt))
+               for _, shape, dt in glb_sig])
+        fn, blob = export_translation(jax.jit(call), example,
+                                      cache=self.cache)
+        persist = None if blob is None else ("jax-export-meta", (blob, meta))
+        return (fn, meta), persist
 
     # ------------------------------------------------------------------
     def run_segment(self, seg: SegNode, state: HostState,
                     launch: Launch) -> None:
-        reg_names = tuple(sorted(state.regs))
-        reg_sig = tuple((n, state.regs[n].shape, state.regs[n].dtype.str)
-                        for n in reg_names)
-        glb_names = tuple(sorted(state.globals_))
-        glb_sig = tuple((n, state.globals_[n].shape,
-                         state.globals_[n].dtype.str) for n in glb_names)
-        shared_sig = None if state.shared is None else \
-            (state.shared.shape, state.shared.dtype.str)
+        reg_sig, glb_sig, shared_sig = state_signature(state)
+        reg_names = tuple(n for n, _, _ in reg_sig)
+        glb_names = tuple(n for n, _, _ in glb_sig)
 
         call, meta = self._translate(seg, launch, reg_sig, glb_sig,
                                      shared_sig)

@@ -6,7 +6,7 @@ the same kernel do not pay the translation cost again."  The seed runtime
 gave every backend its own ad-hoc ``_cache`` dict keyed on segment object
 identity, so translations were lost whenever a program was rebuilt and
 could never be observed or bounded.  :class:`TranslationCache` replaces
-those: one process-wide LRU, shared by every backend, keyed on
+those: one process-wide cache, shared by every backend, keyed on
 
     ``(backend name, program fingerprint, opt level, segment index, ...)``
 
@@ -16,54 +16,423 @@ translations.  Backends append whatever else their codegen specializes on
 (launch geometry, uniform scalars, register/buffer signatures), which is
 exactly what makes a relaunch hit and a geometry or dtype change miss.
 
-Hit/miss/eviction counters are surfaced through
+Two layers extend the paper's per-process cache to its *cluster lifetime*
+amortization model (§4.2 notes JIT cost is paid once per kernel, not per
+process):
+
+* **Persistence** — an optional :class:`DiskStore` gives the cache a
+  content-addressed on-disk tier.  Entries are written atomically
+  (temp-file + ``os.replace``) into a runtime-version-tagged directory, and
+  loads are corruption-tolerant: a truncated, garbled, or version-skewed
+  entry file is a *miss*, never an exception.  What goes to disk is decided
+  by the backend that translated the value: picklable plans (interp) go
+  verbatim; jitted XLA code (vectorized / pallas) goes as serialized
+  ``jax.export`` artifacts, so a warm start skips Python re-tracing — the
+  dominant translation cost — and only replays the cheap StableHLO compile.
+  Revival is dispatched through a ``kind`` → reviver registry
+  (:func:`register_reviver`) so the cache core stays backend-agnostic.
+
+* **Cost-aware eviction** — every entry carries its measured translation
+  wall-time and serialized size; in-memory eviction uses a GDSF-style
+  score ``clock + cost_ms / size`` (Greedy-Dual-Size-Frequency) instead of
+  plain LRU, so a 5-second pallas trace is not evicted to make room for a
+  microsecond interp plan.  The ``clock`` advances to each victim's score,
+  which ages out stale expensive entries over time.
+
+Hit/miss/restore/eviction counters are surfaced through
 ``HetSession.cache_stats()`` and ``benchmarks/bench_translation.py``.
+Set ``HETGPU_CACHE_DIR`` to attach a :class:`DiskStore` to the process-wide
+default cache.  See ``docs/CACHING.md`` for the full key anatomy, on-disk
+layout, and invalidation rules.
 """
 from __future__ import annotations
 
+import hashlib
+import os
+import pickle
+import tempfile
 import threading
-from collections import OrderedDict
-from typing import Any, Callable, Dict, Hashable, Optional
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Hashable, Iterator, Optional, Tuple
+
+#: bump when the envelope layout or any persisted payload format changes —
+#: old store directories are simply never looked at again (tag mismatch)
+STORE_FORMAT_VERSION = 1
+
+_ENVELOPE_MAGIC = "hetgpu-tcache"
+
+# ---------------------------------------------------------------------------
+# reviver registry: disk payload ``kind`` -> live-value constructor.
+# Backends register their kinds at import time (see backends/interp.py and
+# backends/base.py); an entry whose kind has no reviver is a disk miss.
+# ---------------------------------------------------------------------------
+_REVIVERS: Dict[str, Callable[[Any], Any]] = {}
+
+
+def register_reviver(kind: str, fn: Callable[[Any], Any]) -> None:
+    """Register ``fn`` to turn a persisted payload of ``kind`` back into a
+    live cache value.  Last registration wins (idempotent re-imports)."""
+    _REVIVERS[kind] = fn
+
+
+def _runtime_tag() -> str:
+    """Version tag for the store directory: entries are only shared between
+    processes with an identical serialization contract (store format,
+    jax version, accelerator platform)."""
+    try:
+        import jax
+        jv, plat = jax.__version__, jax.default_backend()
+    except Exception:  # pragma: no cover - jax is a baked-in dependency
+        jv, plat = "nojax", "cpu"
+    return f"v{STORE_FORMAT_VERSION}-jax{jv}-{plat}"
+
+
+class DiskStore:
+    """Content-addressed on-disk tier for :class:`TranslationCache`.
+
+    Layout: ``<root>/<runtime tag>/<sha256(key)[:40]>.tce`` — one pickled
+    *envelope* per entry, carrying the full key (collision + integrity
+    guard), the payload ``kind``, the payload itself, and the measured
+    translation cost.  Writes are atomic (same-directory temp file +
+    ``os.replace``), so concurrent writers race benignly (last identical
+    write wins) and a crash can never leave a half-written entry visible.
+    Loads never raise on bad data: any unpickling error, magic/version
+    skew, or key mismatch counts as a miss and quarantines the file.
+    """
+
+    def __init__(self, root, tag: Optional[str] = None):
+        self.root = Path(root)
+        self.tag = tag if tag is not None else _runtime_tag()
+        self.dir = self.root / self.tag
+        self.dir.mkdir(parents=True, exist_ok=True)
+        # sweep temp files orphaned by writers killed mid-save (atomic
+        # rename means they were never visible as entries).  Age-gated so
+        # we never race a live writer in another process.
+        cutoff = time.time() - 3600
+        for stale in self.dir.glob("*.tmp"):
+            try:
+                if stale.stat().st_mtime < cutoff:
+                    os.unlink(stale)
+            except OSError:
+                pass
+        self._lock = threading.Lock()
+        self.saves = 0
+        self.loads = 0
+        self.load_misses = 0
+        self.corrupt = 0
+
+    # -- key addressing -------------------------------------------------
+    def _path(self, key: Hashable) -> Path:
+        digest = hashlib.sha256(repr(key).encode()).hexdigest()[:40]
+        return self.dir / f"{digest}.tce"
+
+    # -- write ----------------------------------------------------------
+    def save(self, key: Hashable, kind: str, payload: Any,
+             cost_ms: float = 0.0) -> int:
+        """Atomically persist one translation.  Returns the entry's size in
+        bytes (also recorded in the envelope for cost-aware eviction)."""
+        envelope = {
+            "magic": _ENVELOPE_MAGIC,
+            "version": STORE_FORMAT_VERSION,
+            "tag": self.tag,
+            "key": key,
+            "kind": kind,
+            "payload": payload,
+            "cost_ms": float(cost_ms),
+            "created": time.time(),
+        }
+        # the entry's size (for cost-aware eviction) is the file size,
+        # recomputed at load time — no need to serialize twice to embed it
+        blob = pickle.dumps(envelope, protocol=pickle.HIGHEST_PROTOCOL)
+        path = self._path(key)
+        fd, tmp = tempfile.mkstemp(dir=str(self.dir), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(blob)
+            os.replace(tmp, path)  # atomic publish
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        with self._lock:
+            self.saves += 1
+        return len(blob)
+
+    # -- read -----------------------------------------------------------
+    def load(self, key: Hashable) -> Optional[Dict[str, Any]]:
+        """Load an envelope, or ``None`` (miss) for absent / truncated /
+        corrupt / version-mismatched / colliding entries.  Never raises."""
+        with self._lock:
+            self.loads += 1
+        path = self._path(key)
+        env = self._read_envelope(path)
+        if env is None or env["key"] != key:
+            with self._lock:
+                self.load_misses += 1
+            return None
+        return env
+
+    def _read_envelope(self, path: Path) -> Optional[Dict[str, Any]]:
+        try:
+            blob = path.read_bytes()
+        except OSError:
+            return None
+        try:
+            env = pickle.loads(blob)
+            if (not isinstance(env, dict)
+                    or env.get("magic") != _ENVELOPE_MAGIC
+                    or env.get("version") != STORE_FORMAT_VERSION
+                    or "key" not in env or "kind" not in env
+                    or "payload" not in env):
+                raise ValueError("bad envelope")
+            env["size_bytes"] = len(blob)
+        except Exception:
+            # corruption tolerance: quarantine and report a miss
+            with self._lock:
+                self.corrupt += 1
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+            return None
+        return env
+
+    # -- scan (warm-up / migration preload) -----------------------------
+    def iter_entries(self) -> Iterator[Tuple[Hashable, Dict[str, Any]]]:
+        """Yield ``(key, envelope)`` for every readable entry; unreadable
+        files are skipped (and quarantined), never raised."""
+        for path in sorted(self.dir.glob("*.tce")):
+            env = self._read_envelope(path)
+            if env is not None:
+                yield env["key"], env
+
+    def entry_count(self) -> int:
+        return sum(1 for _ in self.dir.glob("*.tce"))
+
+    def stats(self) -> Dict[str, object]:
+        """Cheap counters only — no directory scan, this runs on the
+        launch hot path via ``HetSession._sync_cache_stats``.  Use
+        :meth:`entry_count` when the on-disk entry total is wanted."""
+        with self._lock:
+            return {
+                "path": str(self.dir),
+                "tag": self.tag,
+                "saves": self.saves,
+                "loads": self.loads,
+                "load_misses": self.load_misses,
+                "corrupt": self.corrupt,
+            }
+
+    def clear(self) -> None:
+        for pattern in ("*.tce", "*.tmp"):
+            for path in self.dir.glob(pattern):
+                try:
+                    os.unlink(path)
+                except OSError:
+                    pass
+
+
+class _Entry:
+    """One cached translation plus its cost accounting."""
+
+    __slots__ = ("value", "cost_ms", "size_bytes", "score", "seq")
+
+    def __init__(self, value, cost_ms: float, size_bytes: int,
+                 score: float, seq: int):
+        self.value = value
+        self.cost_ms = cost_ms
+        self.size_bytes = size_bytes
+        self.score = score
+        self.seq = seq
 
 
 class TranslationCache:
-    """Thread-safe LRU cache for per-segment translated kernels."""
+    """Thread-safe, cost-aware cache for per-segment translated kernels,
+    with an optional persistent :class:`DiskStore` tier."""
 
-    def __init__(self, capacity: int = 1024):
+    def __init__(self, capacity: int = 1024,
+                 store: Optional["DiskStore"] = None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
-        self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self.store = DiskStore(store) if isinstance(store, (str, Path)) \
+            else store
+        self._entries: Dict[Hashable, _Entry] = {}
         self._lock = threading.RLock()
+        self._clock = 0.0   # GDSF aging clock: advances to each victim's score
+        self._seq = 0       # recency tie-break among equal scores
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.translated = 0      # fresh translations (factory ran)
+        self.restored = 0        # served from the disk tier
+        self.disk_misses = 0     # memory miss that the store couldn't serve
+        self.translate_ms = 0.0  # total wall-time spent translating
+        self.restore_ms = 0.0    # total wall-time spent reviving from disk
+        self.export_fallbacks = 0      # translations that could not persist
+        self.last_export_error = None  # why (first line of the exception)
+        self.persist_errors = 0        # store writes that failed (disk full…)
 
-    # ------------------------------------------------------------------
+    def note_export_fallback(self, error: Optional[str] = None) -> None:
+        """Record that a backend produced a memory-only translation because
+        serialization (jax.export) failed — otherwise a persistence
+        regression is invisible until a warm start mysteriously re-traces."""
+        with self._lock:
+            self.export_fallbacks += 1
+            if error:
+                self.last_export_error = str(error).splitlines()[0][:200]
+
+    # -- GDSF internals --------------------------------------------------
+    def _score(self, cost_ms: float, size_bytes: int) -> float:
+        return self._clock + cost_ms / max(1.0, float(size_bytes))
+
+    def _insert(self, key: Hashable, value: Any, cost_ms: float,
+                size_bytes: int) -> None:
+        """Insert under the lock, evicting lowest-score entries past
+        capacity (cost-aware: cheap-to-rebuild entries go first)."""
+        self._seq += 1
+        self._entries[key] = _Entry(value, cost_ms, max(1, int(size_bytes)),
+                                    self._score(cost_ms, size_bytes),
+                                    self._seq)
+        while len(self._entries) > self.capacity:
+            victim = min(self._entries,
+                         key=lambda k: (self._entries[k].score,
+                                        self._entries[k].seq))
+            self._clock = max(self._clock, self._entries[victim].score)
+            del self._entries[victim]
+            self.evictions += 1
+
+    # -- memory tier (back-compat surface) -------------------------------
     def get(self, key: Hashable) -> Optional[Any]:
         with self._lock:
-            if key in self._entries:
-                self._entries.move_to_end(key)
+            e = self._entries.get(key)
+            if e is not None:
                 self.hits += 1
-                return self._entries[key]
+                self._seq += 1
+                e.seq = self._seq
+                e.score = self._score(e.cost_ms, e.size_bytes)  # refresh
+                return e.value
             self.misses += 1
             return None
 
-    def put(self, key: Hashable, value: Any) -> Any:
+    def put(self, key: Hashable, value: Any, cost_ms: float = 0.0,
+            size_bytes: int = 1,
+            persist: Optional[Tuple[str, Any]] = None) -> Any:
         with self._lock:
-            self._entries[key] = value
-            self._entries.move_to_end(key)
-            while len(self._entries) > self.capacity:
-                self._entries.popitem(last=False)
-                self.evictions += 1
+            self._insert(key, value, cost_ms, size_bytes)
+        if persist is not None and self.store is not None:
+            kind, payload = persist
+            nbytes = self._safe_save(key, kind, payload, cost_ms)
+            if nbytes:
+                with self._lock:
+                    e = self._entries.get(key)
+                    if e is not None:
+                        e.size_bytes = max(1, nbytes)
+                        e.score = self._score(e.cost_ms, e.size_bytes)
         return value
+
+    def _safe_save(self, key: Hashable, kind: str, payload: Any,
+                   cost_ms: float) -> int:
+        """Persist without ever failing the launch: a full/read-only disk
+        degrades the entry to memory-only (counted in ``persist_errors``).
+        Returns the written size, or 0 when the save did not happen."""
+        try:
+            return self.store.save(key, kind, payload, cost_ms=cost_ms)
+        except Exception:
+            with self._lock:
+                self.persist_errors += 1
+            return 0
 
     def get_or_create(self, key: Hashable, factory: Callable[[], Any]) -> Any:
         """Lookup; on miss, run ``factory`` (the translation) and cache."""
+        return self.get_or_translate(key, lambda: (factory(), None))
+
+    # -- full lookup path: memory -> disk -> translate --------------------
+    def get_or_translate(
+            self, key: Hashable,
+            translate: Callable[[], Tuple[Any, Optional[Tuple[str, Any]]]]
+    ) -> Any:
+        """Three-tier lookup.  ``translate`` runs only when neither the
+        memory tier nor the disk tier can serve ``key``; it returns
+        ``(live value, persist)`` where ``persist`` is ``(kind, payload)``
+        for the disk tier or ``None`` for memory-only values.  Translation
+        wall-time is measured here and drives both the eviction score and
+        ``stats()['translate_ms']``."""
         value = self.get(key)
-        if value is None:
-            value = self.put(key, factory())
+        if value is not None:
+            return value
+        if self.store is not None:
+            env = self.store.load(key)
+            if env is not None and env["kind"] in _REVIVERS:
+                t0 = time.perf_counter()
+                try:
+                    value = _REVIVERS[env["kind"]](env["payload"])
+                except Exception:
+                    value = None  # revival failure degrades to a miss
+                dt = (time.perf_counter() - t0) * 1e3
+                if value is not None:
+                    with self._lock:
+                        self.restored += 1
+                        self.restore_ms += dt
+                        self._insert(key, value, env.get("cost_ms", 0.0),
+                                     env.get("size_bytes", 1))
+                    return value
+            with self._lock:
+                self.disk_misses += 1
+        t0 = time.perf_counter()
+        value, persist = translate()
+        dt = (time.perf_counter() - t0) * 1e3
+        with self._lock:
+            self.translated += 1
+            self.translate_ms += dt
+        size = 1
+        if persist is not None and self.store is not None:
+            kind, payload = persist
+            size = self._safe_save(key, kind, payload, dt) or 1
+        with self._lock:
+            self._insert(key, value, dt, size)
         return value
+
+    def preload(self, backend: Optional[str] = None,
+                fingerprint: Optional[str] = None,
+                store: Optional["DiskStore"] = None) -> int:
+        """Revive matching disk entries into the memory tier ahead of use
+        (warm-up / migration).  ``backend`` / ``fingerprint`` filter on the
+        leading key components; ``store`` overrides ``self.store`` (a
+        migration source may hand over its own).  Returns the number of
+        entries restored; unrevivable entries are skipped silently."""
+        store = store if store is not None else self.store
+        if store is None:
+            return 0
+        count = 0
+        for key, env in store.iter_entries():
+            if not isinstance(key, tuple) or len(key) < 2:
+                continue
+            if backend is not None and key[0] != backend:
+                continue
+            if fingerprint is not None and key[1] != fingerprint:
+                continue
+            with self._lock:
+                if key in self._entries:
+                    continue
+            if env["kind"] not in _REVIVERS:
+                continue
+            t0 = time.perf_counter()
+            try:
+                value = _REVIVERS[env["kind"]](env["payload"])
+            except Exception:
+                continue
+            dt = (time.perf_counter() - t0) * 1e3
+            with self._lock:
+                self.restored += 1
+                self.restore_ms += dt
+                self._insert(key, value, env.get("cost_ms", 0.0),
+                             env.get("size_bytes", 1))
+            count += 1
+        return count
 
     # ------------------------------------------------------------------
     def size(self, backend: Optional[str] = None) -> int:
@@ -78,25 +447,51 @@ class TranslationCache:
     def stats(self) -> Dict[str, object]:
         with self._lock:
             lookups = self.hits + self.misses
-            return {
+            st: Dict[str, object] = {
                 "entries": len(self._entries),
                 "capacity": self.capacity,
                 "hits": self.hits,
                 "misses": self.misses,
                 "evictions": self.evictions,
                 "hit_rate": (self.hits / lookups) if lookups else 0.0,
+                "translated": self.translated,
+                "restored": self.restored,
+                "disk_misses": self.disk_misses,
+                "translate_ms": self.translate_ms,
+                "restore_ms": self.restore_ms,
+                "export_fallbacks": self.export_fallbacks,
+                "last_export_error": self.last_export_error,
+                "persist_errors": self.persist_errors,
             }
+        if self.store is not None:
+            st["store"] = self.store.stats()
+        return st
 
     def clear(self) -> None:
+        """Drop the memory tier and reset counters (the disk tier, if any,
+        is deliberately left intact — use ``store.clear()`` for that)."""
         with self._lock:
             self._entries.clear()
             self.hits = self.misses = self.evictions = 0
+            self.translated = self.restored = self.disk_misses = 0
+            self.translate_ms = self.restore_ms = 0.0
+            self.export_fallbacks = 0
+            self.last_export_error = None
+            self.persist_errors = 0
+            self._clock = 0.0
 
 
 # process-wide default: sessions and backends share translations unless
-# handed an explicit cache (tests inject fresh instances for isolation)
+# handed an explicit cache (tests inject fresh instances for isolation).
+# HETGPU_CACHE_DIR attaches a persistent tier to it.
 _GLOBAL_CACHE = TranslationCache()
 
 
 def global_cache() -> TranslationCache:
+    # re-checked on every call (not latched): an application may set the
+    # env var after some backend has already touched the global cache
+    if _GLOBAL_CACHE.store is None:
+        cache_dir = os.environ.get("HETGPU_CACHE_DIR")
+        if cache_dir:
+            _GLOBAL_CACHE.store = DiskStore(cache_dir)
     return _GLOBAL_CACHE

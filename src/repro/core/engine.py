@@ -1,12 +1,26 @@
-"""The hetGPU execution engine — segment walker + snapshot machinery.
+"""The hetGPU execution engine — segment walker + snapshot machinery
+(paper §4.2 Dynamic Translation, §4.3 State Capture).
 
-The engine owns the *control* state the paper puts in its snapshots: the
-position in the segmented program (node index), loop iteration counters, the
-per-thread virtual register file, shared memory, and global buffers.
-Backends only ever execute one straight-line segment; everything between
-segments (barrier semantics, loop back-edges, pause flags, snapshot /
-resume) lives here and is therefore **identical across backends** — which is
-precisely what makes cross-backend migration sound.
+The engine is the piece of the paper's runtime that walks the *segmented*
+program: it runs the :mod:`~repro.core.passes` pipeline at the launch's
+``opt_level``, asks :mod:`~repro.core.segments` to split the optimized
+body at barriers ("each segment is a separate kernel"), then executes the
+node list one entry at a time, delegating each straight-line
+:class:`~repro.core.segments.SegNode` to the bound backend — whose
+translation of it lands in the shared
+:class:`~repro.core.cache.TranslationCache`.
+
+The engine owns the *control* state the paper puts in its snapshots
+(§4.3 "State Representation"): the position in the segmented program
+(node index — the device-neutral stand-in for a machine PC), loop
+iteration counters, the per-thread virtual register file, shared memory,
+and global buffers.  Backends only ever execute one straight-line segment;
+everything between segments (barrier semantics, loop back-edges,
+cooperative pause flags, snapshot / resume) lives here and is therefore
+**identical across backends** — which is precisely what makes
+cross-backend migration (§6.3) sound.  Between segments the engine also
+prunes registers no later segment reads, the paper's §8 "only saving live
+registers" snapshot-size optimization.
 """
 from __future__ import annotations
 

@@ -5,23 +5,32 @@ kernel launch with CUDA-like ``<<<grid, block>>>`` geometry, streams with
 in-order semantics, cooperative checkpoint (pause flag honoured at
 barriers), restore, and live migration between backends.  The "JIT
 modules" are entries in the shared :class:`~repro.core.cache.
-TranslationCache` (paper §4.2), whose hit/miss/eviction counters this
-session surfaces via :meth:`HetSession.cache_stats` and ``stats``; kernels
-launch through the :mod:`~repro.core.passes` pipeline at the session's
-``opt_level``.
+TranslationCache` (paper §4.2), whose hit/miss/restore/eviction counters
+this session surfaces via :meth:`HetSession.cache_stats` and ``stats``;
+kernels launch through the :mod:`~repro.core.passes` pipeline at the
+session's ``opt_level``.
+
+Two cluster-lifetime amortization hooks sit here (paper §4.2 pays JIT cost
+once per kernel, not once per process): a session may be bound to a
+persistent :class:`~repro.core.cache.DiskStore` (``store=``) so its
+translations outlive the process, and :meth:`HetSession.warmup` ahead-of-
+time translates a kernel set, reporting what was restored from disk versus
+freshly translated.  :func:`migrate` preloads the destination session's
+cache from the source's store, so a live migration lands on a node whose
+runtime already holds the translated segments it is about to execute.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from . import hetir as ir
 from .backends import get_backend
 from .backends.base import Backend
-from .cache import TranslationCache
+from .cache import DiskStore, TranslationCache
 from .engine import Engine
 from .passes import DEFAULT_OPT_LEVEL, OPT_MAX
 from .state import Snapshot
@@ -43,8 +52,23 @@ class HetSession:
 
     def __init__(self, backend: str = "vectorized",
                  opt_level: Optional[int] = None,
-                 cache: Optional[TranslationCache] = None):
+                 cache: Optional[TranslationCache] = None,
+                 store: Optional[Union[str, DiskStore]] = None):
         self.backend_name = backend
+        if store is not None and not isinstance(store, DiskStore):
+            store = DiskStore(store)
+        if cache is None and store is not None:
+            # a session opened "against a store": private memory tier,
+            # persistent disk tier — translations survive this process
+            cache = TranslationCache(store=store)
+        elif cache is not None and store is not None:
+            if cache.store is None:
+                cache.store = store
+            elif cache.store.dir.resolve() != store.dir.resolve():
+                raise ValueError(
+                    "cache is already bound to a different store "
+                    f"({cache.store.dir}); refusing to silently ignore "
+                    f"store={store.dir}")
         self.backend: Backend = get_backend(backend, cache=cache)
         self.cache: TranslationCache = self.backend.cache
         self.opt_level = DEFAULT_OPT_LEVEL if opt_level is None \
@@ -55,7 +79,8 @@ class HetSession:
         self.pause_flag = False  # the paper's cooperative pause flag
         self.stats = {"launches": 0, "translation_ms": 0.0,
                       "migrations": 0, "cache_hits": 0, "cache_misses": 0,
-                      "cache_evictions": 0}
+                      "cache_evictions": 0, "cache_restored": 0,
+                      "cache_translated": 0}
 
     def cache_stats(self) -> Dict[str, object]:
         """Shared translation-cache counters (paper §4.2 JIT cache)."""
@@ -66,6 +91,8 @@ class HetSession:
         self.stats["cache_hits"] = st["hits"]
         self.stats["cache_misses"] = st["misses"]
         self.stats["cache_evictions"] = st["evictions"]
+        self.stats["cache_restored"] = st["restored"]
+        self.stats["cache_translated"] = st["translated"]
 
     # -- module loading ------------------------------------------------
     def load_kernel(self, program: ir.Program) -> str:
@@ -74,6 +101,56 @@ class HetSession:
         program.validate()
         self._kernels[program.name] = _KernelHandle(program)
         return program.name
+
+    # -- cache warm-up ---------------------------------------------------
+    def warmup(self, programs: Iterable, grids: Sequence[Tuple[int, int]]
+               = ((2, 32),)) -> Dict[str, object]:
+        """Ahead-of-time translate a kernel set (paper §4.2: JIT cost is
+        paid per *cluster lifetime* — a node expecting migrated work can
+        translate it before the work arrives).
+
+        ``programs`` is an iterable of ``ir.Program`` or ``(ir.Program,
+        example_args)`` pairs; ``grids`` is a sequence of ``(grid, block)``
+        geometries to specialize for.  When no example args are given they
+        are synthesized (unit scalars, zero buffers sized ``grid*block``)
+        and any kernel the synthetic args cannot drive is reported —
+        warm-up is best-effort by design.  Each warm-up launch runs on
+        scratch copies; session buffers are untouched.
+
+        Returns a report: per-kernel status plus how many segments were
+        ``restored`` from the disk store versus freshly ``translated``
+        (warm restarts should see ``translated == 0``).
+        """
+        report: Dict[str, object] = {"kernels": [], "translated": 0,
+                                     "restored": 0, "cache_hits": 0,
+                                     "errors": 0}
+        for item in programs:
+            prog, args = item if isinstance(item, tuple) else (item, None)
+            for grid, block in grids:
+                before = self.cache.stats()
+                entry = {"kernel": prog.name, "grid": grid, "block": block}
+                t0 = time.perf_counter()
+                try:
+                    use_args = dict(args) if args is not None else \
+                        _synthesize_args(prog, grid, block)
+                    eng = Engine(prog, self.backend, grid, block, use_args,
+                                 opt_level=self.opt_level)
+                    eng.run()
+                    entry["status"] = "ok"
+                except Exception as exc:  # best-effort: report, don't raise
+                    entry["status"] = f"error: {type(exc).__name__}: {exc}"
+                    report["errors"] += 1
+                after = self.cache.stats()
+                for field_ in ("translated", "restored"):
+                    delta = after[field_] - before[field_]
+                    entry[field_] = delta
+                    report[field_] += delta
+                entry["cache_hits"] = after["hits"] - before["hits"]
+                report["cache_hits"] += entry["cache_hits"]
+                entry["ms"] = round((time.perf_counter() - t0) * 1e3, 2)
+                report["kernels"].append(entry)
+        self._sync_cache_stats()
+        return report
 
     # -- memory management ----------------------------------------------
     def gpu_malloc(self, name: str, shape, dtype=np.float32) -> np.ndarray:
@@ -145,22 +222,55 @@ class HetSession:
         self._sync_cache_stats()
 
 
+def _synthesize_args(prog: ir.Program, grid: int,
+                     block: int) -> Dict[str, object]:
+    """Best-effort example arguments for warm-up launches: unit scalars
+    and ``grid*block``-sized zero buffers (covers gid-indexed kernels; a
+    kernel needing real geometry scalars should be warmed with explicit
+    example args)."""
+    args: Dict[str, object] = {}
+    for p in prog.params:
+        if isinstance(p, ir.Ptr):
+            args[p.name] = np.zeros(grid * block, dtype=ir.np_dtype(p.dtype))
+        else:
+            args[p.name] = ir.np_dtype(p.dtype).type(1)
+    return args
+
+
 def migrate(rec: LaunchRecord, src: HetSession, dst: HetSession,
             kernel: str) -> LaunchRecord:
     """Live-migrate a launch from one session/backend to another
     (paper §6.3). Returns the resumed launch on ``dst``; timing stats are
-    recorded on both sessions."""
+    recorded on both sessions.
+
+    Before resuming, the destination's translation cache is preloaded from
+    whichever persistent store is reachable (its own, else the source's):
+    if this program has ever been translated for the destination backend
+    within the store's lifetime, the migrated launch pays near-zero
+    translation cost — the paper's cluster-lifetime JIT amortization."""
     t0 = time.perf_counter()
     blob = src.checkpoint(rec)  # capture at barrier
     t1 = time.perf_counter()
-    new = dst.restore(kernel, blob)  # reload + reshard onto new device
+    # warm the destination from the persistent tier: the engine's program
+    # is the *optimized* body, whose fingerprint is what cache keys carry
+    fp = ir.program_fingerprint(rec.engine.program)
+    store = dst.cache.store if dst.cache.store is not None \
+        else src.cache.store
+    restored = 0
+    if store is not None:
+        restored = dst.cache.preload(backend=dst.backend_name,
+                                     fingerprint=fp, store=store)
     t2 = time.perf_counter()
+    new = dst.restore(kernel, blob)  # reload + reshard onto new device
+    t3 = time.perf_counter()
     src.stats["migrations"] += 1
     dst.stats["migrations"] += 1
     dst.stats.setdefault("last_migration", {})
     dst.stats["last_migration"] = {
         "checkpoint_ms": (t1 - t0) * 1e3,
-        "restore_ms": (t2 - t1) * 1e3,
+        "warmup_ms": (t2 - t1) * 1e3,
+        "restore_ms": (t3 - t2) * 1e3,
         "payload_bytes": len(blob),
+        "cache_restored": restored,
     }
     return new

@@ -1,4 +1,4 @@
-"""Barrier segmentation of hetIR programs.
+"""Barrier segmentation of hetIR programs (paper §4.3, State Capture).
 
 The paper's state-capture design hinges on splitting a kernel into
 *segments* separated by barriers: "we break the kernel into segments
@@ -6,6 +6,14 @@ separated by global barriers ... Each segment is a separate kernel."
 A snapshot is only taken between segments, where every thread of a block is
 at a known, aligned point — so the snapshot is just (segment index, register
 file, shared memory, global memory), with no machine PC involved.
+
+Segmentation runs *after* the :mod:`~repro.core.passes` pipeline and is
+memoized on the optimized :class:`~repro.core.hetir.Program`, so a
+``SegNode``'s index is stable across launches — that index is a component
+of every translation-cache key (paper §4.2), and is the ``node_idx`` a
+:class:`~repro.core.state.Snapshot` records.  The per-segment def/use and
+global-access analyses computed here feed both the engine's live-register
+pruning (§8) and the pallas backend's coalesced-buffer tiling.
 
 We flatten a structured :class:`~repro.core.hetir.Program` into a linear
 list of *nodes*:

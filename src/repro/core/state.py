@@ -13,7 +13,17 @@ prescribes (§4.2 "State Representation"):
 
 Everything is stored as host numpy arrays, so a snapshot taken from any
 backend (scalar interpreter, vectorized jnp, Pallas) can be re-instantiated
-on any other — the cross-architecture migration property.
+on any other — the cross-architecture migration property (§6.3).  The wire
+format is a self-describing, versioned npz blob (``to_bytes`` /
+``from_bytes``): the migration payload :func:`~repro.core.runtime.migrate`
+ships between sessions.  The snapshot records the ``opt_level`` its
+``node_idx`` was taken at, because node indices address the *optimized*
+segmented program (see :mod:`~repro.core.segments`) and the destination
+must re-run the deterministic :mod:`~repro.core.passes` pipeline at the
+same level to reconstruct an identical node list.  What a snapshot does
+*not* carry is translated code: the destination's translations come from
+its own :class:`~repro.core.cache.TranslationCache` — warmed from a
+persistent store when one is available (§4.2 cluster-lifetime JIT).
 """
 from __future__ import annotations
 

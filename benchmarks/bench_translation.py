@@ -28,7 +28,8 @@ import time
 
 import numpy as np
 
-from repro.core import DiskStore, Engine, TranslationCache, get_backend
+from repro.core import DiskStore, Engine, OPT_MAX, TranslationCache, \
+    get_backend
 from repro.core import kernels_suite as suite
 
 
@@ -46,6 +47,18 @@ def _case(name, rng):
                  "B": np.ones(16 * 16, np.float32),
                  "C": np.zeros(8 * 16, np.float32),
                  "K": 16, "N": 16, "ktiles": 2}, 8, 16)
+    if name == "poly_eval":
+        return ({"X": rng.normal(size=128).astype(np.float32),
+                 "Coef": rng.normal(size=7).astype(np.float32),
+                 "Out": np.zeros(128, np.float32), "n": 128}, 4, 32)
+    if name == "swizzle_copy":
+        return ({"A": rng.normal(size=128).astype(np.float32),
+                 "Out": np.zeros(128, np.float32)}, 4, 32)
+    if name == "tap_filter":
+        return ({"A": rng.normal(size=64).astype(np.float32),
+                 "W": rng.normal(size=4).astype(np.float32),
+                 "Tmp": np.zeros(64, np.float32),
+                 "Out": np.zeros(64, np.float32)}, 2, 32)
     return ({"Count": np.zeros(1, np.float32)}, 2, 32)
 
 
@@ -83,6 +96,53 @@ def run() -> list:
                 "relaunch_misses": st["misses"] - misses_after_first,
                 "ops_before": opt.ops_before, "ops_after": opt.ops_after,
             })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# pass-pipeline table: per-pass stats + interp executed-step deltas
+# ---------------------------------------------------------------------------
+
+PIPELINE_KERNELS = ("poly_eval", "tap_filter", "matmul_tiled",
+                    "swizzle_copy", "montecarlo_pi")
+
+
+def run_pass_pipeline(kernels=PIPELINE_KERNELS) -> list:
+    """What the phase-2 pipeline buys, per kernel: static op delta,
+    executed-op-schedule delta, the interp backend's *true* dynamically
+    counted per-thread step delta (O0 vs OPT_MAX), and which passes fired.
+    The CI smoke asserts ``ops_removed > 0`` in aggregate and a strict
+    interp step reduction on the loop-heavy kernels."""
+    rows = []
+    rng = np.random.default_rng(1)
+    for name in kernels:
+        args, grid, block = _case(name, rng)
+        steps = {}
+        sched = {}
+        stats = None
+        for level in (0, OPT_MAX):
+            prog, _ = suite.SUITE[name]()
+            be = get_backend("interp", cache=TranslationCache())
+            eng = Engine(prog, be, grid, block, dict(args),
+                         opt_level=level)
+            eng.run()
+            steps[level] = be.steps_executed
+            sched[level] = eng.executed_ops
+            if level:
+                stats = eng.opt_stats
+        fired = {k: v for k, v in stats.per_pass.items() if v}
+        rows.append({
+            "bench": "pass_pipeline", "kernel": name, "level": OPT_MAX,
+            "ops_before": stats.ops_before, "ops_after": stats.ops_after,
+            "ops_removed": stats.ops_removed,
+            "sched_o0": sched[0], "sched_omax": sched[OPT_MAX],
+            "interp_steps_o0": steps[0],
+            "interp_steps_omax": steps[OPT_MAX],
+            "interp_step_cut": round(
+                1 - steps[OPT_MAX] / max(steps[0], 1), 3),
+            "opt_ms": round(sum(stats.per_pass_ms.values()), 2),
+            "passes": "+".join(sorted(fired)),
+        })
     return rows
 
 

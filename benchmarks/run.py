@@ -23,6 +23,8 @@ def main() -> None:
     _emit(bench_overhead.run())
     print("# -- paper 6.2: translation/JIT cost --")
     _emit(bench_translation.run())
+    print("# -- paper 4.2: pass pipeline (per-pass stats, interp steps) --")
+    _emit(bench_translation.run_pass_pipeline())
     print("# -- paper 4.2: persistent cache, cold vs warm start --")
     _emit(bench_translation.run_cold_warm())
     print("# -- paper 6.3: live migration downtime --")

@@ -38,10 +38,14 @@ def _flatten_with_paths(tree) -> Dict[str, Any]:
     out = {}
 
     def walk(node, path):
+        # PartitionSpec subclasses tuple: it must stay a *leaf* here, or a
+        # specs tree flattens into per-axis fragments whose keys never match
+        # the state's keys — every leaf would then be saved spec-less and
+        # restore fully replicated (breaking cross-mesh elastic restore).
         if isinstance(node, dict):
             for k in sorted(node):
                 walk(node[k], path + (str(k),))
-        elif isinstance(node, (list, tuple)):
+        elif isinstance(node, (list, tuple)) and not isinstance(node, P):
             for i, v in enumerate(node):
                 walk(v, path + (str(i),))
         else:

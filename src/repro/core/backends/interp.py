@@ -22,6 +22,14 @@ from .base import Backend, HostState, Launch
 class InterpBackend(Backend):
     name = "interp"
 
+    def __init__(self, cache=None):
+        super().__init__(cache)
+        # true dynamic work counter: per-thread op executions, divergence-
+        # aware (a step over k active threads counts k).  This is the
+        # "interp step count" the translation benchmark reports at O0 vs
+        # OPT_MAX — unrolling + post-unroll folding shrink it directly.
+        self.steps_executed = 0
+
     def _translate(self, seg: SegNode, launch: Launch):
         """"Translation" for the interpreter: stage the segment into a tree
         of dispatch-step objects once, instead of re-walking the statement
@@ -55,6 +63,7 @@ class InterpBackend(Backend):
                 shared = state.shared[b] if state.shared is not None else None
                 ctx = _BlockCtx(b, T, launch, regs, shared, state.globals_)
                 plan(ctx, list(range(T)))
+                self.steps_executed += ctx.steps
                 for k, v in ctx.regs.items():
                     if k not in state.regs:
                         state.regs[k] = np.zeros(
@@ -72,6 +81,7 @@ class _BlockCtx:
         self.regs: Dict[str, np.ndarray] = regs
         self.shared = shared
         self.globals_ = globals_
+        self.steps = 0  # per-thread op executions within this block
 
     def reg_write(self, reg: ir.Reg, t: int, value) -> None:
         if reg.name not in self.regs:
@@ -107,6 +117,7 @@ class _OpStep(_Step):
         self.op = op
 
     def __call__(self, ctx, threads):
+        ctx.steps += len(threads)
         _exec_op(self.op, ctx, threads)
 
 
@@ -115,6 +126,7 @@ class _CollectiveStep(_Step):
         self.op = op
 
     def __call__(self, ctx, threads):
+        ctx.steps += len(threads)
         _exec_collective(self.op, ctx, threads)
 
 
@@ -260,7 +272,11 @@ def _exec_collective(op: ir.Op, ctx: _BlockCtx, threads: List[int]) -> None:
             ctx.reg_write(d, t, r)
     elif oc == ir.REDUCE_ADD:
         vals = [_val(ctx, op.args[0], t) for t in threads]
-        r = np.sum(np.array(vals)) if vals else 0
+        # accumulate in the dest dtype: numpy's sum silently promotes
+        # int32 to the platform int, which would make interp reductions
+        # wrap differently from the jnp backends (fuzz-harness find)
+        r = np.sum(np.array(vals), dtype=ir.np_dtype(d.dtype)) \
+            if vals else 0
         for t in threads:
             ctx.reg_write(d, t, r)
     elif oc == ir.REDUCE_MAX:

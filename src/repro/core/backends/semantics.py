@@ -11,6 +11,14 @@ Predication (`@PRED`) is realized as an explicit active-mask stack — the
 paper's "software-managed predication" (§4.4): both branch outcomes share a
 single instruction stream and inactive lanes are masked at register writes,
 memory stores, and collective participation.
+
+Every inexact floating-point result (``ADD``/``SUB``/``MUL``/``DIV`` and
+both roundings of ``FMA``) is pinned to its own IEEE rounding (see
+:func:`_pin`): XLA otherwise applies graph-shape-dependent inexact
+rewrites — FMA contraction, constant reassociation across adds — which
+make results differ between two semantically identical programs (e.g. a
+rolled loop vs its IR-unrolled form — found by the differential fuzz
+harness).  hetIR's contract is one-op-one-rounding on every backend.
 """
 from __future__ import annotations
 
@@ -139,7 +147,7 @@ def eval_op(op: ir.Op, env: Env, mask) -> None:
         env.write_reg(d, _UNOPS[oc](_arg(env, op.args[0])), mask)
     elif oc == ir.FMA:
         a, b, c = (_arg(env, x) for x in op.args)
-        env.write_reg(d, a * b + c, mask)
+        env.write_reg(d, _pin(_mul_exact(a, b) + c), mask)
     elif oc == ir.SELECT:
         c, a, b = (_arg(env, x) for x in op.args)
         env.write_reg(d, jnp.where(c, a, b), mask)
@@ -246,12 +254,39 @@ def _int_or_float(a, b, fi, ff):
     return ff(a, b) if jnp.issubdtype(a.dtype, jnp.floating) else fi(a, b)
 
 
+def _pin(v):
+    """Pin a floating intermediate to its own IEEE rounding.
+
+    XLA CPU applies inexact algebraic rewrites whose firing depends on the
+    *surrounding graph shape*: mul+add contracts into a hardware FMA
+    inside fused loops, and constant operands reassociate across adds
+    (``(x + c1) + c2 → x + (c1 + c2)``) — so two semantically identical
+    programs can differ in their low bits, which breaks the pass
+    pipeline's bit-identical O0-vs-OPT_MAX contract (both found by the
+    differential fuzz harness).  ``lax.optimization_barrier`` and
+    ``reduce_precision`` are erased before fusion (verified on jax 0.4.x);
+    ``nextafter(v, v)`` is a *bitwise identity* for every input (equal
+    arguments return ``y``; NaN/±inf/±0 round-trip exactly) that lowers
+    to bit manipulation the compiler cannot rewrite through.  Every
+    inexact float op (ADD/SUB/MUL/DIV and both halves of FMA) pins its
+    result, making the jit backends exactly IEEE-sequential — the same
+    one-op-one-rounding semantics the interpreter defines.  Integer
+    values pass through untouched."""
+    if jnp.issubdtype(jnp.result_type(v), jnp.floating):
+        return jnp.nextafter(v, v)
+    return v
+
+
+def _mul_exact(a, b):
+    return _pin(a * b)
+
+
 _BINOPS = {
-    ir.ADD: lambda a, b: a + b,
-    ir.SUB: lambda a, b: a - b,
-    ir.MUL: lambda a, b: a * b,
+    ir.ADD: lambda a, b: _pin(a + b),
+    ir.SUB: lambda a, b: _pin(a - b),
+    ir.MUL: _mul_exact,
     ir.DIV: lambda a, b: _int_or_float(a, b, lambda x, y: x // y,
-                                       lambda x, y: x / y),
+                                       lambda x, y: _pin(x / y)),
     ir.MOD: lambda a, b: a % b,
     ir.MIN: jnp.minimum,
     ir.MAX: jnp.maximum,

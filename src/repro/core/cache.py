@@ -79,13 +79,19 @@ def register_reviver(kind: str, fn: Callable[[Any], Any]) -> None:
 def _runtime_tag() -> str:
     """Version tag for the store directory: entries are only shared between
     processes with an identical serialization contract (store format,
-    jax version, accelerator platform)."""
+    jax version, accelerator platform) *and* an identical pass pipeline.
+    The pipeline fingerprint (:func:`repro.core.passes.
+    pipeline_fingerprint`) covers pass names/order per level and the
+    unrolling thresholds — a pass-set change retires the whole directory,
+    so a stale artifact optimized by an older pipeline is never restored
+    against a program the current pipeline would optimize differently."""
     try:
         import jax
         jv, plat = jax.__version__, jax.default_backend()
     except Exception:  # pragma: no cover - jax is a baked-in dependency
         jv, plat = "nojax", "cpu"
-    return f"v{STORE_FORMAT_VERSION}-jax{jv}-{plat}"
+    from .passes import pipeline_fingerprint
+    return f"v{STORE_FORMAT_VERSION}-p{pipeline_fingerprint()}-jax{jv}-{plat}"
 
 
 class DiskStore:

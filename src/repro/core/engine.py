@@ -31,7 +31,8 @@ import numpy as np
 from . import hetir as ir
 from .backends.base import Backend, HostState, Launch
 from .passes import DEFAULT_OPT_LEVEL, OPT_MAX, get_optimized
-from .segments import LoopEnd, LoopStart, Node, SegNode, segment_program
+from .segments import (LoopEnd, LoopStart, Node, SegNode, dynamic_op_count,
+                       resolve_trip_count, segment_program)
 from .state import Snapshot
 
 
@@ -65,6 +66,13 @@ class Engine:
         self.node_idx = 0
         self.loop_counters: Dict[int, int] = {}
         self.finished = False
+        # per-thread executed-op schedule size, accumulated per executed
+        # segment (segments.dynamic_op_count) — the benchmark metric that
+        # makes unrolling + post-unroll folding visible as one number.
+        # Counts are memoized per node: stmts and launch scalars are fixed
+        # for an engine, and segment-level loops re-execute their nodes.
+        self.executed_ops = 0
+        self._node_sched: Dict[int, int] = {}
 
         # registers that any segment reads — everything else is dead between
         # segments and gets pruned from state (the paper's "only saving live
@@ -112,6 +120,12 @@ class Engine:
             node = self.nodes[self.node_idx]
             if isinstance(node, SegNode):
                 self.backend.run_segment(node, self.state, self.launch)
+                sched = self._node_sched.get(self.node_idx)
+                if sched is None:
+                    sched = dynamic_op_count(node.stmts,
+                                             self.launch.scalars)
+                    self._node_sched[self.node_idx] = sched
+                self.executed_ops += sched
                 self._prune_dead_regs()
                 executed += 1
                 self.node_idx += 1
@@ -145,9 +159,10 @@ class Engine:
         return True
 
     def _trip_count(self, start: LoopStart) -> int:
-        if isinstance(start.count, int):
-            return start.count
-        return int(self.launch.scalars[start.count])
+        trips = resolve_trip_count(start.count, self.launch.scalars)
+        if trips is None:
+            raise KeyError(f"loop count scalar {start.count!r} is unbound")
+        return trips
 
     def _set_loop_var(self, start: LoopStart, value: int) -> None:
         self.state.regs[start.var.name] = np.full(

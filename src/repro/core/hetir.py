@@ -572,29 +572,42 @@ class _LoopCtx(_Ctx):
 
 
 def body_defs_uses(body: Sequence[Stmt]) -> Tuple[List[Reg], List[Reg]]:
-    """Registers defined in ``body`` and registers used before definition."""
+    """Registers defined in ``body`` and registers used before definition.
+
+    Only *unconditional* defs (not nested under a @PRED or inside a
+    possibly-zero-trip loop) shadow later uses: a predicated write leaves
+    inactive threads reading the register's pre-segment value, so the
+    register is genuinely live-in.  Treating conditional defs as sure defs
+    made the engine prune such registers between segments — a divergent
+    block then crashed (or, worse, silently merged against zeros) when a
+    later segment read them.  Found by the differential fuzz harness."""
     defs: Dict[str, Reg] = {}
+    sure: set = set()
     uses: Dict[str, Reg] = {}
 
-    def walk(stmts: Sequence[Stmt]):
+    def walk(stmts: Sequence[Stmt], conditional: bool):
         for s in stmts:
             if isinstance(s, Op):
                 for r in s.arg_regs():
-                    if r.name not in defs and r.name not in uses:
+                    if r.name not in sure and r.name not in uses:
                         uses[r.name] = r
                 if s.dest is not None:
                     defs.setdefault(s.dest.name, s.dest)
+                    if not conditional:
+                        sure.add(s.dest.name)
             elif isinstance(s, Pred):
-                if s.cond.name not in defs and s.cond.name not in uses:
+                if s.cond.name not in sure and s.cond.name not in uses:
                     uses[s.cond.name] = s.cond
-                walk(s.body)
+                walk(s.body, True)
             elif isinstance(s, Loop):
                 defs.setdefault(s.var.name, s.var)
-                walk(s.body)
+                # a zero-trip loop defines nothing: body defs (and the
+                # loop var itself) stay conditional
+                walk(s.body, True)
             elif isinstance(s, Barrier):
                 pass
 
-    walk(body)
+    walk(body, False)
     return list(defs.values()), list(uses.values())
 
 

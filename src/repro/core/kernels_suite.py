@@ -5,7 +5,11 @@ tiled matrix multiply (shared memory + barriers), reduction (shared-memory
 tree + atomics), inclusive scan, bitcount via ballot vote, Monte-Carlo pi
 (divergence + RNG + atomics), a small neural-net layer (matvec + ReLU),
 a divergent 1-D stencil, and a persistent iterative kernel (the migration
-test target).
+test target).  Three loop-heavy kernels target the phase-2 optimizer
+(see ``docs/PASSES.md``): ``poly_eval`` (constant-trip Horner loop —
+unrolling + folding), ``swizzle_copy`` (power-of-two index arithmetic —
+strength reduction), and ``tap_filter`` (a recomputed quotient spanning a
+barrier — cross-segment value numbering).
 
 Each returns a :class:`~repro.core.hetir.Program` plus a pure-numpy oracle.
 """
@@ -355,6 +359,112 @@ def persistent_counter(outer: str = "iters") -> Tuple[ir.Program, Callable]:
 
 
 # ---------------------------------------------------------------------------
+def poly_eval(degree: int = 6) -> Tuple[ir.Program, Callable]:
+    """Horner polynomial evaluation — the unrolling showcase: a constant
+    trip-count loop whose per-iteration coefficient index (``degree - j``)
+    is pure arithmetic on the loop variable.  Rolled, every trip pays
+    CONST/SUB/loads; unrolled, the index folds to a constant per copy and
+    DCE deletes the arithmetic, so the executed schedule shrinks on interp
+    and pallas exactly as trace-unrolling always did on vectorized."""
+    b = Builder("poly_eval", [Ptr("X"), Ptr("Coef"), Ptr("Out"),
+                              Scalar("n")])
+    i = b.global_id(0)
+    x = b.var(b.const(0.0, ir.F32), hint="x")
+    with b.when(i < b.param("n")):
+        b.assign(x, b.load("X", i))
+    acc = b.var(b.const(0.0, ir.F32), hint="pacc")
+    with b.loop(degree + 1, hint="pj") as j:
+        cidx = b.const(degree) - j       # folds once unrolled
+        c = b.load("Coef", cidx)
+        b.assign(acc, acc * x + c)       # fuses to FMA
+    with b.when(i < b.param("n")):
+        b.store("Out", i, acc)
+    prog = b.done()
+
+    def oracle(args):
+        n = int(args["n"])
+        X = np.asarray(args["X"], np.float32)
+        C = np.asarray(args["Coef"], np.float32)
+        out = np.array(args["Out"], np.float32)
+        acc = np.zeros_like(X)
+        for j in range(degree + 1):
+            acc = acc * X + C[degree - j]
+        out[:n] = acc[:n]
+        return {"Out": out}
+
+    return prog, oracle
+
+
+# ---------------------------------------------------------------------------
+def swizzle_copy(size: int = 128) -> Tuple[ir.Program, Callable]:
+    """Power-of-two index swizzle — the strength-reduction showcase: the
+    gather index is built from ``*8``, ``/4``, ``%16``, ``%size`` and a
+    parity test, all by power-of-two constants, so at OPT_MAX every
+    multiplicative op becomes a shift or mask.  Launch with
+    ``grid * block == size`` (``size`` is baked in at build time so the
+    wrap is a foldable constant, like a template parameter)."""
+    assert size & (size - 1) == 0, "size must be a power of two"
+    b = Builder("swizzle_copy", [Ptr("A"), Ptr("Out")])
+    i = b.global_id(0)
+    j = (i * b.const(8) + i / b.const(4) + i % b.const(16)) \
+        % b.const(size)
+    v = b.var(b.load("A", j), hint="sv")
+    even = (i % b.const(2)).eq(b.const(0))
+    with b.when(even):
+        b.assign(v, v + b.load("A", i))
+    b.store("Out", i, v)
+    prog = b.done()
+
+    def oracle(args):
+        A = np.asarray(args["A"], np.float32)
+        i = np.arange(size, dtype=np.int64)
+        j = (i * 8 + i // 4 + i % 16) % size
+        out = A[j].copy()
+        out[i % 2 == 0] += A[i % 2 == 0]
+        return {"Out": out.astype(np.float32)}
+
+    return prog, oracle
+
+
+# ---------------------------------------------------------------------------
+def tap_filter(taps: int = 4, size: int = 64) -> Tuple[ir.Program, Callable]:
+    """Two-phase tap filter across a barrier — the cross-segment
+    value-numbering showcase.  Phase 1 recomputes ``i / 3`` (a DIV that
+    :func:`~repro.core.passes.hoist_invariants` refuses to move) inside a
+    constant-trip tap loop; phase 2, a separate engine segment after the
+    barrier, derives the same quotient again.  At OPT_MAX the loop unrolls,
+    the per-iteration ``j * 5`` offsets fold, and value numbering keeps one
+    ``i / 3`` alive across the segment boundary instead of three
+    re-executions.  Launch with ``grid * block == size``."""
+    b = Builder("tap_filter", [Ptr("A"), Ptr("W"), Ptr("Tmp"), Ptr("Out")])
+    i = b.global_id(0)
+    acc = b.var(b.const(0.0, ir.F32), hint="tacc")
+    with b.loop(taps, hint="tp") as j:
+        base = i / b.const(3)            # non-hoistable duplicate, per trip
+        idx = (base + j * b.const(5)) % b.const(size)
+        b.assign(acc, acc + b.load("A", idx) * b.load("W", j))
+    b.store("Tmp", i, acc)
+    b.barrier("phase")
+    base2 = i / b.const(3)               # merges with the in-loop quotient
+    nb = (base2 + i) % b.const(size)
+    b.store("Out", i, b.load("Tmp", nb) + acc)
+    prog = b.done()
+
+    def oracle(args):
+        A = np.asarray(args["A"], np.float32)
+        W = np.asarray(args["W"], np.float32)
+        i = np.arange(size, dtype=np.int64)
+        base = i // 3
+        acc = np.zeros(size, np.float32)
+        for j in range(taps):
+            acc = acc + A[(base + j * 5) % size] * W[j]
+        out = acc[(base + i) % size] + acc
+        return {"Tmp": acc, "Out": out.astype(np.float32)}
+
+    return prog, oracle
+
+
+# ---------------------------------------------------------------------------
 def dot_product() -> Tuple[ir.Program, Callable]:
     b = Builder("dot_product", [Ptr("A"), Ptr("B"), Ptr("Out"), Scalar("n")])
     i = b.global_id(0)
@@ -389,4 +499,7 @@ SUITE: Dict[str, Callable] = {
     "stencil_1d": stencil_1d,
     "persistent_counter": persistent_counter,
     "dot_product": dot_product,
+    "poly_eval": poly_eval,
+    "swizzle_copy": swizzle_copy,
+    "tap_filter": tap_filter,
 }

@@ -32,20 +32,50 @@ by ``tests/test_passes.py``):
 * **dead-code elimination** — pure ops whose dests are never read, and the
   empty control regions they leave behind, are deleted.
 
+Phase-2 passes (level 3, the default ``OPT_MAX``; see ``docs/PASSES.md``
+for legality conditions and worked examples):
+
+* **loop unrolling** — barrier-free loops with a *static* trip count ≤
+  ``HETGPU_UNROLL_MAX`` are flattened; each iteration's copy binds the loop
+  variable to a fresh single-def constant, so folding/CSE collapse the
+  per-iteration index arithmetic that a counted loop re-executes every
+  trip.  The vectorized backend already got this for free by tracing;
+  doing it in the IR hands the same win to interp and pallas.
+* **strength reduction** — integer ``MUL``/``DIV``/``MOD`` by power-of-two
+  constants become ``SHL``/``SHR``/``AND`` (exact: hetIR integer division
+  is floor division, so an arithmetic shift right *is* the division), and
+  f32 ``DIV`` by a power of two becomes ``MUL`` by its exactly
+  representable reciprocal.  The rewritten forms are also hoistable, which
+  plain ``DIV``/``MOD`` never are.
+* **cross-segment value numbering** — extends duplicate merging across the
+  boundaries that create engine segments: a value computed inside a loop
+  whose static trip count is ≥ 1 stays available *after* the loop (its
+  register provably holds the last-iteration value, which equals what the
+  duplicate would recompute), so re-derived quantities are not re-executed
+  in later segments.
+
 Entry point: :func:`optimize`, wired into :class:`~repro.core.engine.Engine`
 so every backend translates the optimized body; per-pass statistics are
 returned in :class:`PipelineStats` and surfaced through
-``HetSession.stats`` and ``benchmarks/bench_translation.py``.
+``HetSession.stats`` and ``benchmarks/bench_translation.py``.  The pass
+set itself is fingerprinted (:func:`pipeline_fingerprint`) into the
+persistent cache's runtime tag, so changing or re-ordering passes
+invalidates previously persisted translations instead of silently
+restoring artifacts optimized by an older pipeline.
 """
 from __future__ import annotations
 
+import hashlib
 import os
+import re
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import hetir as ir
+from .segments import static_trip_count
 
 # --------------------------------------------------------------------------
 # Opcode classification
@@ -87,16 +117,20 @@ def _is_pure(opcode: str) -> bool:
 
 @dataclass
 class PipelineStats:
-    """Per-pass change counters for one :func:`optimize` run."""
+    """Per-pass change counters (and wall time) for one :func:`optimize`
+    run."""
 
     level: int = 0
     ops_before: int = 0
     ops_after: int = 0
     iterations: int = 0
     per_pass: Dict[str, int] = field(default_factory=dict)
+    per_pass_ms: Dict[str, float] = field(default_factory=dict)
 
-    def record(self, pass_name: str, n: int) -> None:
+    def record(self, pass_name: str, n: int, ms: float = 0.0) -> None:
         self.per_pass[pass_name] = self.per_pass.get(pass_name, 0) + n
+        self.per_pass_ms[pass_name] = \
+            self.per_pass_ms.get(pass_name, 0.0) + ms
 
     @property
     def ops_removed(self) -> int:
@@ -105,7 +139,9 @@ class PipelineStats:
     def as_dict(self) -> Dict[str, object]:
         return {"level": self.level, "ops_before": self.ops_before,
                 "ops_after": self.ops_after, "ops_removed": self.ops_removed,
-                "iterations": self.iterations, "per_pass": dict(self.per_pass)}
+                "iterations": self.iterations, "per_pass": dict(self.per_pass),
+                "per_pass_ms": {k: round(v, 3)
+                                for k, v in self.per_pass_ms.items()}}
 
 
 # --------------------------------------------------------------------------
@@ -191,6 +227,13 @@ def fold_constants(body: List[ir.Stmt], prog: ir.Program
                 if op.opcode in (ir.SHL, ir.SHR) and not (
                         0 <= int(vals[1]) < 32):
                     return op  # out-of-width shifts differ numpy vs XLA
+                if (op.opcode in (ir.DIV, ir.MOD)
+                        and d.dtype in (ir.I32, ir.U32)
+                        and int(vals[1]) == 0):
+                    # integer x/0 is 0 under numpy but platform-defined
+                    # under XLA: folding would change the vectorized
+                    # backend's O0 result
+                    return op
                 if op.opcode in (ir.MIN, ir.MAX) and any(
                         isinstance(v, (np.floating, float))
                         and np.isnan(v) for v in vals):
@@ -390,16 +433,23 @@ def hoist_invariants(body: List[ir.Stmt], prog: ir.Program
 # --------------------------------------------------------------------------
 
 
-def merge_duplicates(body: List[ir.Stmt], prog: ir.Program
-                     ) -> Tuple[List[ir.Stmt], int]:
-    """Merge re-emitted identical pure ops (the Builder emits a fresh CONST
-    per mention) via value numbering scoped to the structured-region tree,
-    so a merge target always dominates the duplicate it replaces.
+def _value_number(body: List[ir.Stmt], prog: ir.Program,
+                  cross_loops: bool) -> Tuple[List[ir.Stmt], int]:
+    """Value-numbering core shared by :func:`merge_duplicates` (region
+    scope) and :func:`value_number_cross_segment` (``cross_loops=True``).
 
     A duplicate nested under a @PRED is only merged when every use of its
     dest lies inside that same predicate region: at level 0 the interp
     backend writes the dup's register only for active threads, so a read
-    outside the region would observe the rename."""
+    outside the region would observe the rename.
+
+    With ``cross_loops``, values defined at the top level of a loop whose
+    static trip count is ≥ 1 stay available after the loop: the defining op
+    provably executed, its non-loop-var inputs are single-def (unchanged),
+    and the loop variable's final value is exactly what a post-loop
+    duplicate would read — so the register already holds the duplicate's
+    value across the LoopEnd segment boundary.  Dynamic or possibly
+    zero-trip loops keep the conservative region scope."""
     defs = ir.reg_def_counts(body)
     rename: Dict[str, ir.Reg] = {}
     table: Dict[Tuple, ir.Reg] = {}
@@ -445,9 +495,11 @@ def merge_duplicates(body: List[ir.Stmt], prog: ir.Program
     def sub(a):
         return rename.get(a.name, a) if isinstance(a, ir.Reg) else a
 
-    def walk(stmts: Sequence[ir.Stmt],
-             chain: Tuple[int, ...]) -> List[ir.Stmt]:
-        marks: List[Tuple] = []
+    def walk(stmts: Sequence[ir.Stmt], chain: Tuple[int, ...],
+             marks: Optional[List[Tuple]] = None) -> List[ir.Stmt]:
+        own_marks = marks is None
+        if own_marks:
+            marks = []
         out: List[ir.Stmt] = []
         for s in stmts:
             if isinstance(s, ir.Op):
@@ -471,14 +523,41 @@ def merge_duplicates(body: List[ir.Stmt], prog: ir.Program
                 out.append(ir.Pred(sub(s.cond),
                                    walk(s.body, chain + (id(s),))))
             elif isinstance(s, ir.Loop):
-                out.append(ir.Loop(s.var, s.count, walk(s.body, chain)))
+                trip = static_trip_count(s.count)
+                if cross_loops and trip is not None and trip >= 1:
+                    # guaranteed execution: the body's value numbers stay
+                    # available in the enclosing scope (parent's marks)
+                    inner = walk(s.body, chain, marks)
+                else:
+                    inner = walk(s.body, chain)
+                out.append(ir.Loop(s.var, s.count, inner))
             else:
                 out.append(s)
-        for k in marks:
-            del table[k]
+        if own_marks:
+            for k in marks:
+                del table[k]
         return out
 
     return walk(body, ()), n[0]
+
+
+def merge_duplicates(body: List[ir.Stmt], prog: ir.Program
+                     ) -> Tuple[List[ir.Stmt], int]:
+    """Merge re-emitted identical pure ops (the Builder emits a fresh CONST
+    per mention) via value numbering scoped to the structured-region tree,
+    so a merge target always dominates the duplicate it replaces."""
+    return _value_number(body, prog, cross_loops=False)
+
+
+def value_number_cross_segment(body: List[ir.Stmt], prog: ir.Program
+                               ) -> Tuple[List[ir.Stmt], int]:
+    """:func:`merge_duplicates` extended across segment-creating loop
+    boundaries (see :func:`_value_number`): values computed inside a
+    statically-guaranteed loop serve later duplicates — including ones in
+    segments after the loop's barriers — without re-execution.  This is
+    where non-hoistable duplicates (``DIV``/``MOD``, which
+    :func:`hoist_invariants` refuses to move) finally merge."""
+    return _value_number(body, prog, cross_loops=True)
 
 
 # --------------------------------------------------------------------------
@@ -592,6 +671,353 @@ def eliminate_dead_code(body: List[ir.Stmt], prog: ir.Program
 
 
 # --------------------------------------------------------------------------
+# Loop unrolling (phase 2)
+# --------------------------------------------------------------------------
+
+#: largest static trip count that is unrolled (HETGPU_UNROLL_MAX overrides)
+UNROLL_MAX_TRIPS = max(0, int(os.environ.get("HETGPU_UNROLL_MAX", "8")))
+#: code-growth budget: trips × body ops must stay under this
+UNROLL_MAX_BODY_OPS = 256
+
+
+def _subst_copy(stmts: Sequence[ir.Stmt],
+                ren: Dict[str, ir.Reg]) -> List[ir.Stmt]:
+    """Fresh structural copy of ``stmts`` with registers renamed per
+    ``ren``.  Every Pred/Loop node is rebuilt (passes key on node identity,
+    so copies must never alias the original tree)."""
+    out: List[ir.Stmt] = []
+    for s in stmts:
+        if isinstance(s, ir.Op):
+            dest = s.dest
+            if dest is not None and dest.name in ren:
+                dest = ren[dest.name]
+            args = tuple(ren.get(a.name, a) if isinstance(a, ir.Reg) else a
+                         for a in s.args)
+            out.append(ir.Op(s.opcode, dest, args, dict(s.attrs)))
+        elif isinstance(s, ir.Pred):
+            out.append(ir.Pred(ren.get(s.cond.name, s.cond),
+                               _subst_copy(s.body, ren)))
+        elif isinstance(s, ir.Loop):
+            out.append(ir.Loop(s.var, s.count, _subst_copy(s.body, ren)))
+        else:
+            out.append(ir.Barrier(s.label))
+    return out
+
+
+def _collect_op_defs(stmts: Sequence[ir.Stmt]) -> Dict[str, ir.Reg]:
+    """First Reg object per name defined by an Op in ``stmts`` (recursive;
+    loop-header vars excluded — they are never renamed)."""
+    found: Dict[str, ir.Reg] = {}
+
+    def walk(ss):
+        for s in ss:
+            if isinstance(s, ir.Op):
+                if s.dest is not None:
+                    found.setdefault(s.dest.name, s.dest)
+            elif isinstance(s, (ir.Pred, ir.Loop)):
+                walk(s.body)
+
+    walk(stmts)
+    return found
+
+
+def _conditional_def_names(stmts: Sequence[ir.Stmt]) -> set:
+    """Names whose def sits under a @PRED (or nested loop) in ``stmts``.
+    Such a write may not happen in a given iteration for a given thread,
+    so the register legally *carries* its previous-iteration value — it
+    must never be renamed per unrolled copy."""
+    names: set = set()
+
+    def walk(ss, under: bool):
+        for s in ss:
+            if isinstance(s, ir.Op):
+                if under and s.dest is not None:
+                    names.add(s.dest.name)
+            elif isinstance(s, (ir.Pred, ir.Loop)):
+                walk(s.body, True)
+
+    walk(stmts, False)
+    return names
+
+
+#: names minted by passes: ``srN.c`` (strength-reduce constants) and the
+#: ``.itN`` / ``.uN`` suffixes of unrolled copies.  Each pass seeds its
+#: counter past the largest tag already present in the body, so a second
+#: pipeline iteration (or a pass re-run on already-optimized IR) can never
+#: re-mint a name that an earlier invocation defined with another value —
+#: while staying deterministic (the seed is a pure function of the body).
+_SR_NAME = re.compile(r"^sr(\d+)\.c$")
+_UNROLL_TAG = re.compile(r"\.(?:it|u)(\d+)$")
+
+
+def _fresh_base(body: Sequence[ir.Stmt], pattern: re.Pattern) -> int:
+    base = 0
+    for op in ir.walk_ops(body):
+        if op.dest is not None:
+            m = pattern.search(op.dest.name)
+            if m:
+                base = max(base, int(m.group(1)))
+    return base
+
+
+def unroll_loops(body: List[ir.Stmt], prog: ir.Program
+                 ) -> Tuple[List[ir.Stmt], int]:
+    """Flatten barrier-free loops with static trip count in
+    ``[1, UNROLL_MAX_TRIPS]`` (and ``trips × body ops ≤
+    UNROLL_MAX_BODY_OPS``) into straight-line copies of the body.
+
+    Each iteration binds the loop variable to a fresh single-def ``CONST``
+    and renames the body's *local* registers (defined only inside the body
+    and never read outside it), so every copy is single-def — which is what
+    lets the downstream folding/CSE/DCE passes collapse the per-iteration
+    index arithmetic.  Registers that escape the loop keep their names:
+    the last copy's write is the value a post-loop reader must see, exactly
+    as the rolled loop behaves.  After the copies the loop variable itself
+    is materialized to its final value (``trips - 1``) for any post-loop
+    reads; DCE deletes it when unused.  Innermost loops unroll first
+    (sweep to fixpoint), so tight nests flatten fully within budget.
+    Barrier-carrying loops are never unrolled — their iteration structure
+    *is* the engine's segment/migration boundary."""
+    uid = [_fresh_base(body, _UNROLL_TAG)]
+    total = 0
+    while True:
+        body, changed = _unroll_sweep(body, uid)
+        total += changed
+        if not changed:
+            return body, total
+
+
+def _unroll_sweep(body: List[ir.Stmt], uid: List[int]
+                  ) -> Tuple[List[ir.Stmt], int]:
+    defs = ir.reg_def_counts(body)
+    uses = ir.reg_use_counts(body)
+    n = [0]
+
+    def eligible(s: ir.Loop) -> Optional[int]:
+        trip = static_trip_count(s.count)
+        if trip is None or not 1 <= trip <= UNROLL_MAX_TRIPS:
+            return None
+        if any(isinstance(x, ir.Loop) for x in ir_walk_stmts(s.body)):
+            return None  # innermost first; outer unrolls next sweep
+        if ir._contains_barrier(s.body):
+            return None
+        if trip * ir.count_ops(s.body) > UNROLL_MAX_BODY_OPS:
+            return None
+        body_defs = ir.reg_def_counts(s.body)
+        if s.var.name in body_defs:
+            return None  # body writes the loop var: not a counted loop
+        return trip
+
+    def expand(s: ir.Loop, trip: int) -> List[ir.Stmt]:
+        body_defs = ir.reg_def_counts(s.body)
+        body_uses = ir.reg_use_counts(s.body)
+        reg_objs = _collect_op_defs(s.body)
+        # renameable = defined only inside this body, read only inside it,
+        # and written *unconditionally* each iteration.  A def under a
+        # @PRED carries its previous-iteration value whenever the
+        # predicate is false — renaming it per copy would make later
+        # copies read a never-written register (miscompile found by
+        # review; regression in tests/test_passes.py).
+        conditional = _conditional_def_names(s.body)
+        local = {r for r, c in body_defs.items()
+                 if c == defs.get(r, 0)
+                 and body_uses.get(r, 0) == uses.get(r, 0)
+                 and r in reg_objs
+                 and r not in conditional}
+        out: List[ir.Stmt] = []
+        for it in range(trip):
+            uid[0] += 1
+            tag = uid[0]
+            iv = ir.Reg(f"{s.var.name}.it{tag}", s.var.dtype, s.var.uniform)
+            ren = {s.var.name: iv}
+            for r in local:
+                old = reg_objs[r]
+                ren[r] = ir.Reg(f"{r}.u{tag}", old.dtype, old.uniform)
+            out.append(ir.Op(ir.CONST, iv, (it,)))
+            out.extend(_subst_copy(s.body, ren))
+        # post-loop reads of the loop var see its final iteration value
+        out.append(ir.Op(ir.CONST, s.var, (trip - 1,)))
+        return out
+
+    def walk(stmts: Sequence[ir.Stmt]) -> List[ir.Stmt]:
+        out: List[ir.Stmt] = []
+        for s in stmts:
+            if isinstance(s, ir.Loop):
+                trip = eligible(s)
+                if trip is not None:
+                    n[0] += 1
+                    out.extend(expand(s, trip))
+                else:
+                    out.append(ir.Loop(s.var, s.count, walk(s.body)))
+            elif isinstance(s, ir.Pred):
+                out.append(ir.Pred(s.cond, walk(s.body)))
+            else:
+                out.append(s)
+        return out
+
+    return walk(body), n[0]
+
+
+def ir_walk_stmts(body: Sequence[ir.Stmt]):
+    """Yield every statement in ``body`` recursively (structure included)."""
+    for s in body:
+        yield s
+        if isinstance(s, (ir.Pred, ir.Loop)):
+            yield from ir_walk_stmts(s.body)
+
+
+# --------------------------------------------------------------------------
+# Strength reduction (phase 2)
+# --------------------------------------------------------------------------
+
+
+def _pow2_exponent(v) -> Optional[int]:
+    """k if ``v`` is exactly 2**k for an integer value, else None."""
+    try:
+        iv = int(v)
+    except (TypeError, ValueError, OverflowError):
+        return None
+    if iv != v or iv <= 0 or iv & (iv - 1):
+        return None
+    k = iv.bit_length() - 1
+    return k if 0 <= k < 32 else None
+
+
+def _exact_recip(v) -> Optional[float]:
+    """1/v when that reciprocal is exactly representable in f32 and
+    round-trips (``v`` a power of two, sign allowed) — the condition under
+    which ``x / v`` and ``x * (1/v)`` are bit-identical IEEE results for
+    every x, including denormals, infinities and NaN."""
+    fv = float(v)
+    if fv == 0.0 or not np.isfinite(fv):
+        return None
+    recip = np.float32(1.0) / np.float32(fv)
+    if not np.isfinite(recip) or float(recip) * fv != 1.0:
+        return None
+    return float(recip)
+
+
+def strength_reduce(body: List[ir.Stmt], prog: ir.Program
+                    ) -> Tuple[List[ir.Stmt], int]:
+    """Rewrite multiplicative ops with power-of-two constant operands into
+    cheaper exact equivalents:
+
+    * int ``MUL x, 2**k``  → ``SHL x, k``   (two's-complement wrap matches)
+    * int ``DIV x, 2**k``  → ``SHR x, k``   (hetIR integer division is
+      *floor* division, so the arithmetic shift is exactly it — this
+      rewrite would be wrong for C-style truncating division)
+    * int ``MOD x, 2**k``  → ``AND x, 2**k - 1``  (floor-mod of a positive
+      modulus is non-negative, which is exactly the mask)
+    * f32 ``DIV x, c``     → ``MUL x, 1/c``  when ``1/c`` is an exact
+      power-of-two reciprocal (division and multiplication then round the
+      same infinitely-precise value — bit-identical)
+    * ``MUL/DIV x, 1`` → ``MOV x``; int ``MOD x, 1`` → ``CONST 0``
+
+    Beyond the latency win, ``SHL``/``SHR``/``AND`` are *hoistable* ops
+    while ``DIV``/``MOD`` are not (divide-by-zero introduction), so reduced
+    forms escape loops.  Constant visibility is region-scoped exactly like
+    :func:`fold_constants`."""
+    defs = ir.reg_def_counts(body)
+    consts: Dict[str, object] = {}
+    n = [0]
+    fresh = [_fresh_base(body, _SR_NAME)]
+
+    def const_reg(dtype: str, value, out: List[ir.Stmt]) -> ir.Reg:
+        fresh[0] += 1
+        r = ir.Reg(f"sr{fresh[0]}.c", dtype, True)
+        out.append(ir.Op(ir.CONST, r, (value,)))
+        return r
+
+    def known(a) -> Optional[object]:
+        if isinstance(a, ir.Reg):
+            return consts.get(a.name)
+        return a  # immediate operand
+
+    def rewrite(op: ir.Op, out: List[ir.Stmt]) -> bool:
+        d = op.dest
+        if d is None or op.opcode not in (ir.MUL, ir.DIV, ir.MOD):
+            return False
+        is_int = d.dtype in (ir.I32, ir.U32)
+        a, b = op.args
+        if op.opcode == ir.MUL and is_int:
+            for x, c in ((a, known(b)), (b, known(a))):
+                if c is None or not isinstance(x, ir.Reg):
+                    continue
+                k = _pow2_exponent(c)
+                if k is None:
+                    continue
+                if k == 0:
+                    out.append(ir.Op(ir.MOV, d, (x,)))
+                else:
+                    kreg = const_reg(d.dtype, k, out)
+                    out.append(ir.Op(ir.SHL, d, (x, kreg)))
+                n[0] += 1
+                return True
+            return False
+        c = known(b)
+        if c is None or not isinstance(a, ir.Reg):
+            return False
+        if is_int:
+            k = _pow2_exponent(c)
+            if k is None:
+                return False
+            if op.opcode == ir.DIV:
+                if k == 0:
+                    out.append(ir.Op(ir.MOV, d, (a,)))
+                else:
+                    kreg = const_reg(d.dtype, k, out)
+                    out.append(ir.Op(ir.SHR, d, (a, kreg)))
+            else:  # MOD
+                if k == 0:
+                    out.append(ir.Op(ir.CONST, d, (0,)))
+                else:
+                    mreg = const_reg(d.dtype, (1 << k) - 1, out)
+                    out.append(ir.Op(ir.AND, d, (a, mreg)))
+            n[0] += 1
+            return True
+        if d.dtype == ir.F32 and op.opcode == ir.DIV:
+            recip = _exact_recip(c)
+            if recip is None:
+                return False
+            if recip == 1.0:
+                out.append(ir.Op(ir.MOV, d, (a,)))
+            else:
+                rreg = const_reg(ir.F32, recip, out)
+                out.append(ir.Op(ir.MUL, d, (a, rreg)))
+            n[0] += 1
+            return True
+        return False
+
+    def walk(stmts: Sequence[ir.Stmt]) -> List[ir.Stmt]:
+        out: List[ir.Stmt] = []
+        for s in stmts:
+            if isinstance(s, ir.Op):
+                if (s.opcode == ir.CONST and s.dest is not None
+                        and defs.get(s.dest.name, 0) == 1):
+                    consts[s.dest.name] = \
+                        ir.np_dtype(s.dest.dtype).type(s.args[0])
+                if not rewrite(s, out):
+                    out.append(s)
+            elif isinstance(s, ir.Pred):
+                out.append(ir.Pred(s.cond, scoped(s.body)))
+            elif isinstance(s, ir.Loop):
+                out.append(ir.Loop(s.var, s.count, scoped(s.body)))
+            else:
+                out.append(s)
+        return out
+
+    def scoped(stmts: Sequence[ir.Stmt]) -> List[ir.Stmt]:
+        outer = set(consts)
+        out = walk(stmts)
+        for k in list(consts):
+            if k not in outer:
+                del consts[k]
+        return out
+
+    return walk(body), n[0]
+
+
+# --------------------------------------------------------------------------
 # Pipeline driver
 # --------------------------------------------------------------------------
 
@@ -602,13 +1028,42 @@ _PIPELINES: Dict[int, List[PassFn]] = {
     1: [fold_constants, eliminate_dead_code],
     2: [fold_constants, simplify_predicates, hoist_invariants,
         merge_duplicates, fuse_fma, fold_constants, eliminate_dead_code],
+    # phase 2: unroll first so folding/CSE see per-iteration constants;
+    # value numbering (cross-segment) before strength reduction so
+    # duplicate DIV/MODs merge before being rewritten; a second fold sweep
+    # cleans up what unrolling and strength reduction exposed
+    3: [unroll_loops, fold_constants, simplify_predicates, hoist_invariants,
+        value_number_cross_segment, strength_reduce, fuse_fma,
+        fold_constants, eliminate_dead_code],
 }
 
 OPT_MAX = max(_PIPELINES)
 _MAX_PIPELINE_ITERS = 4
 
+#: bump when any pass's *output semantics* change without a rename — part
+#: of :func:`pipeline_fingerprint`, hence of the persistent store's tag
+_PASS_SCHEMA_VERSION = 2
+
 DEFAULT_OPT_LEVEL = max(0, min(
     int(os.environ.get("HETGPU_OPT_LEVEL", str(OPT_MAX))), OPT_MAX))
+
+
+def pipeline_fingerprint() -> str:
+    """Stable digest of the pass pipeline configuration: pass names per
+    level (order included), the unrolling limits, and the schema version.
+    :func:`repro.core.cache._runtime_tag` folds this into the persistent
+    store's directory tag, so *any* pass-set change — added, removed,
+    reordered passes, changed thresholds, or a bumped schema — invalidates
+    every persisted translation.  Without it, a store populated by an older
+    pipeline would silently serve artifacts the current optimizer would
+    never produce."""
+    h = hashlib.sha256()
+    h.update(f"schema{_PASS_SCHEMA_VERSION}".encode())
+    for level in sorted(_PIPELINES):
+        names = ",".join(fn.__name__ for fn in _PIPELINES[level])
+        h.update(f"|{level}:{names}".encode())
+    h.update(f"|unroll{UNROLL_MAX_TRIPS}x{UNROLL_MAX_BODY_OPS}".encode())
+    return h.hexdigest()[:12]
 
 
 def optimize(program: ir.Program, level: int = OPT_MAX
@@ -625,8 +1080,10 @@ def optimize(program: ir.Program, level: int = OPT_MAX
             stats.iterations += 1
             changed = 0
             for pass_fn in pipeline:
+                t0 = time.perf_counter()
                 body, n = pass_fn(body, program)
-                stats.record(pass_fn.__name__, n)
+                stats.record(pass_fn.__name__, n,
+                             (time.perf_counter() - t0) * 1e3)
                 changed += n
             if changed == 0:
                 break

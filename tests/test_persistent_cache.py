@@ -14,9 +14,10 @@ import threading
 import numpy as np
 import pytest
 
-from repro.core import (DiskStore, Engine, HetSession, TranslationCache,
-                        get_backend, migrate)
+from repro.core import (DiskStore, Engine, HetSession, OPT_MAX,
+                        TranslationCache, get_backend, migrate)
 from repro.core import kernels_suite as suite
+from repro.core import passes
 
 RNG = np.random.default_rng(7)
 
@@ -163,6 +164,87 @@ def test_failed_store_write_degrades_to_memory_only(tmp_path, monkeypatch):
     assert val == "LIVE"
     assert cache.get(("interp", "fp", 0, 0)) == "LIVE"
     assert cache.stats()["persist_errors"] == 1
+
+
+# ---------------------------------------------------------------------------
+# pass-pipeline fingerprint invalidation
+# ---------------------------------------------------------------------------
+
+
+def test_store_tag_carries_pipeline_fingerprint(tmp_path):
+    store = DiskStore(tmp_path)
+    assert f"-p{passes.pipeline_fingerprint()}-" in store.tag
+
+
+def test_pass_set_change_invalidates_persisted_entries(tmp_path,
+                                                       monkeypatch):
+    """A store populated under one pass pipeline must be invisible to a
+    runtime with a different pass set — otherwise a stale artifact,
+    optimized by passes that no longer exist (or have been fixed), would
+    be restored silently."""
+    old_fp = passes.pipeline_fingerprint()
+    s1 = _vadd_session("interp", DiskStore(tmp_path))
+    s1.launch("vadd", grid=4, block=32, args=_vadd_args())
+    assert DiskStore(tmp_path).entry_count() >= 1
+
+    # simulate a pass-semantics change (any pipeline edit has this effect)
+    monkeypatch.setattr(passes, "_PASS_SCHEMA_VERSION", 10 ** 6)
+    assert passes.pipeline_fingerprint() != old_fp
+    fresh = DiskStore(tmp_path)
+    assert fresh.tag != s1.cache.store.tag
+    assert fresh.entry_count() == 0, \
+        "entries persisted by the old pipeline leaked into the new tag"
+    s2 = _vadd_session("interp", fresh)
+    s2.launch("vadd", grid=4, block=32, args=_vadd_args())
+    st = s2.cache_stats()
+    assert st["translated"] >= 1 and st["restored"] == 0, \
+        "stale optimized artifact restored across a pass-set change"
+
+
+# ---------------------------------------------------------------------------
+# cooperative checkpoint + migrate() on OPT_MAX-unrolled programs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("src,dst", [("vectorized", "interp"),
+                                     ("interp", "vectorized")])
+def test_migrate_unrolled_omax_bit_identical(src, dst, tmp_path):
+    """Mid-kernel checkpoint of an OPT_MAX program whose inner tile loop
+    was *unrolled*: pause at a barrier inside the k-loop, migrate to the
+    other backend (store-warmed destination), and finish **bit-identical**
+    to an uninterrupted run on the destination backend.  This is the
+    paper's migration story composed with the phase-2 optimizer: node
+    indices are positions in the *optimized* segmented program, so the
+    snapshot only restores correctly if the destination re-derives the
+    exact same unrolled body."""
+    M, K, N, TK = 4, 32, 16, 8
+    args = {"A": RNG.normal(size=M * K).astype(np.float32),
+            "B": RNG.normal(size=K * N).astype(np.float32),
+            "C": np.zeros(M * N, np.float32),
+            "K": K, "N": N, "ktiles": K // TK}
+    prog, _ = suite.matmul_tiled(TK)
+
+    ref = Engine(prog, get_backend(dst, cache=TranslationCache()),
+                 M, N, dict(args), opt_level=OPT_MAX)
+    assert ref.run()
+
+    s_src = HetSession(src, opt_level=OPT_MAX,
+                       cache=TranslationCache(store=DiskStore(tmp_path)))
+    s_dst = HetSession(dst, opt_level=OPT_MAX,
+                       cache=TranslationCache(store=DiskStore(tmp_path)))
+    s_src.load_kernel(prog)
+    s_dst.load_kernel(prog)
+    rec = s_src.launch("matmul_tiled", grid=M, block=N, args=dict(args),
+                       blocking=False)
+    # the inner loop really did unroll, and we really do pause mid-kernel
+    assert rec.engine.opt_stats.per_pass.get("unroll_loops", 0) >= 1
+    assert not rec.engine.run(max_segments=5)
+    new = migrate(rec, s_src, s_dst, "matmul_tiled")
+    s_dst.run_to_completion(new)
+    assert new.finished
+    np.testing.assert_array_equal(
+        np.asarray(new.engine.result("C")), np.asarray(ref.result("C")),
+        err_msg=f"{src}->{dst} migrated OPT_MAX run diverged")
 
 
 # ---------------------------------------------------------------------------

@@ -59,6 +59,15 @@ def _case(name, rng):
                  "W": rng.normal(size=4).astype(np.float32),
                  "Tmp": np.zeros(64, np.float32),
                  "Out": np.zeros(64, np.float32)}, 2, 32)
+    if name == "dyn_matmul":
+        return ({"A": rng.normal(size=4 * 32).astype(np.float32),
+                 "B": rng.normal(size=32 * 16).astype(np.float32),
+                 "C": np.zeros(4 * 16, np.float32),
+                 "K": 32, "N": 16, "ktiles": 4, "tk": 8}, 4, 16)
+    if name == "dyn_fir":
+        return ({"A": rng.normal(size=64).astype(np.float32),
+                 "W": rng.normal(size=4).astype(np.float32),
+                 "Out": np.zeros(64, np.float32), "taps": 4}, 2, 32)
     return ({"Count": np.zeros(1, np.float32)}, 2, 32)
 
 
@@ -142,6 +151,57 @@ def run_pass_pipeline(kernels=PIPELINE_KERNELS) -> list:
                 1 - steps[OPT_MAX] / max(steps[0], 1), 3),
             "opt_ms": round(sum(stats.per_pass_ms.values()), 2),
             "passes": "+".join(sorted(fired)),
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# launch-time specialization table: generic vs specialized executed work
+# ---------------------------------------------------------------------------
+
+SPECIALIZATION_KERNELS = ("dyn_matmul", "dyn_fir")
+
+
+def run_specialization(kernels=SPECIALIZATION_KERNELS) -> list:
+    """What binding the launch scalars buys on the dynamic-trip kernels:
+    the same program is launched generic (``specialize=False``) and
+    specialized (``specialize=True``) on the interp backend, and the table
+    reports the *executed* deltas — the per-thread op schedule
+    (``Engine.executed_ops``, whose reduction is the dynamic
+    ``ops_removed``) and the interp backend's true divergence-aware step
+    count — plus how many scalars were bound and whether the outputs were
+    bit-identical (they must be; the CI smoke asserts it)."""
+    rows = []
+    rng = np.random.default_rng(1)
+    for name in kernels:
+        prog, _ = suite.SUITE[name]()
+        args, grid, block = _case(name, rng)
+        outs = prog.buffers()
+        steps, sched, results = {}, {}, {}
+        bound = 0
+        for spec in (False, True):
+            be = get_backend("interp", cache=TranslationCache())
+            eng = Engine(prog, be, grid, block, dict(args),
+                         opt_level=OPT_MAX, specialize=spec)
+            eng.run()
+            steps[spec] = be.steps_executed
+            sched[spec] = eng.executed_ops
+            results[spec] = [np.asarray(eng.result(p.name)) for p in outs]
+            if spec:
+                bound = eng.opt_stats.per_pass.get(
+                    "bind_launch_scalars", 0)
+        rows.append({
+            "bench": "specialization", "kernel": name,
+            "scalars_bound": bound,
+            "sched_generic": sched[False], "sched_spec": sched[True],
+            "ops_removed": sched[False] - sched[True],
+            "interp_steps_generic": steps[False],
+            "interp_steps_spec": steps[True],
+            "interp_step_cut": round(
+                1 - steps[True] / max(steps[False], 1), 3),
+            "bit_identical": all(
+                np.array_equal(a, b)
+                for a, b in zip(results[False], results[True])),
         })
     return rows
 

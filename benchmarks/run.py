@@ -25,6 +25,8 @@ def main() -> None:
     _emit(bench_translation.run())
     print("# -- paper 4.2: pass pipeline (per-pass stats, interp steps) --")
     _emit(bench_translation.run_pass_pipeline())
+    print("# -- paper 4.2: launch-time specialization (generic vs bound) --")
+    _emit(bench_translation.run_specialization())
     print("# -- paper 4.2: persistent cache, cold vs warm start --")
     _emit(bench_translation.run_cold_warm())
     print("# -- paper 6.3: live migration downtime --")

@@ -3,17 +3,19 @@ multi-backend runtime (interp / vectorized / pallas), barrier-anchored
 segmentation, device-neutral snapshots, cross-backend live migration, and
 the persistent cost-aware translation cache (see docs/ARCHITECTURE.md for
 the paper-section → module map)."""
-from . import hetir
+from . import alias, hetir
 from .backends import BACKENDS, get_backend
 from .cache import (DiskStore, TranslationCache, global_cache,
                     register_reviver)
 from .engine import Engine
 from .passes import (DEFAULT_OPT_LEVEL, OPT_MAX, PipelineStats,
-                     get_optimized, optimize)
+                     SpecializationPolicy, get_optimized, get_specialized,
+                     optimize)
 from .runtime import HetSession, migrate
 from .state import Snapshot
 
-__all__ = ["hetir", "BACKENDS", "get_backend", "Engine", "HetSession",
-           "migrate", "Snapshot", "TranslationCache", "DiskStore",
-           "global_cache", "register_reviver", "optimize", "get_optimized",
+__all__ = ["alias", "hetir", "BACKENDS", "get_backend", "Engine",
+           "HetSession", "migrate", "Snapshot", "TranslationCache",
+           "DiskStore", "global_cache", "register_reviver", "optimize",
+           "get_optimized", "get_specialized", "SpecializationPolicy",
            "PipelineStats", "OPT_MAX", "DEFAULT_OPT_LEVEL"]

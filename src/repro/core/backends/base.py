@@ -32,6 +32,13 @@ class Launch:
     block_size: int
     scalars: Dict[str, object] = field(default_factory=dict)
     opt_level: int = 0  # pass-pipeline level the body was optimized at
+    # launch-time specialization key: the (name, value) uniform scalars
+    # bound into the optimized body, () for the generic variant.  Part of
+    # every translation-cache key (a specialized segment must never be
+    # served a generic translation or vice versa, even though their
+    # program fingerprints already differ — the key stays self-describing
+    # for store scans and debugging)
+    spec_key: Tuple = ()
 
 
 @dataclass
@@ -56,9 +63,14 @@ class Backend:
     def _cache_key(self, seg: SegNode, launch: Launch,
                    *extra) -> Tuple:
         """Content-addressed translation key: backend, program fingerprint,
-        opt level, segment index, plus backend-specific specialization."""
+        opt level, segment index, the launch-time specialization's
+        bound-scalar vector (() = generic), plus backend-specific
+        specialization.  ``preload`` filters on the first two components,
+        so warm-up and migration revive specialized entries exactly like
+        generic ones."""
         return (self.name, ir.program_fingerprint(launch.program),
-                launch.opt_level, seg.index) + tuple(extra)
+                launch.opt_level, seg.index,
+                tuple(launch.spec_key)) + tuple(extra)
 
     # Cached per-segment compiled artifacts; exposed for the
     # translation-cost benchmark (the paper's JIT-cost table).

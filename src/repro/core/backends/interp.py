@@ -34,10 +34,12 @@ class InterpBackend(Backend):
         """"Translation" for the interpreter: stage the segment into a tree
         of dispatch-step objects once, instead of re-walking the statement
         structure on every block of every launch.  Geometry-independent, so
-        the key is just (backend, fingerprint, opt level, segment).  The
-        staged plan is plain picklable objects over IR dataclasses, so it
-        persists to the disk tier verbatim — a warm process unpickles the
-        plan and skips staging entirely."""
+        the key is just (backend, fingerprint, opt level, segment, spec
+        key) — a *specialized* launch stages its own plan (the bound body
+        differs), while every generic launch of the program shares one.
+        The staged plan is plain picklable objects over IR dataclasses, so
+        it persists to the disk tier verbatim — a warm process unpickles
+        the plan and skips staging entirely."""
         key = self._cache_key(seg, launch)
 
         def translate():

@@ -74,6 +74,8 @@ class PallasBackend(Backend):
                    glb_sig: Tuple, shared_sig):
         # geometry, scalars, and the register/buffer shape+dtype signatures
         # all specialize the emitted kernel, so they join the shared key
+        # (on top of the base key's launch-time specialization vector —
+        # a scalar-specialized segment emits from a different body)
         key = self._cache_key(seg, launch, launch.num_blocks,
                               launch.block_size, scalar_signature(launch),
                               reg_sig, glb_sig, shared_sig)

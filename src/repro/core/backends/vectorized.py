@@ -28,7 +28,10 @@ class VectorizedBackend(Backend):
         # content-addressed (fingerprint, not object identity): rebuilding
         # an identical program still hits the shared cache.  The incoming
         # state signature joins the key because the exported artifact is
-        # shape/dtype-exact.
+        # shape/dtype-exact.  For a specialized launch the base key already
+        # carries the bound-scalar vector; the scalar signature below stays
+        # in the key regardless — generic launches still bake scalars into
+        # the trace as constants.
         reg_sig, glb_sig, shared_sig = state_signature(state)
         key = self._cache_key(seg, launch, launch.num_blocks,
                               launch.block_size, scalar_signature(launch),

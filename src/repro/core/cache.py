@@ -37,7 +37,11 @@ process):
   score ``clock + cost_ms / size`` (Greedy-Dual-Size-Frequency) instead of
   plain LRU, so a 5-second pallas trace is not evicted to make room for a
   microsecond interp plan.  The ``clock`` advances to each victim's score,
-  which ages out stale expensive entries over time.
+  which ages out stale expensive entries over time.  The on-disk tier is
+  bounded the same way: past ``HETGPU_CACHE_MAX_BYTES`` (or the
+  ``max_bytes`` constructor argument) :meth:`DiskStore.gc` evicts entries
+  by the same ``cost_ms / size`` score until the store fits, so a
+  long-lived store stops growing instead of filling the disk.
 
 Hit/miss/restore/eviction counters are surfaced through
 ``HetSession.cache_stats()`` and ``benchmarks/bench_translation.py``.
@@ -107,7 +111,8 @@ class DiskStore:
     skew, or key mismatch counts as a miss and quarantines the file.
     """
 
-    def __init__(self, root, tag: Optional[str] = None):
+    def __init__(self, root, tag: Optional[str] = None,
+                 max_bytes: Optional[int] = None):
         self.root = Path(root)
         self.tag = tag if tag is not None else _runtime_tag()
         self.dir = self.root / self.tag
@@ -122,11 +127,22 @@ class DiskStore:
                     os.unlink(stale)
             except OSError:
                 pass
+        # on-disk size bound: past it, gc() evicts lowest-GDSF-score
+        # entries (HETGPU_CACHE_MAX_BYTES; 0/unset = unbounded)
+        if max_bytes is None:
+            max_bytes = int(os.environ.get("HETGPU_CACHE_MAX_BYTES",
+                                           "0") or 0)
+        self.max_bytes = max(0, int(max_bytes))
         self._lock = threading.Lock()
         self.saves = 0
         self.loads = 0
         self.load_misses = 0
         self.corrupt = 0
+        self.gc_evictions = 0
+        self.gc_runs = 0
+        # running estimate of the directory's entry bytes; seeded by a
+        # scan here, incremented per save, corrected exactly by each gc()
+        self._approx_bytes = self.total_bytes()
 
     # -- key addressing -------------------------------------------------
     def _path(self, key: Hashable) -> Path:
@@ -152,6 +168,10 @@ class DiskStore:
         # recomputed at load time — no need to serialize twice to embed it
         blob = pickle.dumps(envelope, protocol=pickle.HIGHEST_PROTOCOL)
         path = self._path(key)
+        try:
+            replaced = path.stat().st_size  # re-save: count the delta
+        except OSError:
+            replaced = 0
         fd, tmp = tempfile.mkstemp(dir=str(self.dir), suffix=".tmp")
         try:
             with os.fdopen(fd, "wb") as f:
@@ -165,6 +185,10 @@ class DiskStore:
             raise
         with self._lock:
             self.saves += 1
+            self._approx_bytes += len(blob) - replaced
+            over = self.max_bytes and self._approx_bytes > self.max_bytes
+        if over:
+            self.gc()
         return len(blob)
 
     # -- read -----------------------------------------------------------
@@ -218,6 +242,65 @@ class DiskStore:
     def entry_count(self) -> int:
         return sum(1 for _ in self.dir.glob("*.tce"))
 
+    def total_bytes(self) -> int:
+        """Exact on-disk entry bytes (directory scan)."""
+        total = 0
+        for path in self.dir.glob("*.tce"):
+            try:
+                total += path.stat().st_size
+            except OSError:
+                pass
+        return total
+
+    # -- garbage collection (store size bound) ---------------------------
+    #: GC evicts down to this fraction of the bound, not just under it —
+    #: the scan reads every envelope (cost_ms lives inside), so draining
+    #: some slack per run keeps a store sitting at its bound from paying
+    #: a full-directory scan on every subsequent save
+    GC_WATERMARK = 0.85
+
+    def gc(self, limit: Optional[int] = None) -> int:
+        """Evict entries until the store fits within ``limit`` bytes
+        (default: ``max_bytes``), lowest GDSF score first —
+        ``cost_ms / size``, the same cost/size trade the in-memory tier
+        uses, with age (envelope ``created``) breaking ties — so a
+        bounded store sheds its cheapest-to-rebuild translations and
+        keeps the expensive traces.  Runs automatically after any save
+        that pushes the store past ``max_bytes``, draining to
+        ``GC_WATERMARK × limit`` so steady-state inserts amortize the
+        scan.  Unreadable entries are quarantined as usual (they count
+        as ``corrupt``, not evictions).  Returns the number of entries
+        evicted; concurrent GCs race benignly (unlink of a missing file
+        is ignored)."""
+        limit = self.max_bytes if limit is None else max(0, int(limit))
+        scored = []
+        total = 0
+        for path in sorted(self.dir.glob("*.tce")):
+            env = self._read_envelope(path)
+            if env is None:
+                continue
+            size = env["size_bytes"]
+            total += size
+            scored.append((env.get("cost_ms", 0.0) / max(1, size),
+                           env.get("created", 0.0), str(path), size))
+        evicted = 0
+        if limit:
+            target = int(limit * self.GC_WATERMARK)
+            for _score, _created, path, size in sorted(scored):
+                if total <= target:
+                    break
+                try:
+                    os.unlink(path)
+                except OSError:
+                    continue
+                total -= size
+                evicted += 1
+        with self._lock:
+            self._approx_bytes = total
+            self.gc_evictions += evicted
+            self.gc_runs += 1
+        return evicted
+
     def stats(self) -> Dict[str, object]:
         """Cheap counters only — no directory scan, this runs on the
         launch hot path via ``HetSession._sync_cache_stats``.  Use
@@ -230,6 +313,10 @@ class DiskStore:
                 "loads": self.loads,
                 "load_misses": self.load_misses,
                 "corrupt": self.corrupt,
+                "max_bytes": self.max_bytes,
+                "approx_bytes": self._approx_bytes,
+                "gc_evictions": self.gc_evictions,
+                "gc_runs": self.gc_runs,
             }
 
     def clear(self) -> None:
@@ -239,6 +326,8 @@ class DiskStore:
                     os.unlink(path)
                 except OSError:
                     pass
+        with self._lock:
+            self._approx_bytes = 0
 
 
 class _Entry:

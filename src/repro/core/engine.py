@@ -2,13 +2,18 @@
 (paper §4.2 Dynamic Translation, §4.3 State Capture).
 
 The engine is the piece of the paper's runtime that walks the *segmented*
-program: it runs the :mod:`~repro.core.passes` pipeline at the launch's
-``opt_level``, asks :mod:`~repro.core.segments` to split the optimized
-body at barriers ("each segment is a separate kernel"), then executes the
-node list one entry at a time, delegating each straight-line
-:class:`~repro.core.segments.SegNode` to the bound backend — whose
-translation of it lands in the shared
-:class:`~repro.core.cache.TranslationCache`.
+program: it snapshots the launch's uniform scalar arguments and consults
+the :class:`~repro.core.passes.SpecializationPolicy` (launch-time
+specialization — the paper's runtime translates at launch, when every
+scalar is known), runs the :mod:`~repro.core.passes` pipeline at the
+launch's ``opt_level`` (with the scalars bound as constants when the
+policy grants a specialized variant), asks :mod:`~repro.core.segments` to
+split the optimized body at barriers ("each segment is a separate
+kernel"), then executes the node list one entry at a time, delegating
+each straight-line :class:`~repro.core.segments.SegNode` to the bound
+backend — whose translation of it lands in the shared
+:class:`~repro.core.cache.TranslationCache` under a key carrying the
+specialization's bound-scalar vector.
 
 The engine owns the *control* state the paper puts in its snapshots
 (§4.3 "State Representation"): the position in the segmented program
@@ -30,7 +35,8 @@ import numpy as np
 
 from . import hetir as ir
 from .backends.base import Backend, HostState, Launch
-from .passes import DEFAULT_OPT_LEVEL, OPT_MAX, get_optimized
+from .passes import (DEFAULT_OPT_LEVEL, OPT_MAX, SPECIALIZATION_POLICY,
+                     get_optimized, get_specialized)
 from .segments import (LoopEnd, LoopStart, Node, SegNode, dynamic_op_count,
                        resolve_trip_count, segment_program)
 from .state import Snapshot
@@ -40,16 +46,39 @@ class Engine:
     def __init__(self, program: ir.Program, backend: Backend,
                  num_blocks: int, block_size: int,
                  args: Dict[str, object], opt_level: int = None,
-                 _from_snapshot: bool = False):
+                 specialize: Optional[bool] = None,
+                 _from_snapshot: bool = False,
+                 _spec_key: Optional[tuple] = None):
         program.validate()
         self.opt_level = DEFAULT_OPT_LEVEL if opt_level is None \
             else max(0, min(int(opt_level), OPT_MAX))
         self.source_program = program
+        # snapshot the uniform scalar arguments up front: launch-time
+        # specialization (paper §4.2 — translation happens at launch, when
+        # every scalar is known) may bind them into the optimized body
+        scalars: Dict[str, object] = {}
+        if not _from_snapshot:
+            for p in program.scalars():
+                if p.name not in args:
+                    raise ValueError(f"missing scalar argument {p.name}")
+                scalars[p.name] = ir.np_dtype(p.dtype).type(args[p.name])
         # run the pass pipeline before translation (paper §4.2: the runtime
         # "dynamically translates this IR to the target GPU's native code" —
         # every backend then consumes the same optimized body).  Memoized per
-        # (program, level) so segmentation and fingerprints stay stable.
-        opt_prog, self.opt_stats = get_optimized(program, self.opt_level)
+        # (program, level[, spec key]) so segmentation and fingerprints stay
+        # stable.  A resume reapplies the snapshot's spec key verbatim —
+        # never the policy — so the destination reconstructs the exact node
+        # list the node_idx addresses.
+        if _spec_key is not None:
+            self.spec_key = tuple(tuple(e) for e in _spec_key)
+        else:
+            self.spec_key = SPECIALIZATION_POLICY.consider(
+                program, self.opt_level, scalars, override=specialize)
+        if self.spec_key:
+            opt_prog, self.opt_stats = get_specialized(
+                program, self.opt_level, self.spec_key)
+        else:
+            opt_prog, self.opt_stats = get_optimized(program, self.opt_level)
         self.program = opt_prog
         self.backend = backend
         # segmentation is memoized on the (optimized) Program so SegNode
@@ -61,8 +90,9 @@ class Engine:
             nodes = segment_program(opt_prog)
             opt_prog._nodes_cache = nodes
         self.nodes = nodes
-        self.launch = Launch(opt_prog, num_blocks, block_size, scalars={},
-                             opt_level=self.opt_level)
+        self.launch = Launch(opt_prog, num_blocks, block_size,
+                             scalars=scalars, opt_level=self.opt_level,
+                             spec_key=self.spec_key)
         self.node_idx = 0
         self.loop_counters: Dict[int, int] = {}
         self.finished = False
@@ -95,11 +125,6 @@ class Engine:
             if buf.ndim != 1:
                 raise ValueError(f"buffer {p.name} must be 1-D")
             globals_[p.name] = buf.copy()
-        for p in program.scalars():
-            if p.name not in args:
-                raise ValueError(f"missing scalar argument {p.name}")
-            self.launch.scalars[p.name] = ir.np_dtype(p.dtype).type(
-                args[p.name])
 
         shared = None
         if program.shared_size:
@@ -191,6 +216,7 @@ class Engine:
             globals_={k: np.asarray(v).copy()
                       for k, v in self.state.globals_.items()},
             scalars=dict(self.launch.scalars),
+            spec_key=self.spec_key,
         )
 
     @classmethod
@@ -201,11 +227,13 @@ class Engine:
         if snap.program_name != program.name:
             raise ValueError(
                 f"snapshot is for {snap.program_name!r}, not {program.name!r}")
-        # re-optimize at the snapshot's level: node indices are positions in
-        # the *optimized* segmented program, and the pipeline is
+        # re-optimize at the snapshot's level — and with the snapshot's
+        # specialization key: node indices are positions in the *optimized*
+        # (possibly specialized) segmented program, and the pipeline is
         # deterministic, so the destination sees the same node list
         eng = cls(program, backend, snap.num_blocks, snap.block_size,
-                  args={}, opt_level=snap.opt_level, _from_snapshot=True)
+                  args={}, opt_level=snap.opt_level, _from_snapshot=True,
+                  _spec_key=tuple(snap.spec_key))
         eng.launch.scalars = dict(snap.scalars)
         eng.node_idx = snap.node_idx
         eng.loop_counters = dict(snap.loop_counters)

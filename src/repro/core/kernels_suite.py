@@ -9,7 +9,11 @@ test target).  Three loop-heavy kernels target the phase-2 optimizer
 (see ``docs/PASSES.md``): ``poly_eval`` (constant-trip Horner loop —
 unrolling + folding), ``swizzle_copy`` (power-of-two index arithmetic —
 strength reduction), and ``tap_filter`` (a recomputed quotient spanning a
-barrier — cross-segment value numbering).
+barrier — cross-segment value numbering).  Two *dynamic-trip* kernels
+target launch-time specialization: ``dyn_matmul`` (the tile loop's trip
+count is a launch scalar, unrollable only once bound) and ``dyn_fir``
+(dynamic taps plus a loop-invariant load that the alias-aware hoist moves
+once the trip count is known positive).
 
 Each returns a :class:`~repro.core.hetir.Program` plus a pure-numpy oracle.
 """
@@ -465,6 +469,96 @@ def tap_filter(taps: int = 4, size: int = 64) -> Tuple[ir.Program, Callable]:
 
 
 # ---------------------------------------------------------------------------
+def dyn_matmul(tile_k: int = 8) -> Tuple[ir.Program, Callable]:
+    """:func:`matmul_tiled` with the inner K-tile loop's trip count a
+    *launch scalar* (``tk``) — the launch-time-specialization showcase.
+    Statically the inner loop is dynamic-trip, so the generic pipeline can
+    never unroll it; binding ``tk`` at launch makes it static and the
+    whole phase-2 cascade (unroll → fold → strength-reduce → CSE) fires on
+    the per-tile index math.  Launch with ``tk == tile_k`` (the shared
+    staging buffer is sized at build time, like a template parameter)."""
+    b = Builder("dyn_matmul",
+                [Ptr("A"), Ptr("B"), Ptr("C"), Scalar("K"), Scalar("N"),
+                 Scalar("ktiles"), Scalar("tk")],
+                shared_size=tile_k)
+    row = b.block_id()
+    col = b.thread_id()
+    n = b.param("N")
+    k = b.param("K")
+    acc = b.var(b.const(0.0, ir.F32), hint="acc")
+    with b.loop("ktiles", hint="kt") as kt:
+        t = b.thread_id()
+        with b.when(t < b.const(tile_k)):
+            a_idx = row * k + kt * b.const(tile_k) + t
+            b.store_shared(t, b.load("A", a_idx))
+        b.barrier("tile-staged")
+        with b.loop("tk", hint="kk") as kk:  # dynamic trip: scalar param
+            # swizzled tile order (odd-stride permutation of 0..tile_k-1,
+            # the classic bank-conflict dodge): uniform-on-kk index math
+            # that the rolled loop pays every trip and an unrolled copy
+            # folds to one constant
+            kidx = (kk * b.const(5) + b.const(2)) % b.const(tile_k)
+            a_val = b.load_shared(kidx)
+            b_idx = (kt * b.const(tile_k) + kidx) * n + col
+            b.assign(acc, b.fma(a_val, b.load("B", b_idx), acc))
+        b.barrier("tile-consumed")
+    b.store("C", row * n + col, acc)
+    prog = b.done()
+
+    def oracle(args):
+        K, N = int(args["K"]), int(args["N"])
+        A = np.asarray(args["A"], np.float32)
+        B = np.asarray(args["B"], np.float32)
+        M = A.size // K
+        C = (A.reshape(M, K) @ B.reshape(K, N)).reshape(-1)
+        return {"C": C.astype(np.float32)}
+
+    return prog, oracle
+
+
+# ---------------------------------------------------------------------------
+def dyn_fir(size: int = 64) -> Tuple[ir.Program, Callable]:
+    """FIR filter with a *dynamic* tap count (``taps``) and a
+    loop-invariant gain load — the second specialization showcase, and the
+    alias-aware load-hoist showcase in one kernel.  ``W[0]`` is re-loaded
+    every trip; the only stores go to ``Out`` (a distinct buffer, so the
+    alias analysis clears the hoist) — but hoisting needs a static trip
+    count ≥ 1, which only launch-time specialization can provide here.
+    Small bound tap counts additionally unroll, folding the per-tap
+    ``j*3`` offsets.  Launch with ``grid * block == size``."""
+    assert size & (size - 1) == 0, "size must be a power of two"
+    b = Builder("dyn_fir", [Ptr("A"), Ptr("W"), Ptr("Out"), Scalar("taps")])
+    i = b.global_id(0)
+    acc = b.var(b.const(0.0, ir.F32), hint="facc")
+    with b.loop("taps", hint="fj") as j:
+        g = b.load("W", b.const(0))          # invariant: hoists once static
+        # swizzled tap offset: a chain of uniform-on-j arithmetic that the
+        # rolled loop re-executes every trip but collapses to one constant
+        # per unrolled copy once the trip count is bound
+        off = ((j * b.const(5) + b.const(2)) % b.const(8)) * b.const(4) \
+            + j % b.const(4)
+        idx = (i + off) % b.const(size)
+        b.assign(acc, acc + b.load("A", idx) * (b.load("W", j) + g))
+    b.store("Out", i, acc)
+    prog = b.done()
+
+    def oracle(args):
+        taps = int(args["taps"])
+        A = np.asarray(args["A"], np.float32)
+        W = np.asarray(args["W"], np.float32)
+        i = np.arange(size, dtype=np.int64)
+        acc = np.zeros(size, np.float32)
+        for j in range(taps):
+            off = ((j * 5 + 2) % 8) * 4 + (j % 4)
+            acc = acc + A[(i + off) % size] * (W[j] + W[0])
+        out = np.array(args["Out"], np.float32)
+        out[:size] = acc
+        return {"Out": out}
+
+    return prog, oracle
+
+
+# ---------------------------------------------------------------------------
 def dot_product() -> Tuple[ir.Program, Callable]:
     b = Builder("dot_product", [Ptr("A"), Ptr("B"), Ptr("Out"), Scalar("n")])
     i = b.global_id(0)
@@ -502,4 +596,6 @@ SUITE: Dict[str, Callable] = {
     "poly_eval": poly_eval,
     "swizzle_copy": swizzle_copy,
     "tap_filter": tap_filter,
+    "dyn_matmul": dyn_matmul,
+    "dyn_fir": dyn_fir,
 }

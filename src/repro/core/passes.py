@@ -54,6 +54,27 @@ for legality conditions and worked examples):
   duplicate would recompute), so re-derived quantities are not re-executed
   in later segments.
 
+Phase-3 additions (this level-3 pipeline; see ``docs/PASSES.md``):
+
+* **alias-aware invariant load motion** (:func:`hoist_invariant_loads`) —
+  loads whose index is loop-invariant move out of loops with static trip
+  count ≥ 1, unless a store in the loop *may alias* them under the affine
+  may-alias analysis of :mod:`~repro.core.alias` (distinct buffers never
+  alias; same-buffer accesses compare their affine index forms).
+
+* **launch-time specialization** — the paper's runtime translates IR at
+  *launch*, when every uniform scalar argument is known, so the engine may
+  re-run this pipeline with those scalars bound as constants
+  (:func:`bind_launch_scalars` / :func:`get_specialized`): dynamic trip
+  counts become static (``unroll_loops`` and the static-trip legality
+  gates fire), and size-dependent index math folds away.  A
+  :class:`SpecializationPolicy` (``HETGPU_SPECIALIZE``, budgeted by
+  ``HETGPU_SPECIALIZE_BUDGET``) gates which launches get a variant;
+  everything else falls back to the shared generic translation.  The
+  bound-scalar vector (``SpecKey``) joins every translation-cache key and
+  rides in snapshots, so a migrated specialized kernel restores against
+  the identical specialized body on the destination backend.
+
 Entry point: :func:`optimize`, wired into :class:`~repro.core.engine.Engine`
 so every backend translates the optimized body; per-pass statistics are
 returned in :class:`PipelineStats` and surfaced through
@@ -75,7 +96,9 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import hetir as ir
-from .segments import static_trip_count
+from .alias import (GLOBAL_SPACE, SHARED_BUF, SHARED_SPACE, affine_env,
+                    body_mem_accesses, index_form, may_alias)
+from .segments import specializable_counts, static_trip_count
 
 # --------------------------------------------------------------------------
 # Opcode classification
@@ -126,6 +149,8 @@ class PipelineStats:
     iterations: int = 0
     per_pass: Dict[str, int] = field(default_factory=dict)
     per_pass_ms: Dict[str, float] = field(default_factory=dict)
+    #: bound uniform scalars for a specialized variant; () = generic
+    spec_key: Tuple = ()
 
     def record(self, pass_name: str, n: int, ms: float = 0.0) -> None:
         self.per_pass[pass_name] = self.per_pass.get(pass_name, 0) + n
@@ -141,7 +166,8 @@ class PipelineStats:
                 "ops_after": self.ops_after, "ops_removed": self.ops_removed,
                 "iterations": self.iterations, "per_pass": dict(self.per_pass),
                 "per_pass_ms": {k: round(v, 3)
-                                for k, v in self.per_pass_ms.items()}}
+                                for k, v in self.per_pass_ms.items()},
+                "spec_key": list(self.spec_key)}
 
 
 # --------------------------------------------------------------------------
@@ -359,6 +385,13 @@ def simplify_predicates(body: List[ir.Stmt], prog: ir.Program
 # --------------------------------------------------------------------------
 
 
+def _defined_names(stmts: Sequence[ir.Stmt]) -> set:
+    """Register names defined anywhere in ``stmts`` (op dests and loop
+    vars, recursive) — the "inside the loop" set both hoisting passes
+    test invariance against."""
+    return set(ir.reg_def_counts(stmts))
+
+
 def hoist_invariants(body: List[ir.Stmt], prog: ir.Program
                      ) -> Tuple[List[ir.Stmt], int]:
     """Move pure ops whose inputs are defined entirely outside a loop to
@@ -369,19 +402,6 @@ def hoist_invariants(body: List[ir.Stmt], prog: ir.Program
     per-thread, so unconditionalizing a write is observable there."""
     defs = ir.reg_def_counts(body)
     n = [0]
-
-    def inside_names(stmts: Sequence[ir.Stmt]) -> set:
-        names = set()
-        for s in stmts:
-            if isinstance(s, ir.Op):
-                if s.dest is not None:
-                    names.add(s.dest.name)
-            elif isinstance(s, ir.Pred):
-                names |= inside_names(s.body)
-            elif isinstance(s, ir.Loop):
-                names.add(s.var.name)
-                names |= inside_names(s.body)
-        return names
 
     def extract(stmts: Sequence[ir.Stmt], inside: set,
                 hoisted: List[ir.Stmt]) -> List[ir.Stmt]:
@@ -411,13 +431,111 @@ def hoist_invariants(body: List[ir.Stmt], prog: ir.Program
         for s in stmts:
             if isinstance(s, ir.Loop):
                 inner = process(s.body)
-                inside = inside_names(inner) | {s.var.name}
+                inside = _defined_names(inner) | {s.var.name}
                 while True:
                     hoisted: List[ir.Stmt] = []
                     inner = extract(inner, inside, hoisted)
                     if not hoisted:
                         break
                     out.extend(hoisted)
+                out.append(ir.Loop(s.var, s.count, inner))
+            elif isinstance(s, ir.Pred):
+                out.append(ir.Pred(s.cond, process(s.body)))
+            else:
+                out.append(s)
+        return out
+
+    return process(body), n[0]
+
+
+# --------------------------------------------------------------------------
+# Alias-aware loop-invariant load motion
+# --------------------------------------------------------------------------
+
+
+def hoist_invariant_loads(body: List[ir.Stmt], prog: ir.Program
+                          ) -> Tuple[List[ir.Stmt], int]:
+    """Move provably loop-invariant ``LD_GLOBAL``/``LD_SHARED`` ops out of
+    loops — the loop-invariant *memory* motion :func:`hoist_invariants`
+    cannot do, because loads observe stores.
+
+    Legality (all must hold, per load):
+
+    * the loop's **static trip count is ≥ 1** — hoisting out of a
+      possibly-zero-trip loop would execute a load (and its index) that
+      never ran, exactly the hazard that keeps ``DIV``/``MOD`` out of
+      :data:`HOISTABLE_OPS`.  Launch-time specialization is what makes
+      dynamic-trip loops eligible: binding the count makes it static;
+    * the load sits at the **loop body's top level** (not under a
+      ``@PRED`` — a masked register write must stay masked), its dest is
+      single-def, and its index registers are defined outside the loop;
+    * **no store in the loop may alias it** (:mod:`~repro.core.alias`):
+      stores to *other* buffers never block; a same-buffer
+      ``ST_GLOBAL``/``ST_SHARED``/``ATOMIC_ADD`` blocks unless the affine
+      index forms are provably disjoint across *all* thread pairs
+      (identical base/coefficient terms, constant delta indivisible by
+      the coefficients' power-of-two gcd).  Bases defined inside the loop
+      (including the loop variable) are unstable and force a conservative
+      block.
+
+    Hoisting then crosses any barrier inside the loop soundly: with no
+    may-aliasing store in the body, no thread of any block writes the
+    loaded address between iterations, so the value the pre-loop load
+    reads is the value every iteration would have read."""
+    defs = ir.reg_def_counts(body)
+    aff = affine_env(body)
+    n = [0]
+
+    def load_site(op: ir.Op):
+        if op.opcode == ir.LD_GLOBAL:
+            return GLOBAL_SPACE, op.args[0], op.args[1]
+        if op.opcode == ir.LD_SHARED:
+            return SHARED_SPACE, SHARED_BUF, op.args[0]
+        return None
+
+    def process(stmts: Sequence[ir.Stmt]) -> List[ir.Stmt]:
+        out: List[ir.Stmt] = []
+        for s in stmts:
+            if isinstance(s, ir.Loop):
+                inner = process(s.body)
+                trip = static_trip_count(s.count)
+                if trip is not None and trip >= 1:
+                    inside = _defined_names(inner) | {s.var.name}
+                    _, writes = body_mem_accesses(inner)
+                    while True:
+                        hoisted: List[ir.Stmt] = []
+                        kept: List[ir.Stmt] = []
+
+                        def stable(name: str) -> bool:
+                            return name not in inside \
+                                and defs.get(name, 0) == 1
+
+                        for t in inner:
+                            site = load_site(t) if isinstance(t, ir.Op) \
+                                else None
+                            if (site is not None and t.dest is not None
+                                    and defs.get(t.dest.name, 0) == 1
+                                    and all(r.name not in inside
+                                            for r in t.arg_regs())):
+                                space, buf, idx = site
+                                lform = index_form(idx, aff, defs)
+                                blocked = any(
+                                    wspace == space and wbuf == buf
+                                    and may_alias(
+                                        lform,
+                                        index_form(widx, aff, defs),
+                                        stable)
+                                    for wspace, wbuf, widx in writes)
+                                if not blocked:
+                                    hoisted.append(t)
+                                    inside.discard(t.dest.name)
+                                    n[0] += 1
+                                    continue
+                            kept.append(t)
+                        inner = kept
+                        out.extend(hoisted)
+                        if not hoisted:
+                            break
                 out.append(ir.Loop(s.var, s.count, inner))
             elif isinstance(s, ir.Pred):
                 out.append(ir.Pred(s.cond, process(s.body)))
@@ -1028,13 +1146,19 @@ _PIPELINES: Dict[int, List[PassFn]] = {
     1: [fold_constants, eliminate_dead_code],
     2: [fold_constants, simplify_predicates, hoist_invariants,
         merge_duplicates, fuse_fma, fold_constants, eliminate_dead_code],
-    # phase 2: unroll first so folding/CSE see per-iteration constants;
-    # value numbering (cross-segment) before strength reduction so
-    # duplicate DIV/MODs merge before being rewritten; a second fold sweep
-    # cleans up what unrolling and strength reduction exposed
-    3: [unroll_loops, fold_constants, simplify_predicates, hoist_invariants,
-        value_number_cross_segment, strength_reduce, fuse_fma,
-        fold_constants, eliminate_dead_code],
+    # phase 2/3.  A fold/pred/hoist prefix runs *before* unrolling so
+    # loop-invariant scalars (and the constants feeding invariant-load
+    # indices) leave loop bodies first — then hoist_invariant_loads can
+    # lift an alias-free load once instead of unrolling N copies of it.
+    # Unrolling next, so the second folding/CSE sweep sees per-iteration
+    # constants; value numbering (cross-segment) before strength
+    # reduction so duplicate DIV/MODs merge before being rewritten; the
+    # final fold sweep cleans up what unrolling and strength reduction
+    # exposed
+    3: [fold_constants, simplify_predicates, hoist_invariants,
+        hoist_invariant_loads, unroll_loops, fold_constants,
+        simplify_predicates, hoist_invariants, value_number_cross_segment,
+        strength_reduce, fuse_fma, fold_constants, eliminate_dead_code],
 }
 
 OPT_MAX = max(_PIPELINES)
@@ -1042,7 +1166,9 @@ _MAX_PIPELINE_ITERS = 4
 
 #: bump when any pass's *output semantics* change without a rename — part
 #: of :func:`pipeline_fingerprint`, hence of the persistent store's tag
-_PASS_SCHEMA_VERSION = 2
+#: (v3: launch-time specialization + alias-aware load hoisting; the
+#: translation-cache key layout also gained the bound-scalar vector)
+_PASS_SCHEMA_VERSION = 3
 
 DEFAULT_OPT_LEVEL = max(0, min(
     int(os.environ.get("HETGPU_OPT_LEVEL", str(OPT_MAX))), OPT_MAX))
@@ -1113,3 +1239,132 @@ def get_optimized(program: ir.Program, level: int
             hit = optimize(program, level)
         memo[level] = hit
     return hit
+
+
+# --------------------------------------------------------------------------
+# Launch-time specialization (paper §4.2: translation happens at launch,
+# when every uniform scalar argument is known)
+# --------------------------------------------------------------------------
+
+#: (name, value) pairs of bound uniform scalars, sorted by name; () means
+#: the generic (unspecialized) program.  This tuple is the *specialization
+#: key*: it joins every translation-cache key, rides in snapshots, and
+#: selects the memoized specialized variant.
+SpecKey = Tuple[Tuple[str, object], ...]
+
+
+def bind_launch_scalars(body: List[ir.Stmt], prog: ir.Program,
+                        values: Dict[str, object]
+                        ) -> Tuple[List[ir.Stmt], int]:
+    """Rewrite ``LD_PARAM`` of a bound scalar into ``CONST`` of its
+    launch value, and dynamic loop counts naming a bound scalar into
+    ``int`` literals — after which the ordinary pipeline folds the
+    size-dependent index math and :func:`unroll_loops` /
+    :func:`hoist_invariant_loads` see static trip counts.  Values are
+    typed through the dest register's dtype, so a folded constant is
+    bit-identical to what ``LD_PARAM`` would have produced at run time."""
+    n = [0]
+
+    def walk(stmts: Sequence[ir.Stmt]) -> List[ir.Stmt]:
+        out: List[ir.Stmt] = []
+        for s in stmts:
+            if isinstance(s, ir.Op):
+                if (s.opcode == ir.LD_PARAM and s.dest is not None
+                        and s.args[0] in values):
+                    v = ir.np_dtype(s.dest.dtype).type(values[s.args[0]])
+                    out.append(ir.Op(ir.CONST, s.dest, (v.item(),)))
+                    n[0] += 1
+                else:
+                    out.append(s)
+            elif isinstance(s, ir.Pred):
+                out.append(ir.Pred(s.cond, walk(s.body)))
+            elif isinstance(s, ir.Loop):
+                count = s.count
+                if isinstance(count, str) and count in values:
+                    count = int(values[count])
+                    n[0] += 1
+                out.append(ir.Loop(s.var, count, walk(s.body)))
+            else:
+                out.append(s)
+        return out
+
+    return walk(body), n[0]
+
+
+def get_specialized(program: ir.Program, level: int, spec_key: SpecKey
+                    ) -> Tuple[ir.Program, PipelineStats]:
+    """Memoized specialized variant: bind the scalars in ``spec_key`` as
+    constants, then run the ordinary pipeline at ``level``.  Deterministic
+    in (program, level, spec_key) — a migration destination re-deriving a
+    variant from a snapshot's key reconstructs the *identical* optimized
+    body, node list, and program fingerprint."""
+    level = max(0, min(int(level), OPT_MAX))
+    spec_key = tuple((str(k), v) for k, v in spec_key)
+    memo = program.__dict__.setdefault("_spec_cache", {})
+    hit = memo.get((level, spec_key))
+    if hit is None:
+        values = dict(spec_key)
+        body, bound = bind_launch_scalars(list(program.body), program,
+                                          values)
+        seed = ir.Program(name=program.name, params=list(program.params),
+                          body=body, shared_size=program.shared_size,
+                          shared_dtype=program.shared_dtype)
+        out, stats = optimize(seed, level)
+        stats.record("bind_launch_scalars", bound)
+        stats.spec_key = spec_key
+        hit = (out, stats)
+        memo[(level, spec_key)] = hit
+    return hit
+
+
+class SpecializationPolicy:
+    """Decides whether a launch gets a specialized variant.
+
+    Modes (``HETGPU_SPECIALIZE``, read at decision time so tests can
+    flip it):
+
+    * ``off``/``0``/``false``/``no`` — never specialize;
+    * ``auto`` (default) — specialize only programs with at least one
+      *barrier-free dynamic-trip* loop
+      (:func:`~repro.core.segments.specializable_counts`), where binding
+      the count unlocks unrolling / static-trip load hoisting;
+    * ``all`` — specialize every launch with uniform scalars.
+
+    The per-program **budget** (``HETGPU_SPECIALIZE_BUDGET``, default 8)
+    caps how many *distinct* scalar bindings a program may accumulate at
+    one opt level; past it, new bindings fall back to the generic variant
+    (whose translations every launch shares), so an adversarial scalar
+    stream cannot grow code and cache without bound.  Already-admitted
+    bindings keep specializing — a warm variant stays warm.  An explicit
+    ``override=True`` is a per-launch *demand* (e.g. a caller that needs
+    the unrolled body before checkpointing) and bypasses the budget —
+    the budget polices the ambient policy, not deliberate requests."""
+
+    def consider(self, program: ir.Program, level: int,
+                 scalars: Dict[str, object],
+                 override: Optional[bool] = None) -> SpecKey:
+        if override is False:
+            return ()
+        mode = "all" if override else \
+            os.environ.get("HETGPU_SPECIALIZE", "auto").strip().lower()
+        if mode in ("off", "0", "false", "no"):
+            return ()
+        if level < 1 or not scalars:
+            return ()  # O0 is the differential baseline: always generic
+        if mode != "all" and not specializable_counts(program.body):
+            return ()
+        key: SpecKey = tuple(sorted(
+            (name, np.asarray(v).item()) for name, v in scalars.items()))
+        budget = max(0, int(os.environ.get("HETGPU_SPECIALIZE_BUDGET",
+                                           "8")))
+        seen = program.__dict__.setdefault("_spec_variants", {}) \
+            .setdefault(level, set())
+        if key not in seen:
+            if override is not True and len(seen) >= budget:
+                return ()  # budget exhausted: generic fallback
+            seen.add(key)
+        return key
+
+
+#: process-wide policy instance (stateless beyond env/program lookups)
+SPECIALIZATION_POLICY = SpecializationPolicy()

@@ -53,7 +53,11 @@ class HetSession:
     def __init__(self, backend: str = "vectorized",
                  opt_level: Optional[int] = None,
                  cache: Optional[TranslationCache] = None,
-                 store: Optional[Union[str, DiskStore]] = None):
+                 store: Optional[Union[str, DiskStore]] = None,
+                 specialize: Optional[bool] = None):
+        # specialize: None = policy default (HETGPU_SPECIALIZE / auto),
+        # True = force launch-time specialization, False = always generic
+        self.specialize = specialize
         self.backend_name = backend
         if store is not None and not isinstance(store, DiskStore):
             store = DiskStore(store)
@@ -133,8 +137,17 @@ class HetSession:
                 try:
                     use_args = dict(args) if args is not None else \
                         _synthesize_args(prog, grid, block)
+                    # synthesized args carry made-up unit scalars: never
+                    # specialize on them — it would warm (and persist) a
+                    # variant no real launch will ask for, and burn one of
+                    # the program's specialization-budget slots.  The
+                    # generic entries warmed instead are the ones budget
+                    # fallbacks and policy-off launches share.  Explicit
+                    # example args warm whatever a real launch would run.
                     eng = Engine(prog, self.backend, grid, block, use_args,
-                                 opt_level=self.opt_level)
+                                 opt_level=self.opt_level,
+                                 specialize=(False if args is None
+                                             else self.specialize))
                     eng.run()
                     entry["status"] = "ok"
                 except Exception as exc:  # best-effort: report, don't raise
@@ -179,11 +192,15 @@ class HetSession:
                 raise ValueError(f"missing argument {p.name}")
         t0 = time.perf_counter()
         eng = Engine(handle.program, self.backend, grid, block, merged,
-                     opt_level=self.opt_level)
+                     opt_level=self.opt_level, specialize=self.specialize)
         rec = LaunchRecord(engine=eng)
         self._streams.setdefault(stream, []).append(rec)
         self.stats["launches"] += 1
         self.stats["last_opt"] = eng.opt_stats.as_dict()
+        self.stats["last_spec_key"] = eng.spec_key
+        if eng.spec_key:
+            self.stats["specialized_launches"] = \
+                self.stats.get("specialized_launches", 0) + 1
         if blocking:
             rec.finished = eng.run(pause_flag=lambda: self.pause_flag)
             self._writeback(handle.program, eng, args)
@@ -247,7 +264,14 @@ def migrate(rec: LaunchRecord, src: HetSession, dst: HetSession,
     whichever persistent store is reachable (its own, else the source's):
     if this program has ever been translated for the destination backend
     within the store's lifetime, the migrated launch pays near-zero
-    translation cost — the paper's cluster-lifetime JIT amortization."""
+    translation cost — the paper's cluster-lifetime JIT amortization.
+
+    Specialization keys ride along: the snapshot records the source
+    engine's bound-scalar vector, ``Engine.resume`` re-derives the
+    identical specialized body from it (never re-consulting the policy),
+    and the fingerprint used for the preload below is the *specialized*
+    program's — so a mid-kernel checkpoint of a specialized kernel
+    restores bit-identical, against warm specialized translations."""
     t0 = time.perf_counter()
     blob = src.checkpoint(rec)  # capture at barrier
     t1 = time.perf_counter()

@@ -115,6 +115,31 @@ def dynamic_op_count(body: Sequence[ir.Stmt],
     return total
 
 
+def specializable_counts(body: Sequence[ir.Stmt]) -> set:
+    """Scalar-param names used as trip counts of *barrier-free* loops —
+    the profitability signal for launch-time specialization: binding one
+    of these turns a dynamic trip count static, which is what lets
+    :func:`~repro.core.passes.unroll_loops` (and the static-trip gates of
+    hoisting / cross-segment value numbering) fire at launch time.
+    Barrier-carrying loops are excluded: they are the engine's
+    segment/migration structure and are never unrolled, so binding their
+    counts alone is not worth a specialized variant."""
+    names: set = set()
+
+    def walk(stmts: Sequence[ir.Stmt]) -> None:
+        for s in stmts:
+            if isinstance(s, ir.Loop):
+                if isinstance(s.count, str) \
+                        and not ir._contains_barrier(s.body):
+                    names.add(s.count)
+                walk(s.body)
+            elif isinstance(s, ir.Pred):
+                walk(s.body)
+
+    walk(body)
+    return names
+
+
 def segment_program(prog: ir.Program) -> List[Node]:
     """Flatten ``prog.body`` into engine nodes, splitting at barriers."""
     nodes: List[Node] = []

@@ -52,6 +52,12 @@ class Snapshot:
     # taken: node_idx indexes the *optimized* segmented program, so restore
     # must re-optimize at the same level (the pipeline is deterministic)
     opt_level: int = 0
+    # launch-time specialization key — the (name, value) scalar bindings the
+    # source engine optimized under; () = generic.  Restore re-binds them
+    # verbatim (never re-consults the policy), so a mid-kernel checkpoint of
+    # a specialized program reconstructs the identical node list on the
+    # destination backend
+    spec_key: tuple = ()
 
     # -- serialization ------------------------------------------------------
     def to_bytes(self) -> bytes:
@@ -69,6 +75,10 @@ class Snapshot:
                             if isinstance(v, (float, np.floating))
                             else int(v))
                         for k, v in self.scalars.items()},
+            "spec_key": [[str(k), (float(v)
+                                   if isinstance(v, (float, np.floating))
+                                   else int(v))]
+                         for k, v in self.spec_key],
             "reg_names": sorted(self.regs),
             "global_names": sorted(self.globals_),
             "has_shared": self.shared is not None,
@@ -99,6 +109,7 @@ class Snapshot:
             block_size=meta["block_size"],
             node_idx=meta["node_idx"],
             opt_level=int(meta.get("opt_level", 0)),
+            spec_key=tuple((k, v) for k, v in meta.get("spec_key", [])),
             loop_counters={int(k): v
                            for k, v in meta["loop_counters"].items()},
             regs=regs,

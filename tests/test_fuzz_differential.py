@@ -3,7 +3,13 @@
 Random *well-formed* hetIR programs — loops with constant and dynamic trip
 counts, power-of-two and odd multiplies/divides/mods, shifts, predication,
 barriers (cross-segment reuse), shared memory, collectives and atomics —
-are executed at O0 and at OPT_MAX on the interp and vectorized backends.
+are executed at O0 and at OPT_MAX on the interp and vectorized backends
+(where OPT_MAX also exercises launch-time specialization: the auto policy
+binds the launch scalars of any program with a barrier-free dynamic-trip
+loop, which the generator emits routinely).  A second *memory-op corpus*
+(``mem=True`` profile) stresses the alias-aware passes with overlapping
+and disjoint LOAD/STORE patterns, including same-buffer read-after-write
+inside loops.
 The property: **outputs are bit-identical per backend across opt levels**.
 The pipeline may remove or rearrange work; it may never change a computed
 bit.
@@ -55,8 +61,10 @@ except ImportError:  # container without hypothesis: corpus still runs
     hypothesis = None
 
 N_EXAMPLES = int(os.environ.get("HETGPU_FUZZ_EXAMPLES", "210"))
+MEM_EXAMPLES = int(os.environ.get("HETGPU_FUZZ_MEM_EXAMPLES", "210"))
 CHUNKS = 7
 SEED0 = 20260728
+MEM_SEED0 = 20270115
 BACKENDS = ("interp", "vectorized")
 
 
@@ -106,11 +114,27 @@ _F32_CONSTS = (0.0, 1.0, -1.0, 0.5, 2.0, 4.0, -0.25, 3.1415927,
 
 
 class _ProgramGen:
-    """Builds one random well-formed hetIR program via a chooser."""
+    """Builds one random well-formed hetIR program via a chooser.
 
-    def __init__(self, ch, tag: str):
+    With ``mem=True`` the generator shifts into its *memory-op profile*:
+    programs are salted with LOAD/STORE statements over overlapping and
+    disjoint buffer access patterns — including same-buffer
+    read-after-write inside loops, the exact shapes that make the
+    alias-aware ``hoist_invariant_loads`` pass dangerous — and the input
+    buffers ``F``/``I`` join the compared outputs so a misplaced store is
+    caught even when no later load observes it.  Plain (non-atomic) store
+    indices are always *launch-injective* — a bijection of the global
+    thread id (odd-stride affine or xor mod the pow-2 launch size),
+    optionally shifted by a uniform loop-term — because colliding plain
+    stores have no defined winner across backends (XLA scatter picks an
+    arbitrary duplicate; the interpreter is last-thread-wins).  Loads may
+    target anything in range.  ``G`` is never stored to, keeping a
+    provably alias-free invariant-load candidate in every program."""
+
+    def __init__(self, ch, tag: str, mem: bool = False):
         self.ch = ch
         self.tag = tag
+        self.mem = mem
         self.ops_budget = 60
 
     # -- expression pools (scoped: regions push/pop their additions) -------
@@ -238,6 +262,63 @@ class _ProgramGen:
         w = ch.pick("&|^")
         return p & q if w == "&" else (p | q if w == "|" else p ^ q)
 
+    def _store_idx(self, j=None):
+        """Launch-injective store index: a bijection of gid over the pow-2
+        launch size (odd-stride affine / xor mask), optionally shifted by
+        a uniform multiple of the loop variable — overlapping *across*
+        iterations (read-after-write), never colliding across threads."""
+        b, ch = self.b, self.ch
+        N = self.N
+        w = ch.pick(["id", "aff", "xor"])
+        if w == "aff":
+            idx = self.gid * b.const(ch.pick((3, 5, 7))) \
+                + b.const(ch.randint(0, 7))
+        elif w == "xor":
+            idx = self.gid ^ b.const(ch.randint(0, N - 1))
+        else:
+            idx = self.gid
+        if j is not None and ch.chance(0.5):
+            idx = idx + j * b.const(ch.pick((1, 2, 4)))
+        return idx % b.const(N)
+
+    def gen_memrw(self, j=None) -> None:
+        """Same-buffer store-then-load (RAW when indices overlap, disjoint
+        when they don't — the chooser decides per program)."""
+        b, ch = self.b, self.ch
+        if ch.chance(0.5):
+            buf = ch.pick(("OutF", "F"))
+            b.store(buf, self._store_idx(j), self.float_expr())
+            self.floats.append(
+                b.load(buf, self._wrap_idx(self.int_expr())))
+        else:
+            buf = ch.pick(("OutI", "I"))
+            b.store(buf, self._store_idx(j), self.int_expr())
+            self.ints.append(
+                b.load(buf, self._wrap_idx(self.int_expr())))
+
+    def gen_memloop(self, depth: int) -> None:
+        """A loop (constant or dynamic trip) whose body stores and loads
+        the same buffer each iteration, plus an invariant-load candidate
+        over the never-stored ``G`` — the memory-motion torture shape."""
+        b, ch = self.b, self.ch
+        count = "t" if ch.chance(0.3) else ch.randint(1, 10)
+        mark = self._push_scope()
+        with b.loop(count, hint="M") as j:
+            self.gen_memrw(j)
+            if ch.chance(0.5):
+                inv = b.load("G",
+                             b.const(ch.randint(0, min(3, self.N - 1))))
+                b.assign(ch.pick(self.mut_f), ch.pick(self.mut_f) + inv)
+            if self.use_shared and ch.chance(0.4):
+                tid = b.thread_id()
+                b.store_shared(tid, self.float_expr())
+                self.floats.append(b.load_shared(
+                    (tid + b.const(ch.randint(0, 3)))
+                    % b.const(self.block)))
+            if ch.chance(0.5):
+                self.gen_stmts(1, depth + 1, top=False)
+        self._pop_scope(mark)
+
     # -- statements --------------------------------------------------------
     def gen_stmts(self, n: int, depth: int, top: bool) -> None:
         for _ in range(n):
@@ -248,8 +329,12 @@ class _ProgramGen:
     def gen_stmt(self, depth: int, top: bool) -> None:
         b, ch = self.b, self.ch
         kinds = ["assign", "assign", "store", "pred"]
+        if self.mem:
+            kinds += ["memrw", "memrw"]
         if depth == 0:
             kinds += ["loop", "atomic", "collective"]
+            if self.mem:
+                kinds += ["memloop"]
         kind = ch.pick(kinds)
         if kind == "assign":
             if ch.chance(0.5):
@@ -267,6 +352,10 @@ class _ProgramGen:
             with b.when(cond):
                 self.gen_stmts(ch.randint(1, 2), depth + 1, top=False)
             self._pop_scope(mark)
+        elif kind == "memrw":
+            self.gen_memrw()
+        elif kind == "memloop":
+            self.gen_memloop(depth)
         elif kind == "loop":
             self.gen_loop(depth, top)
         elif kind == "atomic":
@@ -319,7 +408,8 @@ class _ProgramGen:
         grid = ch.pick((1, 2))
         block = ch.pick((4, 8, 16))
         self.N = grid * block
-        use_shared = ch.chance(0.3)
+        self.block = block
+        use_shared = self.use_shared = ch.chance(0.3)
         b = Builder(f"fuzz_{self.tag}",
                     [Ptr("F"), Ptr("G"), Ptr("I", ir.I32), Ptr("OutF"),
                      Ptr("OutI", ir.I32), Scalar("s"), Scalar("t"),
@@ -365,7 +455,12 @@ class _ProgramGen:
             "t": ch.randint(0, 4),   # dynamic trip counts include zero
             "fs": np.float32(rng.normal()),
         }
-        return prog, args, grid, block, ("OutF", "OutI")
+        # the memory profile stores into F / I too: compare them as well,
+        # so a misplaced (hoisted/reordered) store is caught even when no
+        # later load happens to observe it
+        outs = ("OutF", "OutI", "F", "I") if self.mem \
+            else ("OutF", "OutI")
+        return prog, args, grid, block, outs
 
 
 # ---------------------------------------------------------------------------
@@ -396,6 +491,12 @@ def _corpus_case(seed: int):
     return gen.build()
 
 
+def _mem_corpus_case(seed: int):
+    gen = _ProgramGen(_RngChooser(np.random.default_rng(seed)),
+                      f"m{seed}", mem=True)
+    return gen.build()
+
+
 # fixed-seed deterministic profile (the CI profile): N_EXAMPLES programs,
 # split into chunks so progress and failures localize
 @pytest.mark.parametrize("chunk", range(CHUNKS))
@@ -407,6 +508,58 @@ def test_fuzz_differential_corpus(chunk):
         prog, args, grid, block, outs = _corpus_case(seed)
         _check_differential(prog, args, grid, block, outs, cache,
                             note=f"seed {seed}")
+
+
+# memory-op corpus: LOAD/STORE programs with overlapping and disjoint
+# buffer access patterns (incl. same-buffer read-after-write in loops) —
+# the shapes that make alias-aware memory motion dangerous.  Same fixed-
+# seed determinism contract as the main corpus.
+@pytest.mark.parametrize("chunk", range(CHUNKS))
+def test_fuzz_memory_op_corpus(chunk):
+    per = (MEM_EXAMPLES + CHUNKS - 1) // CHUNKS
+    cache = TranslationCache(capacity=4 * per)
+    for i in range(per):
+        seed = MEM_SEED0 + chunk * per + i
+        prog, args, grid, block, outs = _mem_corpus_case(seed)
+        _check_differential(prog, args, grid, block, outs, cache,
+                            note=f"mem seed {seed}")
+
+
+def test_fuzz_memory_corpus_meets_acceptance_size():
+    if "HETGPU_FUZZ_MEM_EXAMPLES" in os.environ and MEM_EXAMPLES < 200:
+        pytest.skip("memory corpus size deliberately overridden below "
+                    "the acceptance bar (local iteration)")
+    assert MEM_EXAMPLES >= 200, \
+        "acceptance: >= 200 memory-op programs through the differential"
+
+
+def test_fuzz_memory_corpus_actually_emits_memory_patterns():
+    """Structural guarantee that the profile does what it claims: across
+    a sample of the corpus there are loops whose body stores AND loads
+    the same buffer (the read-after-write-in-loop pattern), and both F/I
+    (input) and OutF/OutI (output) buffers get written."""
+    import repro.core.hetir as hir
+
+    raw_loops = 0
+    written = set()
+    for i in range(40):
+        prog, _, _, _, _ = _mem_corpus_case(MEM_SEED0 + i)
+
+        def loop_bodies(body):
+            for s in body:
+                if isinstance(s, hir.Loop):
+                    yield s.body
+                    yield from loop_bodies(s.body)
+                elif isinstance(s, hir.Pred):
+                    yield from loop_bodies(s.body)
+
+        for body in loop_bodies(prog.body):
+            reads, writes = hir.body_global_accesses(body)
+            written |= writes
+            if reads & writes:
+                raw_loops += 1
+    assert raw_loops >= 5, "no same-buffer read-after-write loops emitted"
+    assert {"F", "I"} & written and {"OutF", "OutI"} & written
 
 
 @pytest.mark.fast

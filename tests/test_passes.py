@@ -84,6 +84,18 @@ def _suite_cases():
           "W": RNG.normal(size=4).astype(np.float32),
           "Tmp": np.zeros(64, np.float32),
           "Out": np.zeros(64, np.float32)}, ["Tmp", "Out"]),
+        # dynamic-trip kernels: at OPT_MAX the auto specialization policy
+        # binds the launch scalars, so O0 (always generic) vs OPT_MAX here
+        # is also the generic-vs-specialized differential
+        ("dyn_matmul", M, N,
+         {"A": RNG.normal(size=M * K).astype(np.float32),
+          "B": RNG.normal(size=K * N).astype(np.float32),
+          "C": np.zeros(M * N, np.float32),
+          "K": K, "N": N, "ktiles": K // TK, "tk": TK}, ["C"]),
+        ("dyn_fir", 2, 32,
+         {"A": RNG.normal(size=64).astype(np.float32),
+          "W": RNG.normal(size=5).astype(np.float32),
+          "Out": np.zeros(64, np.float32), "taps": 5}, ["Out"]),
     ]
 
 

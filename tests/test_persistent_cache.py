@@ -394,6 +394,80 @@ def test_migrate_warms_destination_from_store(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# on-disk size bound + garbage collection (GDSF score)
+# ---------------------------------------------------------------------------
+
+
+def _blob(i, n=1024):
+    return bytes([i % 256]) * n
+
+
+@pytest.mark.fast
+def test_diskstore_gc_bounds_the_store(tmp_path):
+    """With a byte bound, the store must stop growing: after every save
+    the on-disk total stays within max_bytes."""
+    store = DiskStore(tmp_path, max_bytes=16_000)
+    for i in range(40):
+        store.save(("interp", f"fp{i}", 0, 0), "interp-plan", _blob(i),
+                   cost_ms=float(i))
+        assert store.total_bytes() <= 16_000, f"store grew past bound at {i}"
+    assert store.entry_count() < 40
+    st = store.stats()
+    assert st["gc_evictions"] > 0 and st["gc_runs"] > 0
+    assert st["max_bytes"] == 16_000
+
+
+@pytest.mark.fast
+def test_diskstore_gc_evicts_by_gdsf_score(tmp_path):
+    """The cheap-to-rebuild entries go first: an expensive translation
+    survives a GC that evicts many cheap ones."""
+    store = DiskStore(tmp_path, max_bytes=8_000)
+    exp_key = ("pallas", "exp", 0, 0)
+    store.save(exp_key, "interp-plan", _blob(0), cost_ms=5000.0)
+    for i in range(30):
+        store.save(("interp", f"cheap{i}", 0, 0), "interp-plan",
+                   _blob(i), cost_ms=0.01)
+    assert store.load(exp_key) is not None, \
+        "GC evicted the expensive entry while cheap ones existed"
+    assert store.total_bytes() <= 8_000
+
+
+@pytest.mark.fast
+def test_diskstore_bound_from_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("HETGPU_CACHE_MAX_BYTES", "12345")
+    assert DiskStore(tmp_path).max_bytes == 12345
+    monkeypatch.delenv("HETGPU_CACHE_MAX_BYTES")
+    assert DiskStore(tmp_path).max_bytes == 0  # unbounded default
+
+
+@pytest.mark.fast
+def test_diskstore_gc_explicit_and_unbounded_default(tmp_path):
+    store = DiskStore(tmp_path)  # unbounded: saves never trigger gc
+    for i in range(10):
+        store.save(("interp", f"fp{i}", 0, 0), "interp-plan", _blob(i))
+    assert store.entry_count() == 10
+    assert store.gc() == 0  # no bound, explicit gc is a no-op
+    assert store.gc(limit=4_000) > 0  # explicit limit evicts
+    assert store.total_bytes() <= 4_000
+
+
+def test_bounded_store_still_serves_the_working_set(tmp_path):
+    """A launch against a tightly bounded store stays correct (worst case
+    it re-translates what GC evicted), and the store honours the bound."""
+    args = _vadd_args()
+    store = DiskStore(tmp_path, max_bytes=4096)
+    s = _vadd_session("interp", store)
+    s.launch("vadd", grid=4, block=32, args=dict(args))
+    assert store.total_bytes() <= 4096
+    out = s._streams[0][-1].engine.result("C")
+    ref = _vadd_session("interp", None)
+    ref.launch("vadd", grid=4, block=32, args=dict(args))
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.asarray(ref._streams[0][-1].engine.result("C")))
+
+
+# ---------------------------------------------------------------------------
 # acceptance: cold vs warm benchmark ratio
 # ---------------------------------------------------------------------------
 

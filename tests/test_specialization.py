@@ -1,0 +1,448 @@
+"""Launch-time specialization + alias-aware memory motion tests.
+
+Covers the specialization subsystem end to end: policy decisions
+(``HETGPU_SPECIALIZE`` modes, per-program budget with generic fallback),
+cache-key properties (same scalars → warm hit; different scalars →
+distinct entries; specialized and generic entries coexist), persistence
+(cross-instance DiskStore restore of a specialized artifact), snapshots
+(the spec key rides ``to_bytes``/``from_bytes`` and a mid-kernel
+checkpoint+migrate of a specialized program restores bit-identical), and
+the acceptance bar on the dynamic-trip suite kernels (executed-op
+reduction > 0, ≥ 15 % interp step cut, bit-identical outputs).  Plus unit
+tests for the affine may-alias analysis and the
+``hoist_invariant_loads`` pass it gates.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (DiskStore, Engine, HetSession, OPT_MAX, Snapshot,
+                        TranslationCache, get_backend, get_specialized,
+                        migrate, optimize)
+from repro.core import hetir as ir
+from repro.core import kernels_suite as suite
+from repro.core.alias import AffineIndex, affine_env, may_alias
+from repro.core.hetir import Builder, Ptr, Scalar
+from repro.core.passes import hoist_invariant_loads
+
+RNG = np.random.default_rng(11)
+
+
+def _fir_args(taps=4, n=64):
+    return {"A": RNG.normal(size=n).astype(np.float32),
+            "W": RNG.normal(size=max(taps, 1)).astype(np.float32),
+            "Out": np.zeros(n, np.float32), "taps": taps}
+
+
+def _matmul_args(M=4, K=32, N=16, TK=8):
+    return {"A": RNG.normal(size=M * K).astype(np.float32),
+            "B": RNG.normal(size=K * N).astype(np.float32),
+            "C": np.zeros(M * N, np.float32),
+            "K": K, "N": N, "ktiles": K // TK, "tk": TK}
+
+
+def _run(prog, backend, grid, block, args, specialize=None, cache=None):
+    eng = Engine(prog, get_backend(backend, cache=cache), grid, block,
+                 dict(args), opt_level=OPT_MAX, specialize=specialize)
+    assert eng.run()
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# policy
+# ---------------------------------------------------------------------------
+
+
+def test_auto_policy_specializes_dynamic_trip_programs():
+    prog, _ = suite.dyn_fir()
+    eng = _run(prog, "interp", 2, 32, _fir_args())
+    assert eng.spec_key == (("taps", 4),)
+    assert eng.opt_stats.per_pass.get("bind_launch_scalars", 0) >= 1
+    assert eng.opt_stats.spec_key == eng.spec_key
+
+
+def test_auto_policy_leaves_static_programs_generic():
+    """vadd has no dynamic-trip loop: auto must not mint a variant (its
+    generic translations stay shared across all scalar values)."""
+    prog, _ = suite.vadd()
+    eng = _run(prog, "interp", 2, 32,
+               {"A": np.zeros(64, np.float32), "B": np.zeros(64, np.float32),
+                "C": np.zeros(64, np.float32), "n": 64})
+    assert eng.spec_key == ()
+
+
+def test_policy_off_falls_back_to_generic(monkeypatch):
+    monkeypatch.setenv("HETGPU_SPECIALIZE", "off")
+    prog, _ = suite.dyn_fir()
+    eng = _run(prog, "interp", 2, 32, _fir_args())
+    assert eng.spec_key == ()
+    assert eng.opt_stats.per_pass.get("bind_launch_scalars", 0) == 0
+    # the generic variant is shared: a second launch reuses the memoized
+    # optimized program object (and hence its cache keys)
+    eng2 = _run(prog, "interp", 2, 32, _fir_args(taps=3))
+    assert eng2.program is eng.program
+
+
+def test_explicit_override_beats_env(monkeypatch):
+    monkeypatch.setenv("HETGPU_SPECIALIZE", "off")
+    prog, _ = suite.dyn_fir()
+    eng = _run(prog, "interp", 2, 32, _fir_args(), specialize=True)
+    assert eng.spec_key != ()
+    monkeypatch.setenv("HETGPU_SPECIALIZE", "all")
+    prog2, _ = suite.dyn_fir()
+    eng2 = _run(prog2, "interp", 2, 32, _fir_args(), specialize=False)
+    assert eng2.spec_key == ()
+
+
+def test_budget_exhaustion_falls_back_to_generic(monkeypatch):
+    monkeypatch.setenv("HETGPU_SPECIALIZE_BUDGET", "2")
+    prog, _ = suite.dyn_fir()
+    keys = []
+    for taps in (1, 2, 3, 4):
+        eng = _run(prog, "interp", 2, 32, _fir_args(taps=taps))
+        keys.append(eng.spec_key)
+    assert keys[0] != () and keys[1] != ()
+    assert keys[2] == () and keys[3] == (), \
+        "budget exceeded: launches must fall back to the generic variant"
+    # an admitted binding keeps specializing (warm variants stay warm)
+    eng = _run(prog, "interp", 2, 32, _fir_args(taps=1))
+    assert eng.spec_key == keys[0]
+    # an explicit per-launch demand bypasses the budget (the budget
+    # polices the ambient policy, not deliberate requests)
+    eng = _run(prog, "interp", 2, 32, _fir_args(taps=9), specialize=True)
+    assert eng.spec_key == (("taps", 9),)
+
+
+def test_warmup_with_synthesized_args_stays_generic(tmp_path):
+    """warmup() without example args must not specialize on its made-up
+    unit scalars: that would warm a variant no real launch asks for and
+    burn a budget slot.  The generic entries it warms instead are shared;
+    a real specialized launch afterwards translates only its own body."""
+    prog, _ = suite.dyn_fir()
+    s = HetSession("interp", specialize=True,
+                   cache=TranslationCache(store=DiskStore(tmp_path)))
+    rep = s.warmup([prog], grids=((2, 32),))
+    assert rep["errors"] == 0
+    assert prog.__dict__.get("_spec_variants", {}) == {}, \
+        "synthesized warmup consumed a specialization budget slot"
+    assert s.stats.get("specialized_launches", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# cache-key properties
+# ---------------------------------------------------------------------------
+
+
+def test_same_scalars_hit_the_specialized_entries():
+    prog, _ = suite.dyn_fir()
+    cache = TranslationCache()
+    args = _fir_args()
+    _run(prog, "interp", 2, 32, args, cache=cache)
+    translated = cache.stats()["translated"]
+    assert translated >= 1
+    _run(prog, "interp", 2, 32, args, cache=cache)
+    st = cache.stats()
+    assert st["translated"] == translated, "relaunch re-translated"
+    assert st["hits"] >= 1
+
+
+def test_different_scalars_get_distinct_entries():
+    prog, _ = suite.dyn_fir()
+    cache = TranslationCache()
+    e3 = _run(prog, "interp", 2, 32, _fir_args(taps=3), cache=cache)
+    n3 = cache.size("interp")
+    e4 = _run(prog, "interp", 2, 32, _fir_args(taps=4), cache=cache)
+    assert e3.spec_key != e4.spec_key
+    assert cache.size("interp") > n3, \
+        "a different binding must translate its own entries"
+    assert cache.stats()["translated"] >= 2
+
+
+def test_generic_and_specialized_entries_coexist():
+    prog, _ = suite.dyn_fir()
+    cache = TranslationCache()
+    args = _fir_args()
+    eg = _run(prog, "interp", 2, 32, args, specialize=False, cache=cache)
+    n_generic = cache.size("interp")
+    es = _run(prog, "interp", 2, 32, args, specialize=True, cache=cache)
+    assert eg.spec_key == () and es.spec_key != ()
+    assert cache.size("interp") > n_generic
+    np.testing.assert_array_equal(eg.result("Out"), es.result("Out"))
+
+
+def test_cross_instance_diskstore_restore_of_specialized_artifact(
+        tmp_path):
+    """A specialized translation persists and revives across 'process'
+    boundaries exactly like a generic one (same scalars → warm disk hit,
+    zero fresh translations, bit-identical output)."""
+    prog, _ = suite.dyn_fir()
+    args = _fir_args()
+    c1 = TranslationCache(store=DiskStore(tmp_path))
+    e1 = _run(prog, "interp", 2, 32, args, specialize=True, cache=c1)
+    assert e1.spec_key != ()
+    assert c1.stats()["translated"] >= 1
+
+    prog2, _ = suite.dyn_fir()  # rebuilt program: content-addressed keys
+    c2 = TranslationCache(store=DiskStore(tmp_path))
+    e2 = _run(prog2, "interp", 2, 32, args, specialize=True, cache=c2)
+    st = c2.stats()
+    assert st["translated"] == 0, \
+        "specialized relaunch must restore from disk, not re-translate"
+    assert st["restored"] >= 1
+    np.testing.assert_array_equal(e1.result("Out"), e2.result("Out"))
+
+
+# ---------------------------------------------------------------------------
+# snapshots and migration
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_carries_spec_key_through_wire_format():
+    prog, _ = suite.dyn_fir()
+    eng = _run(prog, "interp", 2, 32, _fir_args())
+    snap = eng.snapshot()
+    assert snap.spec_key == eng.spec_key
+    back = Snapshot.from_bytes(snap.to_bytes())
+    assert back.spec_key == snap.spec_key
+
+
+@pytest.mark.parametrize("src,dst", [("vectorized", "interp"),
+                                     ("interp", "vectorized")])
+def test_specialized_checkpoint_migrate_bit_identical(src, dst, tmp_path):
+    """Acceptance: a mid-kernel checkpoint of a *specialized* dyn_matmul
+    (inner dynamic-trip loop unrolled under the bound scalars) migrates to
+    the other backend and finishes bit-identical to an uninterrupted
+    specialized run AND to the unspecialized run."""
+    args = _matmul_args()
+    prog, _ = suite.dyn_matmul()
+
+    ref_gen = _run(prog, dst, 4, 16, args, specialize=False,
+                   cache=TranslationCache())
+    ref_spec = _run(prog, dst, 4, 16, args, specialize=True,
+                    cache=TranslationCache())
+    np.testing.assert_array_equal(ref_gen.result("C"), ref_spec.result("C"))
+
+    s_src = HetSession(src, opt_level=OPT_MAX, specialize=True,
+                       cache=TranslationCache(store=DiskStore(tmp_path)))
+    s_dst = HetSession(dst, opt_level=OPT_MAX, specialize=True,
+                       cache=TranslationCache(store=DiskStore(tmp_path)))
+    s_src.load_kernel(prog)
+    s_dst.load_kernel(prog)
+    rec = s_src.launch("dyn_matmul", grid=4, block=16, args=dict(args),
+                       blocking=False)
+    assert rec.engine.spec_key != ()
+    assert rec.engine.opt_stats.per_pass.get("unroll_loops", 0) >= 1, \
+        "the dynamic-trip inner loop must unroll under specialization"
+    assert not rec.engine.run(max_segments=3)  # pause mid-kernel
+    new = migrate(rec, s_src, s_dst, "dyn_matmul")
+    assert new.engine.spec_key == rec.engine.spec_key
+    s_dst.run_to_completion(new)
+    assert new.finished
+    np.testing.assert_array_equal(
+        np.asarray(new.engine.result("C")),
+        np.asarray(ref_spec.result("C")),
+        err_msg=f"{src}->{dst} migrated specialized run diverged")
+
+
+# ---------------------------------------------------------------------------
+# acceptance: executed-work reduction on the dynamic-trip kernels
+# ---------------------------------------------------------------------------
+
+
+def test_acceptance_specialization_cuts_executed_work():
+    """≥ 15 % interp step cut and dynamic ops_removed > 0 on both
+    dynamic-trip suite kernels, outputs bit-identical to generic."""
+    from benchmarks.bench_translation import run_specialization
+
+    rows = run_specialization()
+    assert len(rows) >= 2
+    for r in rows:
+        assert r["bit_identical"], r
+        assert r["ops_removed"] > 0, r
+        assert r["interp_step_cut"] >= 0.15, r
+        assert r["scalars_bound"] >= 1, r
+
+
+# ---------------------------------------------------------------------------
+# may-alias analysis
+# ---------------------------------------------------------------------------
+
+
+def _aff(terms, const):
+    return AffineIndex(tuple(sorted(terms.items())), const)
+
+
+@pytest.mark.fast
+def test_may_alias_rules():
+    gid2 = _aff({"gid": 2}, 0)
+    gid2p1 = _aff({"gid": 2}, 1)
+    gid2p2 = _aff({"gid": 2}, 2)
+    assert not may_alias(gid2, gid2p1)     # odd delta, stride 2: disjoint
+    assert may_alias(gid2, gid2p2)         # delta 2 divisible: thread t+1
+    assert may_alias(gid2, gid2)           # identical address
+    assert may_alias(_aff({"gid": 3}, 0), _aff({"gid": 3}, 1)), \
+        "odd coefficients give no pow2-gcd disjointness (wrap-safety)"
+    assert may_alias(gid2, _aff({"tid": 2}, 1))   # different base sets
+    assert may_alias(gid2, None) and may_alias(None, gid2)
+    # pure constants: absolute addresses
+    assert not may_alias(_aff({}, 3), _aff({}, 4))
+    assert may_alias(_aff({}, 3), _aff({}, 3))
+    # unstable base defeats cancellation
+    assert may_alias(gid2, gid2p1, stable=lambda n: n != "gid")
+
+
+@pytest.mark.fast
+def test_affine_env_builds_index_forms():
+    b = Builder("aff", [Ptr("A"), Ptr("Out")])
+    i = b.global_id(0)
+    j = i * b.const(4) + b.const(3)      # 4*gid + 3
+    k = (j - i) << b.const(1)            # (3*gid + 3) * 2
+    b.store("Out", k, b.load("A", j))
+    prog = b.done()
+    env = affine_env(prog.body)
+    gid = prog.body[0].dest.name
+    assert env[j.reg.name] == _aff({gid: 4}, 3)
+    assert env[k.reg.name] == _aff({gid: 6}, 6)
+
+
+# ---------------------------------------------------------------------------
+# hoist_invariant_loads unit tests (pass invoked directly)
+# ---------------------------------------------------------------------------
+
+
+def _first_loop(body):
+    return next(s for s in body if isinstance(s, ir.Loop))
+
+
+def _loop_opcodes(body):
+    return [s.opcode for s in _first_loop(body).body
+            if isinstance(s, ir.Op)]
+
+
+@pytest.mark.fast
+def test_hoists_invariant_load_with_distinct_buffer_store():
+    b = Builder("h1", [Ptr("A"), Ptr("Out")])
+    i = b.global_id(0)
+    c = b.const(0)
+    with b.loop(20) as j:                 # trip > unroll budget
+        v = b.load("A", c)                # invariant; stores go to Out
+        b.store("Out", (i + j) % b.const(64), v)
+    prog = b.done()
+    body, n = hoist_invariant_loads(list(prog.body), prog)
+    assert n == 1
+    assert ir.LD_GLOBAL not in _loop_opcodes(body)
+    # the load now sits before the loop
+    pre = [s.opcode for s in body if isinstance(s, ir.Op)]
+    assert ir.LD_GLOBAL in pre
+
+
+@pytest.mark.fast
+def test_hoist_allowed_when_same_buffer_store_provably_disjoint():
+    """Load A[2*gid] vs store A[2*gid+1]: same base terms, odd delta under
+    stride 2 — disjoint for every thread pair, so the hoist is legal."""
+    b = Builder("h2", [Ptr("A"), Ptr("Out")])
+    i = b.global_id(0)
+    even = i * b.const(2)
+    odd = i * b.const(2) + b.const(1)
+    with b.loop(20):
+        v = b.load("A", even)
+        b.store("A", odd, v + b.const(1.0, ir.F32))
+    prog = b.done()
+    _, n = hoist_invariant_loads(list(prog.body), prog)
+    assert n == 1
+
+
+@pytest.mark.fast
+def test_hoist_blocked_by_may_aliasing_store():
+    """persistent_counter's shape: LD State[i] … ST State[i] in the loop —
+    must-alias, the load must stay put."""
+    b = Builder("h3", [Ptr("S")])
+    i = b.global_id(0)
+    with b.loop(20):
+        v = b.load("S", i)
+        b.store("S", i, v + b.const(1.0, ir.F32))
+    prog = b.done()
+    _, n = hoist_invariant_loads(list(prog.body), prog)
+    assert n == 0
+
+
+@pytest.mark.fast
+def test_hoist_blocked_by_loop_varying_store_index():
+    """Store index involves the loop variable: its base is unstable across
+    iterations, so no disjointness argument exists — blocked."""
+    b = Builder("h4", [Ptr("A")])
+    i = b.global_id(0)
+    c = b.const(0)
+    with b.loop(20) as j:
+        v = b.load("A", c)
+        b.store("A", (i + j) % b.const(64), v)
+    prog = b.done()
+    _, n = hoist_invariant_loads(list(prog.body), prog)
+    assert n == 0
+
+
+@pytest.mark.fast
+def test_hoist_requires_static_positive_trip():
+    for count in ("n", 0):
+        b = Builder("h5", [Ptr("A"), Ptr("Out"), Scalar("n")])
+        c = b.const(0)
+        with b.loop(count) as j:
+            v = b.load("A", c)
+            b.store("Out", j % b.const(64), v)
+        prog = b.done()
+        _, n = hoist_invariant_loads(list(prog.body), prog)
+        assert n == 0, f"hoisted out of a trip={count!r} loop"
+
+
+@pytest.mark.fast
+def test_hoist_skips_predicated_loads():
+    b = Builder("h6", [Ptr("A"), Ptr("Out")])
+    i = b.global_id(0)
+    c = b.const(0)
+    with b.loop(20) as j:
+        with b.when(i < b.const(4)):
+            v = b.load("A", c)
+            b.store("Out", (i * b.const(2) + j * b.const(8))
+                    % b.const(64), v)
+    prog = b.done()
+    _, n = hoist_invariant_loads(list(prog.body), prog)
+    assert n == 0
+
+
+@pytest.mark.fast
+def test_shared_store_blocks_shared_load_hoist():
+    b = Builder("h7", [Ptr("A"), Ptr("Out")], shared_size=8)
+    t = b.thread_id()
+    c = b.const(0)
+    with b.loop(20):
+        v = b.load_shared(c)
+        b.store_shared(t % b.const(8), v + b.const(1.0, ir.F32))
+        b.store("Out", t % b.const(8), v)
+    prog = b.done()
+    _, n = hoist_invariant_loads(list(prog.body), prog)
+    assert n == 0
+
+
+@pytest.mark.fast
+def test_global_store_does_not_block_shared_load_hoist():
+    """Different memory spaces never alias."""
+    b = Builder("h8", [Ptr("A"), Ptr("Out")], shared_size=8)
+    i = b.global_id(0)
+    c = b.const(0)
+    with b.loop(20) as j:
+        v = b.load_shared(c)
+        b.store("Out", (i + j * b.const(2)) % b.const(64), v)
+    prog = b.done()
+    _, n = hoist_invariant_loads(list(prog.body), prog)
+    assert n == 1
+
+
+def test_dyn_fir_hoists_gain_load_only_under_specialization():
+    """End to end: generic dyn_fir (dynamic trip) never hoists the W[0]
+    load; binding taps makes the trip static and the alias analysis clears
+    the hoist (stores go to Out, a distinct buffer)."""
+    prog, _ = suite.dyn_fir()
+    _, gstats = optimize(prog, OPT_MAX)
+    assert gstats.per_pass.get("hoist_invariant_loads", 0) == 0
+    # taps=12 > unroll budget: the loop survives, minus the gain load
+    _, sstats = get_specialized(prog, OPT_MAX, (("taps", 12),))
+    assert sstats.per_pass.get("hoist_invariant_loads", 0) >= 1

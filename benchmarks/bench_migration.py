@@ -61,6 +61,41 @@ def run() -> list:
                  "downtime_ms": round(total_down, 2),
                  "baseline_run_ms": round(baseline_ms, 2)})
 
+    # ---- (a2) driver-API: migrate an in-flight *async* launch while a
+    # second stream keeps serving — the paper's migration-under-load shape
+    prog, oracle = suite.persistent_counter()
+    init_m = rng.normal(size=64).astype(np.float32)
+    init_s = rng.normal(size=64).astype(np.float32)
+    s_src, s_dst = HetSession("vectorized"), HetSession("pallas")
+    counter = s_src.load(prog).function()
+    s_dst.load(prog)
+    moving = s_src.alloc(64).copy_from_host(init_m)
+    staying = s_src.alloc(64).copy_from_host(init_s)
+    st_mig, st_bg = s_src.stream(), s_src.stream()
+    rec = counter.launch_async(2, 32, {"State": moving, "iters": 8},
+                               stream=st_mig)
+    counter.launch_async(2, 32, {"State": staying, "iters": 8},
+                         stream=st_bg)
+    s_src.step(3)                       # both in flight, interleaved
+    t0 = time.perf_counter()
+    new = migrate(rec, s_src, s_dst, "persistent_counter")
+    downtime = (time.perf_counter() - t0) * 1e3
+    s_src.synchronize()                 # background stream finishes on src
+    s_dst.synchronize()                 # migrated launch finishes on dst
+    ok = np.allclose(
+        new.buffer("State").copy_to_host(),
+        oracle({"State": init_m.copy(), "iters": 8})["State"],
+        atol=1e-4) and np.allclose(
+        staying.copy_to_host(),
+        oracle({"State": init_s.copy(), "iters": 8})["State"],
+        atol=1e-4)
+    rows.append({"bench": "migration", "case": "async_under_load",
+                 "correct": bool(ok),
+                 "downtime_ms": round(downtime, 2),
+                 "payload_kb": round(
+                     s_dst.stats["last_migration"]["payload_bytes"] / 1024,
+                     1)})
+
     # ---- (b) training-job migration (topology-neutral state) -------------
     import jax
     from repro import configs

@@ -13,45 +13,10 @@ import numpy as np
 from repro.core import Engine, get_backend
 from repro.core import kernels_suite as suite
 
-CASES = {
-    "vadd": (4, 32, lambda rng: {
-        "A": rng.normal(size=128).astype(np.float32),
-        "B": rng.normal(size=128).astype(np.float32),
-        "C": np.zeros(128, np.float32), "n": 128}, ["C"]),
-    "saxpy": (4, 32, lambda rng: {
-        "X": rng.normal(size=128).astype(np.float32),
-        "Y": rng.normal(size=128).astype(np.float32),
-        "n": 128, "a": 1.5}, ["Y"]),
-    "matmul_tiled": (8, 16, lambda rng: {
-        "A": rng.normal(size=(8, 16)).astype(np.float32).reshape(-1),
-        "B": rng.normal(size=(16, 16)).astype(np.float32).reshape(-1),
-        "C": np.zeros(128, np.float32), "K": 16, "N": 16, "ktiles": 2},
-        ["C"]),
-    "reduction": (4, 32, lambda rng: {
-        "A": rng.normal(size=128).astype(np.float32),
-        "Out": np.zeros(1, np.float32), "n": 128, "log2t": 5}, ["Out"]),
-    "inclusive_scan": (4, 32, lambda rng: {
-        "A": rng.normal(size=128).astype(np.float32),
-        "Out": np.zeros(128, np.float32),
-        "BlockSums": np.zeros(4, np.float32), "n": 128},
-        ["Out", "BlockSums"]),
-    "bitcount_vote": (4, 32, lambda rng: {
-        "A": rng.normal(size=128).astype(np.float32),
-        "Out": np.zeros(4, np.float32), "n": 128, "thresh": 0.0}, ["Out"]),
-    "montecarlo_pi": (2, 32, lambda rng: {
-        "Count": np.zeros(1, np.float32)}, ["Count"]),
-    "nn_layer": (4, 16, lambda rng: {
-        "W": rng.normal(size=(4, 32)).astype(np.float32).reshape(-1),
-        "X": rng.normal(size=32).astype(np.float32),
-        "Bias": rng.normal(size=4).astype(np.float32),
-        "Out": np.zeros(4, np.float32), "K": 32, "kchunks": 2}, ["Out"]),
-    "stencil_1d": (2, 32, lambda rng: {
-        "A": rng.normal(size=64).astype(np.float32),
-        "Out": np.zeros(64, np.float32), "n": 64}, ["Out"]),
-    "persistent_counter": (2, 32, lambda rng: {
-        "State": rng.normal(size=64).astype(np.float32), "iters": 4},
-        ["State"]),
-}
+# Canonical per-kernel example launches live next to the kernels
+# themselves (suite.EXAMPLES) — shared with the driver-API demo and
+# stream tests, so the portability matrix always covers the full suite.
+CASES = suite.EXAMPLES
 
 BACKENDS = ["interp", "vectorized", "pallas"]
 

@@ -1,0 +1,66 @@
+"""Stream-scheduler benchmark — the abstraction-layer cost of genuine
+asynchrony (paper §4.3: "a uniform abstraction of threads, memory, and
+synchronization" — here measured as what the cooperative round-robin
+segment scheduler charges on top of back-to-back blocking launches, and
+how well concurrent streams actually interleave)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import HetSession, TranslationCache
+from repro.core import kernels_suite as suite
+
+
+def _sessions_and_buffers(n_launches: int, iters: int):
+    s = HetSession("vectorized", cache=TranslationCache())
+    fn = s.load(suite.persistent_counter()[0]).function()
+    rng = np.random.default_rng(17)
+    bufs = [s.alloc(64).copy_from_host(
+        rng.normal(size=64).astype(np.float32)) for _ in range(n_launches)]
+    return s, fn, bufs, iters
+
+
+def run(n_streams: int = 4, iters: int = 8) -> list:
+    rows = []
+
+    # ---- serial: one blocking launch after another -----------------------
+    s, fn, bufs, _ = _sessions_and_buffers(n_streams, iters)
+    fn.launch(2, 32, {"State": bufs[0], "iters": iters})   # warm cache
+    t0 = time.perf_counter()
+    for buf in bufs:
+        fn.launch(2, 32, {"State": buf, "iters": iters})
+    serial_ms = (time.perf_counter() - t0) * 1e3
+
+    # ---- async: one launch per stream, round-robin interleaved -----------
+    s, fn, bufs, _ = _sessions_and_buffers(n_streams, iters)
+    fn.launch(2, 32, {"State": bufs[0], "iters": iters})   # warm cache
+    streams = [s.stream() for _ in range(n_streams)]
+    s.sched_trace.clear()
+    t0 = time.perf_counter()
+    for buf, st in zip(bufs, streams):
+        fn.launch_async(2, 32, {"State": buf, "iters": iters}, stream=st)
+    s.synchronize()
+    async_ms = (time.perf_counter() - t0) * 1e3
+
+    ids = [t["stream"] for t in s.sched_trace]
+    switches = sum(1 for a, b in zip(ids, ids[1:]) if a != b)
+    segs = len(ids)
+    rows.append({
+        "bench": "streams", "case": f"{n_streams}streams_x{iters}iters",
+        "serial_ms": round(serial_ms, 2),
+        "async_ms": round(async_ms, 2),
+        "scheduler_overhead": round(async_ms / max(serial_ms, 1e-9), 2),
+        "segments": segs,
+        "stream_switches": switches,
+        # 1.0 = perfect round-robin alternation, 0 = serial completion
+        "interleave_factor": round(switches / max(segs - 1, 1), 2),
+    })
+
+    # ---- per-segment scheduler cost --------------------------------------
+    rows.append({
+        "bench": "streams", "case": "per_segment",
+        "async_us_per_segment": round(async_ms * 1e3 / max(segs, 1), 1),
+    })
+    return rows

@@ -14,7 +14,7 @@ def _emit(rows) -> None:
 def main() -> None:
     from benchmarks import (bench_kernels, bench_migration,
                             bench_overhead, bench_portability,
-                            bench_translation, roofline)
+                            bench_streams, bench_translation, roofline)
 
     print("# hetGPU reproduction benchmarks (one per paper table)")
     print("# -- paper 6.1: portability matrix --")
@@ -31,6 +31,8 @@ def main() -> None:
     _emit(bench_translation.run_cold_warm())
     print("# -- paper 6.3: live migration downtime --")
     _emit(bench_migration.run())
+    print("# -- paper 4.3: stream scheduler (async overlap + overhead) --")
+    _emit(bench_streams.run())
     print("# -- kernel structural benchmarks --")
     _emit(bench_kernels.run())
     print("# -- roofline (from dry-run artifacts; see EXPERIMENTS.md) --")

@@ -28,22 +28,26 @@ def main():
         print(f"  {backend:12s} correct={ok}")
 
     # --- migrate mid-kernel ------------------------------------------------
+    # driver-style API: load -> Function, alloc -> DeviceBuffer (mutated
+    # in place), launch_async -> LaunchRecord on a Stream.  See
+    # examples/driver_api_demo.py and docs/API.md for the full surface.
     print("\nlive migration of a persistent kernel "
           "(vectorized -> pallas at iteration barrier):")
     prog2, oracle2 = suite.persistent_counter()
-    args2 = {"State": rng.normal(size=64).astype(np.float32), "iters": 6}
+    init = rng.normal(size=64).astype(np.float32)
     src, dst = HetSession("vectorized"), HetSession("pallas")
-    src.load_kernel(prog2)
-    dst.load_kernel(prog2)
-    rec = src.launch("persistent_counter", grid=2, block=32,
-                     args=dict(args2), blocking=False)
-    rec.engine.run(max_segments=3)          # pause mid-loop
+    counter = src.load(prog2).function()
+    dst.load(prog2)
+    state = src.alloc(64).copy_from_host(init)
+    rec = counter.launch_async(grid=2, block=32,
+                               args={"State": state, "iters": 6})
+    src.step(3)                             # drive 3 segments, pause mid-loop
     new = migrate(rec, src, dst, "persistent_counter")
-    dst.run_to_completion(new)
-    expect = oracle2(dict(args2))
+    dst.synchronize()
+    expect = oracle2({"State": init.copy(), "iters": 6})
     print("  migrated result correct:",
-          np.allclose(new.engine.result("State"), expect["State"],
-                      atol=1e-4))
+          np.allclose(new.buffer("State").copy_to_host(),
+                      expect["State"], atol=1e-4))
     print("  migration stats:", dst.stats["last_migration"])
 
 

@@ -11,11 +11,14 @@ from .engine import Engine
 from .passes import (DEFAULT_OPT_LEVEL, OPT_MAX, PipelineStats,
                      SpecializationPolicy, get_optimized, get_specialized,
                      optimize)
-from .runtime import HetSession, migrate
+from .runtime import (DeviceBuffer, Event, Function, HetSession,
+                      LaunchRecord, Module, ParamInfo, Stream, migrate)
 from .state import Snapshot
 
 __all__ = ["alias", "hetir", "BACKENDS", "get_backend", "Engine",
            "HetSession", "migrate", "Snapshot", "TranslationCache",
+           "Module", "Function", "DeviceBuffer", "Stream", "Event",
+           "LaunchRecord", "ParamInfo",
            "DiskStore", "global_cache", "register_reviver", "optimize",
            "get_optimized", "get_specialized", "SpecializationPolicy",
            "PipelineStats", "OPT_MAX", "DEFAULT_OPT_LEVEL"]

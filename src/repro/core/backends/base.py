@@ -39,6 +39,12 @@ class Launch:
     # program fingerprints already differ — the key stays self-describing
     # for store scans and debugging)
     spec_key: Tuple = ()
+    # stream-scheduler metadata, set by the session when the launch is
+    # enqueued/materialized.  Diagnostic only — NEVER part of a
+    # translation-cache key: a translated segment is stream-agnostic, and
+    # keying on these would shatter the shared cache per launch
+    stream_id: Optional[int] = None
+    launch_seq: Optional[int] = None
 
 
 @dataclass

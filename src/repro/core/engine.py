@@ -103,6 +103,11 @@ class Engine:
         # for an engine, and segment-level loops re-execute their nodes.
         self.executed_ops = 0
         self._node_sched: Dict[int, int] = {}
+        # DeviceBuffer identity (runtime.py object model): param name ->
+        # the uid of the buffer handle bound at launch (None for raw host
+        # arrays).  Rides in every snapshot so restore/migration can
+        # re-bind the same live buffer — identity survives checkpoints.
+        self.buffer_uids: Dict[str, Optional[str]] = {}
 
         # registers that any segment reads — everything else is dead between
         # segments and gets pruned from state (the paper's "only saving live
@@ -121,7 +126,13 @@ class Engine:
         for p in program.buffers():
             if p.name not in args:
                 raise ValueError(f"missing buffer argument {p.name}")
-            buf = np.asarray(args[p.name], dtype=ir.np_dtype(p.dtype))
+            val = args[p.name]
+            # a runtime.DeviceBuffer handle (duck-typed — runtime imports
+            # this module, not the reverse): unwrap and record its uid
+            if hasattr(val, "uid") and hasattr(val, "data"):
+                self.buffer_uids[p.name] = val.uid
+                val = val.data
+            buf = np.asarray(val, dtype=ir.np_dtype(p.dtype))
             if buf.ndim != 1:
                 raise ValueError(f"buffer {p.name} must be 1-D")
             globals_[p.name] = buf.copy()
@@ -217,6 +228,7 @@ class Engine:
                       for k, v in self.state.globals_.items()},
             scalars=dict(self.launch.scalars),
             spec_key=self.spec_key,
+            buffer_uids=dict(self.buffer_uids),
         )
 
     @classmethod
@@ -235,6 +247,7 @@ class Engine:
                   args={}, opt_level=snap.opt_level, _from_snapshot=True,
                   _spec_key=tuple(snap.spec_key))
         eng.launch.scalars = dict(snap.scalars)
+        eng.buffer_uids = dict(snap.buffer_uids)
         eng.node_idx = snap.node_idx
         eng.loop_counters = dict(snap.loop_counters)
         eng.state = HostState(

@@ -52,6 +52,19 @@ def np_dtype(t: str) -> np.dtype:
     return np.dtype(_NP_DTYPES[t])
 
 
+def ir_dtype(dt) -> str:
+    """Normalize a dtype spec (hetIR code like ``"f32"``, numpy dtype, or
+    anything ``np.dtype`` accepts) to the hetIR dtype code."""
+    if isinstance(dt, str) and dt in _NP_DTYPES:
+        return dt
+    npdt = np.dtype(dt)
+    for code, npt in _NP_DTYPES.items():
+        if np.dtype(npt) == npdt:
+            return code
+    raise TypeError(f"no hetIR dtype for {dt!r} "
+                    f"(supported: {sorted(_NP_DTYPES)})")
+
+
 # --------------------------------------------------------------------------
 # Parameters (kernel arguments)
 # --------------------------------------------------------------------------

@@ -581,6 +581,92 @@ def dot_product() -> Tuple[ir.Program, Callable]:
     return prog, oracle
 
 
+# ---------------------------------------------------------------------------
+# Canonical example launches — one validated (grid, block, args, outputs)
+# geometry per suite kernel, shared by the portability benchmark, the
+# driver-API demo/tests, and anything else that wants to run the whole
+# suite without re-deriving per-kernel argument shapes.
+# ---------------------------------------------------------------------------
+
+#: name -> (grid, block, make_args(rng) -> host args dict, output buffers)
+EXAMPLES: Dict[str, Tuple[int, int, Callable, Tuple[str, ...]]] = {
+    "vadd": (4, 32, lambda rng: {
+        "A": rng.normal(size=128).astype(np.float32),
+        "B": rng.normal(size=128).astype(np.float32),
+        "C": np.zeros(128, np.float32), "n": 128}, ("C",)),
+    "saxpy": (4, 32, lambda rng: {
+        "X": rng.normal(size=128).astype(np.float32),
+        "Y": rng.normal(size=128).astype(np.float32),
+        "n": 128, "a": 1.5}, ("Y",)),
+    "matmul_tiled": (8, 16, lambda rng: {
+        "A": rng.normal(size=(8, 16)).astype(np.float32).reshape(-1),
+        "B": rng.normal(size=(16, 16)).astype(np.float32).reshape(-1),
+        "C": np.zeros(128, np.float32), "K": 16, "N": 16, "ktiles": 2},
+        ("C",)),
+    "reduction": (4, 32, lambda rng: {
+        "A": rng.normal(size=128).astype(np.float32),
+        "Out": np.zeros(1, np.float32), "n": 128, "log2t": 5}, ("Out",)),
+    "inclusive_scan": (4, 32, lambda rng: {
+        "A": rng.normal(size=128).astype(np.float32),
+        "Out": np.zeros(128, np.float32),
+        "BlockSums": np.zeros(4, np.float32), "n": 128},
+        ("Out", "BlockSums")),
+    "bitcount_vote": (4, 32, lambda rng: {
+        "A": rng.normal(size=128).astype(np.float32),
+        "Out": np.zeros(4, np.float32), "n": 128, "thresh": 0.0}, ("Out",)),
+    "montecarlo_pi": (2, 32, lambda rng: {
+        "Count": np.zeros(1, np.float32)}, ("Count",)),
+    "nn_layer": (4, 16, lambda rng: {
+        "W": rng.normal(size=(4, 32)).astype(np.float32).reshape(-1),
+        "X": rng.normal(size=32).astype(np.float32),
+        "Bias": rng.normal(size=4).astype(np.float32),
+        "Out": np.zeros(4, np.float32), "K": 32, "kchunks": 2}, ("Out",)),
+    "stencil_1d": (2, 32, lambda rng: {
+        "A": rng.normal(size=64).astype(np.float32),
+        "Out": np.zeros(64, np.float32), "n": 64}, ("Out",)),
+    "persistent_counter": (2, 32, lambda rng: {
+        "State": rng.normal(size=64).astype(np.float32), "iters": 4},
+        ("State",)),
+    "dot_product": (4, 32, lambda rng: {
+        "A": rng.normal(size=128).astype(np.float32),
+        "B": rng.normal(size=128).astype(np.float32),
+        "Out": np.zeros(1, np.float32), "n": 128}, ("Out",)),
+    "poly_eval": (4, 32, lambda rng: {
+        "X": rng.normal(size=128).astype(np.float32),
+        "Coef": rng.normal(size=7).astype(np.float32),
+        "Out": np.zeros(128, np.float32), "n": 128}, ("Out",)),
+    "swizzle_copy": (4, 32, lambda rng: {
+        "A": rng.normal(size=128).astype(np.float32),
+        "Out": np.zeros(128, np.float32)}, ("Out",)),
+    "tap_filter": (2, 32, lambda rng: {
+        "A": rng.normal(size=64).astype(np.float32),
+        "W": rng.normal(size=4).astype(np.float32),
+        "Tmp": np.zeros(64, np.float32),
+        "Out": np.zeros(64, np.float32)}, ("Out",)),
+    "dyn_matmul": (4, 16, lambda rng: {
+        "A": rng.normal(size=(4, 32)).astype(np.float32).reshape(-1),
+        "B": rng.normal(size=(32, 16)).astype(np.float32).reshape(-1),
+        "C": np.zeros(64, np.float32), "K": 32, "N": 16, "ktiles": 4,
+        "tk": 8}, ("C",)),
+    "dyn_fir": (2, 32, lambda rng: {
+        "A": rng.normal(size=64).astype(np.float32),
+        "W": rng.normal(size=8).astype(np.float32),
+        "Out": np.zeros(64, np.float32), "taps": 4}, ("Out",)),
+}
+
+
+def example_launch(name: str, rng=None
+                   ) -> Tuple["ir.Program", Callable, int, int,
+                              Dict[str, object], Tuple[str, ...]]:
+    """Build the canonical example launch for suite kernel ``name``:
+    ``(program, oracle, grid, block, host_args, output_buffer_names)``."""
+    if rng is None:
+        rng = np.random.default_rng(42)
+    grid, block, mk, outs = EXAMPLES[name]
+    prog, oracle = SUITE[name]()
+    return prog, oracle, grid, block, mk(rng), outs
+
+
 SUITE: Dict[str, Callable] = {
     "vadd": vadd,
     "saxpy": saxpy,

@@ -1,29 +1,58 @@
-"""HetSession — the hetGPU abstraction layer (paper §4.3).
+"""HetSession — the hetGPU abstraction layer as a driver-style API
+(paper §4.3).
 
-Presents the uniform device API the paper describes: buffer allocation,
-kernel launch with CUDA-like ``<<<grid, block>>>`` geometry, streams with
-in-order semantics, cooperative checkpoint (pause flag honoured at
-barriers), restore, and live migration between backends.  The "JIT
-modules" are entries in the shared :class:`~repro.core.cache.
-TranslationCache` (paper §4.2), whose hit/miss/restore/eviction counters
-this session surfaces via :meth:`HetSession.cache_stats` and ``stats``;
-kernels launch through the :mod:`~repro.core.passes` pipeline at the
-session's ``opt_level``.
+The paper promises "a uniform abstraction of threads, memory, and
+synchronization"; this module presents it the way the CUDA Driver / HIP
+APIs present theirs — as an *object model*, not a string-keyed grab-bag:
 
-Two cluster-lifetime amortization hooks sit here (paper §4.2 pays JIT cost
-once per kernel, not once per process): a session may be bound to a
-persistent :class:`~repro.core.cache.DiskStore` (``store=``) so its
-translations outlive the process, and :meth:`HetSession.warmup` ahead-of-
-time translates a kernel set, reporting what was restored from disk versus
-freshly translated.  :func:`migrate` preloads the destination session's
-cache from the source's store, so a live migration lands on a node whose
-runtime already holds the translated segments it is about to execute.
+* :meth:`HetSession.load` turns a hetIR "binary" into a :class:`Module`;
+  :meth:`Module.function` returns a :class:`Function` carrying typed
+  parameter metadata (buffer vs scalar, dtype).
+* :meth:`HetSession.alloc` returns a first-class :class:`DeviceBuffer`
+  handle.  Kernels mutate buffers **in place** — results land in the very
+  buffer object that was passed, with explicit
+  :meth:`DeviceBuffer.copy_to_host` / :meth:`~DeviceBuffer.copy_from_host`
+  transfers and no name-matching writeback.
+* :meth:`Function.launch_async` enqueues onto a real :class:`Stream` and
+  returns a :class:`LaunchRecord` future.  A cooperative round-robin
+  scheduler interleaves *segments* (the unit between barriers — see
+  :mod:`~repro.core.engine`) from concurrent streams, so two async
+  launches genuinely overlap at segment granularity, observable in
+  ``HetSession.sched_trace``.
+* :class:`Event` objects give cross-stream ordering
+  (:meth:`Stream.record_event` / :meth:`Stream.wait_event` / ``query`` /
+  ``synchronize``), with CUDA's semantics (waiting on a never-recorded
+  event is a no-op).
+* ``checkpoint`` / :func:`migrate` work on in-flight async launches at
+  their next barrier; :class:`DeviceBuffer` identity survives restore
+  within a session (a restored launch re-binds the live buffer by uid)
+  and migration carries uids so a chain of hops stays identity-stable.
+
+The "JIT modules" are entries in the shared :class:`~repro.core.cache.
+TranslationCache` (paper §4.2), surfaced via :meth:`HetSession.
+cache_stats` and ``stats`` (``translate_ms`` from cache counters,
+``launch_ms`` for end-to-end launch work — ``translation_ms`` is a
+deprecated alias of ``translate_ms``).  Two cluster-lifetime amortization
+hooks remain: a session bound to a persistent :class:`~repro.core.cache.
+DiskStore` (``store=``) and :meth:`HetSession.warmup` ahead-of-time
+translation; :func:`migrate` preloads the destination cache.
+
+The old string-keyed surface (``load_kernel`` / ``gpu_malloc`` /
+``memcpy_h2d`` / ``memcpy_d2h`` / ``launch`` / ``device_synchronize``)
+survives as a thin deprecated shim on top of the object model — each call
+raises :class:`DeprecationWarning` and is mapped in docs/API.md's
+old→new table.
 """
 from __future__ import annotations
 
+import itertools
 import time
-from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+import uuid
+import warnings
+from collections import deque
+from dataclasses import dataclass
+from typing import (Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple, Union)
 
 import numpy as np
 
@@ -35,20 +64,534 @@ from .engine import Engine
 from .passes import DEFAULT_OPT_LEVEL, OPT_MAX
 from .state import Snapshot
 
+# Buffer uids must stay unique across sessions *and* across processes
+# (snapshots carry them; restore re-binds by uid, and a false match would
+# silently alias two unrelated buffers), so they carry a per-process salt.
+_UID_SALT = uuid.uuid4().hex[:8]
+_UID_COUNTER = itertools.count()
+
+
+def _next_uid() -> str:
+    return f"b{_UID_SALT}-{next(_UID_COUNTER)}"
+
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"HetSession.{old} is deprecated; use {new} instead "
+        "(driver-style API — see docs/API.md for the old→new table)",
+        DeprecationWarning, stacklevel=3)
+
+
+# ---------------------------------------------------------------------------
+# Device memory
+# ---------------------------------------------------------------------------
+
+class DeviceBuffer:
+    """A typed handle to linear device memory (the driver-API analogue of a
+    ``CUdeviceptr``).  Buffers are 1-D — like driver allocations they are a
+    span of elements, and kernels index them linearly; ``copy_from_host``
+    accepts any host array of matching total size and flattens it.
+
+    Kernels mutate the buffer **in place**: after a launch that bound this
+    buffer completes, ``data`` holds the kernel's writes — same object,
+    no name matching, no implicit writeback.  Host transfers are explicit
+    (:meth:`copy_to_host` returns a defensive copy).
+    """
+
+    __slots__ = ("session", "uid", "dtype", "data", "freed")
+
+    def __init__(self, session: "HetSession", size: int,
+                 dtype: object = np.float32, uid: Optional[str] = None):
+        self.session = session
+        self.uid = uid if uid is not None else _next_uid()
+        # non-hetIR dtypes (f64, f16, ...) are allocatable for host-side
+        # staging — the legacy memcpy surface accepted them — but carry
+        # dtype=None and are rejected by the typed Function binding
+        try:
+            self.dtype: Optional[str] = ir.ir_dtype(dtype)
+            np_dt = ir.np_dtype(self.dtype)
+        except TypeError:
+            self.dtype = None
+            np_dt = np.dtype(dtype)
+        self.data = np.zeros(int(size), dtype=np_dt)
+        self.freed = False
+
+    # -- geometry ----------------------------------------------------------
+    @property
+    def size(self) -> int:
+        return self.data.size
+
+    @property
+    def nbytes(self) -> int:
+        return self.data.nbytes
+
+    @property
+    def np_dtype(self) -> np.dtype:
+        return self.data.dtype
+
+    # -- transfers ---------------------------------------------------------
+    def copy_from_host(self, host) -> "DeviceBuffer":
+        """Explicit H2D: copy ``host`` (any shape, matching total size)
+        into this buffer.  Returns ``self`` for chaining."""
+        self._check_alive()
+        arr = np.asarray(host)
+        if arr.size != self.size:
+            raise ValueError(
+                f"host array has {arr.size} elements, buffer holds "
+                f"{self.size}")
+        np.copyto(self.data, arr.reshape(-1), casting="same_kind")
+        return self
+
+    def copy_to_host(self) -> np.ndarray:
+        """Explicit D2H: a defensive host copy of the buffer contents."""
+        self._check_alive()
+        return self.data.copy()
+
+    def fill(self, value) -> "DeviceBuffer":
+        self._check_alive()
+        self.data.fill(value)
+        return self
+
+    def free(self) -> None:
+        """Release the handle (drops the session's uid registration; a
+        later restore can no longer re-bind this buffer)."""
+        self.session._buffers_by_uid.pop(self.uid, None)
+        self.freed = True
+
+    def _check_alive(self) -> None:
+        if self.freed:
+            raise ValueError(f"buffer {self.uid} has been freed")
+
+    def __repr__(self) -> str:
+        state = "freed" if self.freed else f"{self.size}x{self.dtype}"
+        return f"<DeviceBuffer {self.uid} {state}>"
+
+
+# ---------------------------------------------------------------------------
+# Events and streams
+# ---------------------------------------------------------------------------
+
+class Event:
+    """A stream ordering marker (CUDA-event semantics): ``record`` places
+    it in a stream's work queue, it *completes* when everything enqueued
+    before it on that stream has finished, and other streams can
+    :meth:`Stream.wait_event` on it.  Waiting on a never-recorded event is
+    a no-op, exactly as in the driver APIs."""
+
+    def __init__(self, session: Optional["HetSession"] = None):
+        self._session = session
+        self._recorded = False
+        self._complete = False
+        # bumped on every record: a re-recorded event must only complete
+        # at its *latest* record point — stale queue markers from earlier
+        # records retire without completing it.  Waits capture the
+        # generation current when the wait was issued (CUDA: a wait refers
+        # to the most recent record *at wait time*, unaffected by later
+        # re-records), and unblock once that record point is reached.
+        self._generation = 0
+        self._last_retired_generation = 0
+
+    def query(self) -> bool:
+        """Non-blocking completion check (retires any ripe queue markers
+        first; never executes kernel segments)."""
+        if self._session is not None:
+            self._session._settle()
+        return self._complete
+
+    def synchronize(self) -> bool:
+        """Drive the scheduler until this event completes.  Returns False
+        if progress stopped on a paused stream (cooperative checkpoint)."""
+        if not self._recorded:
+            raise RuntimeError("cannot synchronize an event that was "
+                               "never recorded")
+        return self._session._drain(until=lambda: self._complete)
+
 
 @dataclass
-class _KernelHandle:
-    program: ir.Program
+class _EventRecord:
+    """Queue marker: the recording point of an Event (at a specific
+    record generation — markers from superseded records are stale)."""
+    event: Event
+    generation: int
 
 
 @dataclass
+class _EventWait:
+    """Queue marker: this stream blocks until the record point ``event``
+    had when the wait was issued (``generation``) is reached."""
+    event: Event
+    generation: int
+
+    def satisfied(self) -> bool:
+        return self.event._last_retired_generation >= self.generation
+
+
+class Stream:
+    """An in-order work queue with genuinely asynchronous execution: the
+    session's round-robin scheduler interleaves segments from all runnable
+    streams.  Within a stream, a launch only *starts* (binds its buffers
+    and translates) once everything before it has completed — so same-
+    stream dataflow through a :class:`DeviceBuffer` behaves like CUDA
+    stream ordering."""
+
+    def __init__(self, session: "HetSession", sid: int):
+        self.session = session
+        self.sid = sid
+        self._q: deque = deque()
+        #: cooperative per-stream pause: the scheduler stops stepping this
+        #: stream's launches (they hold at their current barrier — the
+        #: checkpoint hook), while other streams keep running.
+        self.paused = False
+
+    # -- queue state -------------------------------------------------------
+    def query(self) -> bool:
+        """True iff all work enqueued on this stream has completed."""
+        self.session._settle()
+        return not self._q
+
+    def synchronize(self) -> bool:
+        """Drive the scheduler until this stream drains.  Returns False if
+        progress stopped on paused work."""
+        return self.session._drain(until=lambda: not self._q)
+
+    # -- pause (cooperative checkpoint) ------------------------------------
+    def pause(self) -> None:
+        self.paused = True
+
+    def resume(self) -> None:
+        self.paused = False
+
+    # -- events ------------------------------------------------------------
+    def record_event(self, event: Optional[Event] = None) -> Event:
+        ev = event if event is not None else Event(self.session)
+        ev._session = self.session
+        ev._recorded = True
+        ev._complete = False
+        ev._generation += 1             # invalidates earlier queue markers
+        self._q.append(_EventRecord(ev, ev._generation))
+        self.session._settle()          # empty queue => completes at once
+        return ev
+
+    def wait_event(self, event: Event) -> None:
+        """Block this stream's later work until ``event``'s *current*
+        record point is reached (CUDA semantics: a later re-record does
+        not move an already-issued wait).  A never-recorded or
+        already-complete event is a no-op."""
+        self.session._settle()
+        if not event._recorded \
+                or event._last_retired_generation >= event._generation:
+            return
+        self._q.append(_EventWait(event, event._generation))
+
+    def _enqueue(self, rec: "LaunchRecord") -> None:
+        self._q.append(rec)
+
+    def _describe_front(self) -> str:
+        if not self._q:
+            return "empty"
+        item = self._q[0]
+        if isinstance(item, _EventWait):
+            return "waiting on event"
+        if isinstance(item, _EventRecord):
+            return "event record"
+        return f"launch #{item.seq} ({item.program_name})"
+
+    def __repr__(self) -> str:
+        flags = " paused" if self.paused else ""
+        return f"<Stream {self.sid} depth={len(self._q)}{flags}>"
+
+
+# ---------------------------------------------------------------------------
+# Launches
+# ---------------------------------------------------------------------------
+
 class LaunchRecord:
-    engine: Engine
-    finished: bool = False
+    """Future for an enqueued kernel launch.
 
+    A record enqueued via :meth:`Function.launch_async` is *lazy*: its
+    :class:`~repro.core.engine.Engine` (which snapshots buffer contents
+    and translates) materializes only when the launch reaches the front of
+    its stream with all prior work done — that is what gives same-stream
+    dataflow CUDA semantics.  Accessing ``.engine`` earlier forces
+    materialization (used by ``checkpoint`` of a not-yet-started launch).
+    """
+
+    def __init__(self, session: "HetSession",
+                 function: Optional["Function"], grid: int, block: int,
+                 eng_args: Optional[Dict[str, object]],
+                 bindings: Dict[str, DeviceBuffer], stream: "Stream",
+                 engine: Optional[Engine] = None):
+        self.session = session
+        self.function = function
+        self.grid = grid
+        self.block = block
+        self._eng_args = eng_args
+        self.bindings = dict(bindings)
+        self.stream = stream
+        self.seq = next(session._seq)
+        self._engine = engine
+        self.finished = bool(engine is not None and engine.finished)
+        self.cancelled = False
+        if engine is not None:
+            engine.launch.stream_id = stream.sid
+            engine.launch.launch_seq = self.seq
+
+    # -- engine materialization -------------------------------------------
+    @property
+    def started(self) -> bool:
+        return self._engine is not None
+
+    @property
+    def engine(self) -> Engine:
+        if self._engine is None:
+            # binding early would snapshot buffer contents *before* prior
+            # same-stream work has written them — silently wrong data for
+            # this launch and for any checkpoint taken from it.  Only the
+            # stream-front launch may bind.
+            if self.stream._q and self.stream._q[0] is not self:
+                raise RuntimeError(
+                    f"launch #{self.seq} ({self.program_name}) has not "
+                    "started: it is queued behind other work on stream "
+                    f"{self.stream.sid}, and its buffers only bind once "
+                    "that work completes — drive the scheduler "
+                    "(session.step()/synchronize()) before checkpointing "
+                    "or migrating it")
+            self._materialize()
+        return self._engine
+
+    @property
+    def program_name(self) -> str:
+        if self._engine is not None:
+            return self._engine.program.name
+        return self.function.name
+
+    def _materialize(self) -> None:
+        s = self.session
+        eng = Engine(self.function.program, s.backend, self.grid,
+                     self.block, self._eng_args, opt_level=s.opt_level,
+                     specialize=s.specialize)
+        eng.launch.stream_id = self.stream.sid
+        eng.launch.launch_seq = self.seq
+        self._engine = eng
+        self._eng_args = None
+        s.stats["last_opt"] = eng.opt_stats.as_dict()
+        s.stats["last_spec_key"] = eng.spec_key
+        if eng.spec_key:
+            s.stats["specialized_launches"] = \
+                s.stats.get("specialized_launches", 0) + 1
+
+    # -- future surface ----------------------------------------------------
+    def done(self) -> bool:
+        return self.finished
+
+    def wait(self) -> bool:
+        """Drive the scheduler until this launch completes (other streams
+        make round-robin progress too — host-side sync, not serialization).
+        Returns False if blocked by a paused stream or the pause flag."""
+        ok = self.session._drain(
+            until=lambda: self.finished or self.cancelled)
+        return ok and self.finished
+
+    def buffer(self, name: str) -> DeviceBuffer:
+        """The DeviceBuffer bound to buffer parameter ``name``."""
+        return self.bindings[name]
+
+    def cancel(self) -> None:
+        """Withdraw the launch from its stream (a migrated-away launch
+        must not also run to completion on the source)."""
+        try:
+            self.stream._q.remove(self)
+        except ValueError:
+            pass
+        self.cancelled = True
+
+    def _finish(self) -> None:
+        """Completion hook: propagate kernel writes into the bound
+        DeviceBuffers *in place* (object identity preserved).  The typed
+        binding guarantees matching dtypes on the new surface; a legacy
+        buffer whose dtype differs from the kernel param's falls back to
+        the old rebind-the-array semantics."""
+        self.finished = True
+        for name, db in self.bindings.items():
+            if db.freed:
+                continue
+            res = np.asarray(self._engine.result(name))
+            if res.dtype == db.data.dtype:
+                np.copyto(db.data, res)
+            else:
+                db.data = res.copy()
+                db.dtype = ir.ir_dtype(res.dtype)
+
+    def __repr__(self) -> str:
+        state = ("finished" if self.finished else
+                 "cancelled" if self.cancelled else
+                 "running" if self.started else "queued")
+        return (f"<LaunchRecord #{self.seq} {self.program_name} "
+                f"stream={self.stream.sid} {state}>")
+
+
+# ---------------------------------------------------------------------------
+# Modules and functions
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamInfo:
+    """Typed parameter metadata a Function exposes (the driver-API
+    analogue of ``cuFuncGetParamInfo``)."""
+    name: str
+    kind: str       # "buffer" | "scalar"
+    dtype: str      # hetIR dtype code ("f32", "i32", ...)
+
+
+class Function:
+    """A launchable kernel entry point with typed parameter metadata.
+    Obtained from :meth:`Module.function`; launches go through
+    :meth:`launch` / :meth:`launch_async`."""
+
+    def __init__(self, session: "HetSession", program: ir.Program):
+        self.session = session
+        self.program = program
+        self.name = program.name
+        self.params: Tuple[ParamInfo, ...] = tuple(
+            ParamInfo(p.name,
+                      "buffer" if isinstance(p, ir.Ptr) else "scalar",
+                      p.dtype)
+            for p in program.params)
+
+    def param(self, name: str) -> ParamInfo:
+        for p in self.params:
+            if p.name == name:
+                return p
+        raise KeyError(f"{self.name} has no parameter {name!r}")
+
+    # -- launching ---------------------------------------------------------
+    def launch_async(self, grid: int, block: int,
+                     args: Dict[str, object],
+                     stream: Optional[Stream] = None) -> LaunchRecord:
+        """Enqueue onto ``stream`` (default stream if None) and return a
+        :class:`LaunchRecord` future immediately.  Buffer parameters must
+        be :class:`DeviceBuffer` handles of matching dtype; results appear
+        in those buffers in place once the launch completes."""
+        s = self.session
+        t0 = time.perf_counter()
+        stream = stream if stream is not None else s.default_stream
+        if stream.session is not s:
+            raise ValueError("stream belongs to a different session")
+        eng_args, bindings = self._bind(args)
+        rec = LaunchRecord(s, self, grid, block, eng_args, bindings,
+                           stream)
+        stream._enqueue(rec)
+        s.stats["launches"] += 1
+        s.stats["launch_ms"] += (time.perf_counter() - t0) * 1e3
+        return rec
+
+    def launch(self, grid: int, block: int, args: Dict[str, object],
+               stream: Optional[Stream] = None) -> LaunchRecord:
+        """Blocking launch: enqueue, then drive until this launch (and by
+        stream order, everything before it) completes."""
+        rec = self.launch_async(grid, block, args, stream=stream)
+        rec.wait()
+        return rec
+
+    def _bind(self, args: Dict[str, object]
+              ) -> Tuple[Dict[str, object], Dict[str, DeviceBuffer]]:
+        eng_args: Dict[str, object] = {}
+        bindings: Dict[str, DeviceBuffer] = {}
+        names = set()
+        for p in self.program.params:
+            names.add(p.name)
+            if p.name not in args:
+                raise ValueError(f"{self.name}: missing argument {p.name}")
+            v = args[p.name]
+            if isinstance(p, ir.Ptr):
+                if not isinstance(v, DeviceBuffer):
+                    raise TypeError(
+                        f"{self.name}: parameter {p.name!r} is a buffer — "
+                        f"pass a DeviceBuffer from session.alloc() (got "
+                        f"{type(v).__name__}); host arrays go through "
+                        "buf.copy_from_host()")
+                if v.session is not self.session:
+                    raise ValueError(
+                        f"{self.name}: buffer {p.name!r} belongs to a "
+                        "different session")
+                v._check_alive()
+                if v.dtype != p.dtype:
+                    raise TypeError(
+                        f"{self.name}: buffer {p.name!r} has dtype "
+                        f"{v.dtype}, parameter expects {p.dtype}")
+                eng_args[p.name] = v          # Engine unwraps the handle
+                bindings[p.name] = v
+            else:
+                if isinstance(v, DeviceBuffer):
+                    raise TypeError(
+                        f"{self.name}: parameter {p.name!r} is a scalar, "
+                        "got a DeviceBuffer")
+                eng_args[p.name] = v
+        unknown = set(args) - names
+        if unknown:
+            raise ValueError(
+                f"{self.name}: unknown argument(s) {sorted(unknown)}")
+        return eng_args, bindings
+
+    def __repr__(self) -> str:
+        sig = ", ".join(f"{p.name}:{p.kind}[{p.dtype}]"
+                        for p in self.params)
+        return f"<Function {self.name}({sig})>"
+
+
+class Module:
+    """A loaded hetIR "binary": one or more entry points, looked up by
+    name via :meth:`function`.  A single-entry module can itself be used
+    as the function (``module.launch_async(...)``) — the driver-API
+    convenience for the overwhelmingly common one-kernel case."""
+
+    def __init__(self, session: "HetSession",
+                 programs: Sequence[ir.Program]):
+        self.session = session
+        self._functions: Dict[str, Function] = {}
+        for prog in programs:
+            prog.validate()
+            self._functions[prog.name] = Function(session, prog)
+
+    def function(self, name: Optional[str] = None) -> Function:
+        if name is None:
+            if len(self._functions) != 1:
+                raise ValueError(
+                    "module has multiple entry points "
+                    f"({sorted(self._functions)}); name one")
+            return next(iter(self._functions.values()))
+        try:
+            return self._functions[name]
+        except KeyError:
+            raise KeyError(
+                f"module has no function {name!r} "
+                f"(entries: {sorted(self._functions)})") from None
+
+    def functions(self) -> Tuple[str, ...]:
+        return tuple(self._functions)
+
+    # single-entry convenience: the module acts as its only function
+    @property
+    def params(self) -> Tuple[ParamInfo, ...]:
+        return self.function().params
+
+    def launch_async(self, *a, **kw) -> LaunchRecord:
+        return self.function().launch_async(*a, **kw)
+
+    def launch(self, *a, **kw) -> LaunchRecord:
+        return self.function().launch(*a, **kw)
+
+    def __repr__(self) -> str:
+        return f"<Module entries={sorted(self._functions)}>"
+
+
+# ---------------------------------------------------------------------------
+# The session (device context)
+# ---------------------------------------------------------------------------
 
 class HetSession:
-    """One "device context" bound to a backend, with migration support."""
+    """One "device context" bound to a backend, with streams, events,
+    typed device memory, and migration support."""
 
     def __init__(self, backend: str = "vectorized",
                  opt_level: Optional[int] = None,
@@ -77,15 +620,39 @@ class HetSession:
         self.cache: TranslationCache = self.backend.cache
         self.opt_level = DEFAULT_OPT_LEVEL if opt_level is None \
             else max(0, min(int(opt_level), OPT_MAX))
-        self._kernels: Dict[str, _KernelHandle] = {}
-        self._buffers: Dict[str, np.ndarray] = {}
-        self._streams: Dict[int, List[LaunchRecord]] = {0: []}
+
+        # -- object model state -------------------------------------------
+        self._functions: Dict[str, Function] = {}
+        self._buffers_by_uid: Dict[str, DeviceBuffer] = {}
+        self._seq = itertools.count()
+        self.streams: List[Stream] = []
+        self.default_stream = self.stream()          # sid 0
+        #: scheduler trace: one entry per executed segment
+        #: {"stream", "kernel", "seq", "node_idx"} — the observable
+        #: interleaving (tests assert alternation on it)
+        self.sched_trace: List[Dict[str, object]] = []
         self.pause_flag = False  # the paper's cooperative pause flag
-        self.stats = {"launches": 0, "translation_ms": 0.0,
-                      "migrations": 0, "cache_hits": 0, "cache_misses": 0,
+
+        # -- legacy shim state --------------------------------------------
+        self._named: Dict[str, DeviceBuffer] = {}    # gpu_malloc names
+        self._named_shapes: Dict[str, Tuple[int, ...]] = {}  # host shapes
+        self._legacy_streams: Dict[int, Stream] = {0: self.default_stream}
+        # append-only per-legacy-stream launch history (old `_streams`
+        # shape: Dict[int, List[LaunchRecord]])
+        self._streams: Dict[int, List[LaunchRecord]] = {0: []}
+
+        self.stats = {"launches": 0, "launch_ms": 0.0, "translate_ms": 0.0,
+                      "translation_ms": 0.0,  # deprecated alias, see API.md
+                      "segments_executed": 0, "migrations": 0,
+                      "cache_hits": 0, "cache_misses": 0,
                       "cache_evictions": 0, "cache_restored": 0,
                       "cache_translated": 0}
+        # translate_ms is reported as this session's *delta* over the
+        # (possibly shared) cache's lifetime counter
+        self._translate_ms_base = float(
+            self.cache.stats().get("translate_ms", 0.0))
 
+    # -- cache stats -------------------------------------------------------
     def cache_stats(self) -> Dict[str, object]:
         """Shared translation-cache counters (paper §4.2 JIT cache)."""
         return self.cache.stats()
@@ -97,16 +664,156 @@ class HetSession:
         self.stats["cache_evictions"] = st["evictions"]
         self.stats["cache_restored"] = st["restored"]
         self.stats["cache_translated"] = st["translated"]
+        self.stats["translate_ms"] = (
+            float(st.get("translate_ms", 0.0)) - self._translate_ms_base)
+        # deprecated alias (one release): formerly mistimed the whole
+        # launch including execution; now mirrors translate_ms
+        self.stats["translation_ms"] = self.stats["translate_ms"]
 
-    # -- module loading ------------------------------------------------
-    def load_kernel(self, program: ir.Program) -> str:
-        """Register a hetIR "binary".  Translation happens lazily at first
-        launch (paper §4.2 Module Loading and JIT)."""
-        program.validate()
-        self._kernels[program.name] = _KernelHandle(program)
-        return program.name
+    # -- module loading ----------------------------------------------------
+    def load(self, program: Union[ir.Program, Sequence[ir.Program]]
+             ) -> Module:
+        """Load one hetIR program (or several) into a :class:`Module`.
+        Translation stays lazy, at first launch (paper §4.2 Module
+        Loading and JIT)."""
+        programs = [program] if isinstance(program, ir.Program) \
+            else list(program)
+        mod = Module(self, programs)
+        self._functions.update(mod._functions)
+        return mod
 
-    # -- cache warm-up ---------------------------------------------------
+    def function(self, name: str) -> Function:
+        """Look up a loaded entry point by name across all modules."""
+        try:
+            return self._functions[name]
+        except KeyError:
+            raise KeyError(f"no loaded kernel {name!r} "
+                           f"(loaded: {sorted(self._functions)})") from None
+
+    # -- device memory -----------------------------------------------------
+    def alloc(self, shape, dtype: object = np.float32) -> DeviceBuffer:
+        """Allocate a typed :class:`DeviceBuffer` (zero-initialized).
+        ``shape`` may be an int or a tuple — device memory is linear, so
+        multi-dim shapes are flattened to their total size."""
+        size = int(shape) if isinstance(shape, (int, np.integer)) \
+            else int(np.prod(shape))
+        db = DeviceBuffer(self, size, dtype)
+        self._buffers_by_uid[db.uid] = db
+        return db
+
+    # -- streams and events ------------------------------------------------
+    def stream(self) -> Stream:
+        """Create a new asynchronous stream."""
+        st = Stream(self, len(self.streams))
+        self.streams.append(st)
+        return st
+
+    def event(self) -> Event:
+        return Event(self)
+
+    # -- the cooperative round-robin scheduler -----------------------------
+    def _settle(self) -> None:
+        """Retire every ripe non-launch queue item (event records at queue
+        front, waits whose event completed) without executing segments."""
+        progressed = True
+        while progressed:
+            progressed = False
+            for st in self.streams:
+                while st._q:
+                    item = st._q[0]
+                    if isinstance(item, _EventRecord):
+                        # reaching a record point releases every wait
+                        # issued against it (or an earlier one); only the
+                        # *latest* record completes the event itself — a
+                        # superseded marker retires without doing so
+                        ev = item.event
+                        ev._last_retired_generation = max(
+                            ev._last_retired_generation, item.generation)
+                        if item.generation == ev._generation:
+                            ev._complete = True
+                        st._q.popleft()
+                        progressed = True
+                    elif isinstance(item, _EventWait):
+                        if item.satisfied():
+                            st._q.popleft()
+                            progressed = True
+                        else:
+                            break
+                    else:
+                        break
+
+    def step(self, passes: int = 1) -> bool:
+        """Public scheduler stepping: run up to ``passes`` round-robin
+        passes, each advancing every runnable stream by one *segment*
+        (the paper's barrier-to-barrier unit).  Returns True iff any
+        progress was made — the hook cooperative serving layers (and the
+        stream tests) drive."""
+        progressed = False
+        for _ in range(passes):
+            if not self._step():
+                break
+            progressed = True
+        return progressed
+
+    def _step(self) -> bool:
+        self._settle()
+        progressed = False
+        for st in list(self.streams):
+            if st.paused or self.pause_flag or not st._q:
+                continue
+            item = st._q[0]
+            if not isinstance(item, LaunchRecord):
+                continue        # blocked on an event wait
+            eng = item.engine   # lazy copy-in happens here, at start
+            finished = eng.run(max_segments=1)
+            self.sched_trace.append(
+                {"stream": st.sid, "kernel": eng.program.name,
+                 "seq": item.seq, "node_idx": eng.node_idx})
+            self.stats["segments_executed"] += 1
+            progressed = True
+            if finished:
+                st._q.popleft()
+                item._finish()
+        self._settle()
+        return progressed
+
+    def _drain(self, until: Optional[Callable[[], bool]] = None) -> bool:
+        """Drive the scheduler until ``until()`` holds (or, with no
+        condition, until every stream drains).  Returns False when
+        progress stops on cooperatively paused work (per-stream ``pause``
+        or the session ``pause_flag``); raises on a genuine event
+        deadlock."""
+        t0 = time.perf_counter()
+        try:
+            while True:
+                self._settle()
+                if until is not None and until():
+                    return True
+                pending = [st for st in self.streams if st._q]
+                if not pending:
+                    return True if until is None else bool(until())
+                if self._step():
+                    continue
+                # no progress: paused work holds the rest, or a deadlock
+                if self.pause_flag or any(st.paused for st in pending):
+                    return False
+                fronts = "; ".join(
+                    f"stream {st.sid}: {st._describe_front()}"
+                    for st in pending)
+                raise RuntimeError(
+                    "stream scheduler deadlock — queues are non-empty but "
+                    f"nothing is runnable ({fronts})")
+        finally:
+            self.stats["launch_ms"] += (time.perf_counter() - t0) * 1e3
+            self._sync_cache_stats()
+
+    def synchronize(self) -> bool:
+        """Drive *all* streams to completion (the old
+        ``device_synchronize`` only swept stream 0).  Returns False if
+        paused work remains."""
+        return self._drain()
+
+    # -- cache warm-up -----------------------------------------------------
     def warmup(self, programs: Iterable, grids: Sequence[Tuple[int, int]]
                = ((2, 32),)) -> Dict[str, object]:
         """Ahead-of-time translate a kernel set (paper §4.2: JIT cost is
@@ -165,78 +872,185 @@ class HetSession:
         self._sync_cache_stats()
         return report
 
-    # -- memory management ----------------------------------------------
-    def gpu_malloc(self, name: str, shape, dtype=np.float32) -> np.ndarray:
-        buf = np.zeros(shape, dtype=dtype)
-        self._buffers[name] = buf
-        return buf
-
-    def memcpy_h2d(self, name: str, host: np.ndarray) -> None:
-        self._buffers[name] = np.array(host, copy=True)
-
-    def memcpy_d2h(self, name: str) -> np.ndarray:
-        return self._buffers[name].copy()
-
-    # -- kernel launch ----------------------------------------------------
-    def launch(self, kernel: str, grid: int, block: int,
-               args: Dict[str, object], stream: int = 0,
-               blocking: bool = True) -> LaunchRecord:
-        handle = self._kernels[kernel]
-        merged = {}
-        for p in handle.program.params:
-            if p.name in args:
-                merged[p.name] = args[p.name]
-            elif isinstance(p, ir.Ptr) and p.name in self._buffers:
-                merged[p.name] = self._buffers[p.name]
-            else:
-                raise ValueError(f"missing argument {p.name}")
-        t0 = time.perf_counter()
-        eng = Engine(handle.program, self.backend, grid, block, merged,
-                     opt_level=self.opt_level, specialize=self.specialize)
-        rec = LaunchRecord(engine=eng)
-        self._streams.setdefault(stream, []).append(rec)
-        self.stats["launches"] += 1
-        self.stats["last_opt"] = eng.opt_stats.as_dict()
-        self.stats["last_spec_key"] = eng.spec_key
-        if eng.spec_key:
-            self.stats["specialized_launches"] = \
-                self.stats.get("specialized_launches", 0) + 1
-        if blocking:
-            rec.finished = eng.run(pause_flag=lambda: self.pause_flag)
-            self._writeback(handle.program, eng, args)
-        self.stats["translation_ms"] += (time.perf_counter() - t0) * 1e3
-        self._sync_cache_stats()
-        return rec
-
-    def _writeback(self, program: ir.Program, eng: Engine,
-                   args: Dict[str, object]) -> None:
-        """Propagate kernel writes back into session buffers."""
-        for p in program.buffers():
-            if p.name in self._buffers and p.name not in args:
-                self._buffers[p.name] = eng.result(p.name)
-
-    def device_synchronize(self, stream: int = 0) -> None:
-        for rec in self._streams.get(stream, []):
-            if not rec.finished:
-                rec.finished = rec.engine.run(
-                    pause_flag=lambda: self.pause_flag)
-
-    # -- checkpoint / restore / migration ---------------------------------
+    # -- checkpoint / restore / migration ----------------------------------
     def checkpoint(self, rec: LaunchRecord) -> bytes:
-        """Serialize a paused (or finished) launch — the migration payload."""
+        """Serialize a launch paused at a barrier (or finished) — the
+        migration payload.  Works on in-flight async launches: between
+        scheduler steps every launch sits at a barrier by construction."""
         return rec.engine.snapshot().to_bytes()
 
-    def restore(self, kernel: str, blob: bytes) -> LaunchRecord:
+    def restore(self, kernel: Union[str, Function], blob: bytes,
+                stream: Optional[Union[Stream, int]] = None
+                ) -> LaunchRecord:
+        """Re-instantiate a checkpoint onto a caller-chosen stream
+        (default stream if None; a legacy int names an old-style stream).
+
+        Buffer identity: each restored global re-binds the session's live
+        :class:`DeviceBuffer` with the snapshot's recorded uid when one
+        exists (same size/dtype) — a checkpoint/restore round-trip in one
+        session lands results in the *same* buffer objects.  Unknown uids
+        get fresh buffers that *adopt* the snapshot uid, so identity stays
+        stable across chained migrations."""
         snap = Snapshot.from_bytes(blob)
-        eng = Engine.resume(self._kernels[kernel].program, self.backend,
-                            snap)
-        rec = LaunchRecord(engine=eng, finished=eng.finished)
-        self._streams[0].append(rec)
+        fn = kernel if isinstance(kernel, Function) \
+            else self.function(kernel)
+        eng = Engine.resume(fn.program, self.backend, snap)
+        history_key: Optional[int] = None
+        if isinstance(stream, (int, np.integer)):
+            # legacy int stream: the history view below must use the
+            # caller's id, which need not equal the Stream's internal sid
+            history_key = int(stream)
+            st = self._legacy_stream(history_key)
+        elif stream is None:
+            st = self.default_stream
+        elif stream.session is not self:
+            raise ValueError("stream belongs to a different session")
+        else:
+            st = stream
+        bindings: Dict[str, DeviceBuffer] = {}
+        for name, arr in eng.state.globals_.items():
+            arr_np = np.asarray(arr)
+            uid = eng.buffer_uids.get(name)
+            db = self._buffers_by_uid.get(uid) if uid else None
+            if db is not None and (db.size != arr_np.size
+                                   or db.np_dtype != arr_np.dtype
+                                   or db.freed):
+                db = None
+            if db is None:
+                db = DeviceBuffer(self, arr_np.size, arr_np.dtype, uid=uid)
+                self._buffers_by_uid[db.uid] = db
+            # seed with checkpoint contents so host reads before
+            # completion observe the paused state
+            np.copyto(db.data, arr_np)
+            bindings[name] = db
+        rec = LaunchRecord(self, fn, snap.num_blocks, snap.block_size,
+                           None, bindings, st, engine=eng)
+        if eng.finished:
+            rec._finish()
+        else:
+            st._enqueue(rec)
+        self._streams.setdefault(
+            st.sid if history_key is None else history_key, []).append(rec)
         return rec
 
     def run_to_completion(self, rec: LaunchRecord) -> None:
-        rec.finished = rec.engine.run(pause_flag=lambda: self.pause_flag)
+        """Drive the scheduler until ``rec`` finishes (equivalent to
+        ``rec.wait()``; kept for the pre-driver-API callers)."""
+        rec.wait()
         self._sync_cache_stats()
+
+    # ======================================================================
+    # Deprecated string-keyed shim (old→new table in docs/API.md)
+    # ======================================================================
+    def load_kernel(self, program: ir.Program) -> str:
+        """Deprecated: use :meth:`load` (returns a :class:`Module`)."""
+        _deprecated("load_kernel(program)", "session.load(program)")
+        self.load(program)
+        return program.name
+
+    def gpu_malloc(self, name: str, shape, dtype=np.float32) -> np.ndarray:
+        """Deprecated: use :meth:`alloc` (returns a typed
+        :class:`DeviceBuffer` handle instead of registering a name).
+
+        The old surface preserved multi-dim shapes and accepted any numpy
+        dtype; the shim keeps both (the returned array is a shape-intact
+        *view* of the underlying linear buffer)."""
+        _deprecated("gpu_malloc(name, shape)", "session.alloc(shape, dtype)")
+        db = self.alloc(shape, dtype)
+        self._named[name] = db
+        self._named_shapes[name] = (int(shape),) \
+            if isinstance(shape, (int, np.integer)) \
+            else tuple(int(d) for d in shape)
+        return db.data.reshape(self._named_shapes[name])
+
+    def memcpy_h2d(self, name: str, host: np.ndarray) -> None:
+        """Deprecated: use :meth:`DeviceBuffer.copy_from_host`."""
+        _deprecated("memcpy_h2d(name, host)", "buffer.copy_from_host(host)")
+        host = np.asarray(host)
+        db = self._named.get(name)
+        if db is None or db.size != host.size or db.np_dtype != host.dtype:
+            # old memcpy_h2d rebound the name wholesale; emulate
+            db = self.alloc(host.size, host.dtype)
+            self._named[name] = db
+        self._named_shapes[name] = host.shape
+        db.copy_from_host(host)
+
+    def memcpy_d2h(self, name: str) -> np.ndarray:
+        """Deprecated: use :meth:`DeviceBuffer.copy_to_host`."""
+        _deprecated("memcpy_d2h(name)", "buffer.copy_to_host()")
+        out = self._named[name].copy_to_host()
+        shape = self._named_shapes.get(name)
+        return out.reshape(shape) if shape is not None else out
+
+    def _legacy_stream(self, sid: int) -> Stream:
+        st = self._legacy_streams.get(sid)
+        if st is None:
+            st = self.stream()
+            self._legacy_streams[sid] = st
+        return st
+
+    def launch(self, kernel: str, grid: int, block: int,
+               args: Dict[str, object], stream: int = 0,
+               blocking: bool = True) -> LaunchRecord:
+        """Deprecated: use :meth:`Function.launch` /
+        :meth:`Function.launch_async` with DeviceBuffer arguments.
+
+        Shim semantics (unchanged where safe, fixed where lossy): buffer
+        params resolve from explicit ``args`` first, then by name against
+        ``gpu_malloc`` buffers.  A resolved session buffer — including one
+        the caller passed *explicitly* (the old code silently dropped
+        those writes) — receives the kernel's writes in place.  A raw host
+        array passed explicitly keeps copy-in semantics and is never
+        mutated; read results via the record's engine."""
+        _deprecated("launch(kernel, ...)",
+                    "module.function(name).launch_async(...)")
+        fn = self.function(kernel)
+        eng_args: Dict[str, object] = {}
+        bindings: Dict[str, DeviceBuffer] = {}
+        for p in fn.program.params:
+            named = self._named.get(p.name) \
+                if isinstance(p, ir.Ptr) else None
+            if p.name in args:
+                v = args[p.name]
+                if isinstance(v, DeviceBuffer):
+                    eng_args[p.name] = v
+                    bindings[p.name] = v
+                elif named is not None and isinstance(v, np.ndarray) \
+                        and (v is named.data or v.base is named.data):
+                    # the async-writeback fix: an explicitly passed
+                    # session buffer (or a gpu_malloc-returned view of
+                    # it) is still a session buffer
+                    eng_args[p.name] = named
+                    bindings[p.name] = named
+                else:
+                    eng_args[p.name] = v
+            elif named is not None:
+                eng_args[p.name] = named
+                bindings[p.name] = named
+            else:
+                raise ValueError(f"missing argument {p.name}")
+        st = self._legacy_stream(stream)
+        t0 = time.perf_counter()
+        rec = LaunchRecord(self, fn, grid, block, eng_args, bindings, st)
+        rec._materialize()      # old surface bound eagerly; tests poke
+        st._enqueue(rec)        # rec.engine right after a non-blocking
+        self._streams.setdefault(stream, []).append(rec)  # legacy view
+        self.stats["launches"] += 1
+        self.stats["launch_ms"] += (time.perf_counter() - t0) * 1e3
+        if blocking:
+            rec.wait()
+        self._sync_cache_stats()
+        return rec
+
+    def device_synchronize(self, stream: int = 0) -> None:
+        """Deprecated: use :meth:`Stream.synchronize` (one stream) or
+        :meth:`HetSession.synchronize` (all streams).  Unlike the old
+        implementation this *completes* the results: kernel writes land in
+        the session buffers (the old path ran the engines but never wrote
+        back — non-blocking launches silently dropped their results)."""
+        _deprecated("device_synchronize(stream)",
+                    "stream.synchronize() / session.synchronize()")
+        self._legacy_stream(stream).synchronize()
 
 
 def _synthesize_args(prog: ir.Program, grid: int,
@@ -255,10 +1069,15 @@ def _synthesize_args(prog: ir.Program, grid: int,
 
 
 def migrate(rec: LaunchRecord, src: HetSession, dst: HetSession,
-            kernel: str) -> LaunchRecord:
+            kernel: Union[str, Function],
+            stream: Optional[Union[Stream, int]] = None) -> LaunchRecord:
     """Live-migrate a launch from one session/backend to another
-    (paper §6.3). Returns the resumed launch on ``dst``; timing stats are
-    recorded on both sessions.
+    (paper §6.3).  Works on in-flight *async* launches: the scheduler only
+    ever rests a launch at a barrier, so the checkpoint below is always
+    legal.  Returns the resumed launch on ``dst`` (landing on ``stream``,
+    default stream if None); the source record is cancelled — the moved
+    launch must not also finish on the source.  Timing stats are recorded
+    on both sessions.
 
     Before resuming, the destination's translation cache is preloaded from
     whichever persistent store is reachable (its own, else the source's):
@@ -271,9 +1090,12 @@ def migrate(rec: LaunchRecord, src: HetSession, dst: HetSession,
     identical specialized body from it (never re-consulting the policy),
     and the fingerprint used for the preload below is the *specialized*
     program's — so a mid-kernel checkpoint of a specialized kernel
-    restores bit-identical, against warm specialized translations."""
+    restores bit-identical, against warm specialized translations.
+    DeviceBuffer uids ride along too: the destination's restored buffers
+    adopt them, keeping buffer identity stable across chained hops."""
     t0 = time.perf_counter()
     blob = src.checkpoint(rec)  # capture at barrier
+    rec.cancel()
     t1 = time.perf_counter()
     # warm the destination from the persistent tier: the engine's program
     # is the *optimized* body, whose fingerprint is what cache keys carry
@@ -285,11 +1107,10 @@ def migrate(rec: LaunchRecord, src: HetSession, dst: HetSession,
         restored = dst.cache.preload(backend=dst.backend_name,
                                      fingerprint=fp, store=store)
     t2 = time.perf_counter()
-    new = dst.restore(kernel, blob)  # reload + reshard onto new device
+    new = dst.restore(kernel, blob, stream=stream)  # reload + reshard
     t3 = time.perf_counter()
     src.stats["migrations"] += 1
     dst.stats["migrations"] += 1
-    dst.stats.setdefault("last_migration", {})
     dst.stats["last_migration"] = {
         "checkpoint_ms": (t1 - t0) * 1e3,
         "warmup_ms": (t2 - t1) * 1e3,

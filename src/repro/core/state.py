@@ -58,6 +58,12 @@ class Snapshot:
     # a specialized program reconstructs the identical node list on the
     # destination backend
     spec_key: tuple = ()
+    # DeviceBuffer identity: buffer param name -> uid of the handle bound
+    # at launch (None for raw host arrays).  Restore re-binds the live
+    # buffer with a matching uid when one exists, so checkpoint/restore in
+    # one session lands results in the *same* DeviceBuffer objects, and a
+    # migration chain keeps stable buffer identity across hops
+    buffer_uids: Dict[str, Optional[str]] = field(default_factory=dict)
 
     # -- serialization ------------------------------------------------------
     def to_bytes(self) -> bytes:
@@ -79,6 +85,7 @@ class Snapshot:
                                    if isinstance(v, (float, np.floating))
                                    else int(v))]
                          for k, v in self.spec_key],
+            "buffer_uids": {k: v for k, v in self.buffer_uids.items()},
             "reg_names": sorted(self.regs),
             "global_names": sorted(self.globals_),
             "has_shared": self.shared is not None,
@@ -110,6 +117,7 @@ class Snapshot:
             node_idx=meta["node_idx"],
             opt_level=int(meta.get("opt_level", 0)),
             spec_key=tuple((k, v) for k, v in meta.get("spec_key", [])),
+            buffer_uids=dict(meta.get("buffer_uids", {})),
             loop_counters={int(k): v
                            for k, v in meta["loop_counters"].items()},
             regs=regs,

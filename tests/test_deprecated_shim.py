@@ -1,0 +1,159 @@
+"""The deprecated string-keyed shim: every old-surface call raises
+DeprecationWarning but stays functionally correct on top of the
+driver-style object model (old→new table in docs/API.md)."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import HetSession, TranslationCache
+from repro.core import kernels_suite as suite
+
+RNG = np.random.default_rng(3)
+
+
+def _fresh():
+    return HetSession("vectorized", cache=TranslationCache())
+
+
+def test_every_legacy_method_warns():
+    prog, _ = suite.vadd()
+    s = _fresh()
+    with pytest.warns(DeprecationWarning, match="load_kernel"):
+        s.load_kernel(prog)
+    with pytest.warns(DeprecationWarning, match="gpu_malloc"):
+        s.gpu_malloc("A", 64)
+    with pytest.warns(DeprecationWarning, match="memcpy_h2d"):
+        s.memcpy_h2d("A", np.ones(64, np.float32))
+    with pytest.warns(DeprecationWarning, match="memcpy_d2h"):
+        s.memcpy_d2h("A")
+    with pytest.warns(DeprecationWarning, match=r"launch\(kernel"):
+        s.gpu_malloc("B", 64)
+        s.gpu_malloc("C", 64)
+        s.launch("vadd", grid=2, block=32, args={"n": 64})
+    with pytest.warns(DeprecationWarning, match="device_synchronize"):
+        s.device_synchronize()
+
+
+def test_new_surface_does_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        s = _fresh()
+        fn = s.load(suite.vadd()[0]).function()
+        a = s.alloc(64).copy_from_host(np.ones(64, np.float32))
+        b = s.alloc(64).copy_from_host(np.ones(64, np.float32))
+        c = s.alloc(64)
+        rec = fn.launch_async(2, 32, {"A": a, "B": b, "C": c, "n": 64},
+                              stream=s.stream())
+        s.synchronize()
+        s.restore(fn, s.checkpoint(rec))
+        s.synchronize()
+    assert (c.copy_to_host() == 2.0).all()
+
+
+def test_legacy_end_to_end_matches_new_api():
+    """The 16-kernel-era flow through the shim produces results identical
+    to the same launch through the object API."""
+    prog, _ = suite.saxpy()
+    X = RNG.normal(size=128).astype(np.float32)
+    Y = RNG.normal(size=128).astype(np.float32)
+
+    old = _fresh()
+    with pytest.warns(DeprecationWarning):
+        old.load_kernel(prog)
+        old.gpu_malloc("X", 128)
+        old.gpu_malloc("Y", 128)
+        old.memcpy_h2d("X", X)
+        old.memcpy_h2d("Y", Y)
+        old.launch("saxpy", grid=4, block=32, args={"n": 128, "a": 0.7})
+        got_old = old.memcpy_d2h("Y")
+
+    new = _fresh()
+    fn = new.load(suite.saxpy()[0]).function()
+    x = new.alloc(128).copy_from_host(X)
+    y = new.alloc(128).copy_from_host(Y)
+    fn.launch(4, 32, {"X": x, "Y": y, "n": 128, "a": 0.7})
+    np.testing.assert_array_equal(got_old, y.copy_to_host())
+    assert old.stats["launches"] == new.stats["launches"] == 1
+
+
+def test_legacy_stream_history_view_preserved():
+    """Pre-redesign callers poke ``session._streams[sid][-1].engine`` —
+    the per-stream launch-history view must survive the redesign."""
+    s = _fresh()
+    prog, _ = suite.vadd()
+    A = RNG.normal(size=64).astype(np.float32)
+    with pytest.warns(DeprecationWarning):
+        s.load_kernel(prog)
+        s.gpu_malloc("A", 64)
+        s.gpu_malloc("B", 64)
+        s.gpu_malloc("C", 64)
+        s.memcpy_h2d("A", A)
+        s.launch("vadd", grid=2, block=32, args={"n": 64})
+    assert len(s._streams[0]) == 1
+    rec = s._streams[0][-1]
+    assert rec.finished
+    np.testing.assert_allclose(np.asarray(rec.engine.result("C")), A,
+                               atol=1e-6)
+
+
+def test_legacy_nonblocking_launch_engine_is_eager():
+    """Old callers drive ``rec.engine.run(max_segments=...)`` right after
+    a non-blocking launch — the shim must bind eagerly (the lazy binding
+    is a new-surface behavior)."""
+    s = _fresh()
+    prog, _ = suite.persistent_counter()
+    with pytest.warns(DeprecationWarning):
+        s.load_kernel(prog)
+        rec = s.launch("persistent_counter", grid=2, block=32,
+                       args={"State": RNG.normal(size=64).astype(
+                           np.float32), "iters": 6},
+                       blocking=False)
+    assert rec.started
+    assert not rec.engine.run(max_segments=3)
+    with pytest.warns(DeprecationWarning):
+        s.device_synchronize()
+    assert rec.finished
+
+
+def test_legacy_any_dtype_and_shape_preserved():
+    """The old memory surface accepted any numpy dtype and preserved
+    multi-dim shapes; the shim must too (the typed restrictions belong to
+    the new DeviceBuffer surface only)."""
+    s = _fresh()
+    with pytest.warns(DeprecationWarning):
+        buf = s.gpu_malloc("A", (8, 16), dtype=np.float64)
+        assert buf.shape == (8, 16) and buf.dtype == np.float64
+        buf[2, 3] = 7.5                   # shape-intact view, writable
+        assert s.memcpy_d2h("A")[2, 3] == 7.5
+        s.memcpy_h2d("B", np.ones((4, 4), np.float32))
+        assert s.memcpy_d2h("B").shape == (4, 4)
+
+
+def test_legacy_dtype_mismatch_writeback_rebinds():
+    """Old semantics: _writeback rebound the session buffer to the
+    kernel's result array even when the gpu_malloc dtype differed — the
+    shim must not crash on the cast, it must rebind."""
+    s = _fresh()
+    prog, _ = suite.vadd()
+    A = RNG.normal(size=64).astype(np.float32)
+    with pytest.warns(DeprecationWarning):
+        s.load_kernel(prog)
+        s.gpu_malloc("A", 64)
+        s.gpu_malloc("B", 64)
+        s.gpu_malloc("C", 64, dtype=np.int32)   # mismatched vs f32 param
+        s.memcpy_h2d("A", A)
+        s.launch("vadd", grid=2, block=32, args={"n": 64})
+        out = s.memcpy_d2h("C")
+    assert out.dtype == np.float32              # rebound, old behavior
+    np.testing.assert_allclose(out, A, atol=1e-6)
+
+
+def test_legacy_unknown_kernel_and_missing_arg_errors():
+    s = _fresh()
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(KeyError):
+            s.launch("nope", grid=1, block=1, args={})
+        s.load_kernel(suite.vadd()[0])
+        with pytest.raises(ValueError, match="missing argument"):
+            s.launch("vadd", grid=2, block=32, args={"n": 64})

@@ -1,0 +1,365 @@
+"""Driver-style object API (paper §4.3 as a driver API): Module/Function
+typed metadata, DeviceBuffer in-place semantics, the stats split, the
+async-writeback regression, and restore-to-a-chosen-stream with buffer
+identity."""
+import numpy as np
+import pytest
+
+from repro.core import (DeviceBuffer, Function, HetSession, Module,
+                        TranslationCache)
+from repro.core import kernels_suite as suite
+
+RNG = np.random.default_rng(7)
+
+
+def _vadd_session(backend="vectorized"):
+    s = HetSession(backend, cache=TranslationCache())
+    fn = s.load(suite.vadd()[0]).function()
+    return s, fn
+
+
+# ---------------------------------------------------------------------------
+# Module / Function object model
+# ---------------------------------------------------------------------------
+
+def test_module_function_typed_metadata():
+    s = HetSession("interp")
+    mod = s.load(suite.vadd()[0])
+    assert isinstance(mod, Module)
+    assert mod.functions() == ("vadd",)
+    fn = mod.function("vadd")
+    assert isinstance(fn, Function)
+    assert fn is mod.function()          # single entry: name optional
+    kinds = {p.name: (p.kind, p.dtype) for p in fn.params}
+    assert kinds == {"A": ("buffer", "f32"), "B": ("buffer", "f32"),
+                     "C": ("buffer", "f32"), "n": ("scalar", "i32")}
+    assert fn.param("n").kind == "scalar"
+    with pytest.raises(KeyError):
+        fn.param("nope")
+    with pytest.raises(KeyError):
+        mod.function("nope")
+
+
+def test_multi_entry_module_requires_name():
+    s = HetSession("interp")
+    mod = s.load([suite.vadd()[0], suite.saxpy()[0]])
+    assert set(mod.functions()) == {"vadd", "saxpy"}
+    with pytest.raises(ValueError, match="multiple entry points"):
+        mod.function()
+    assert mod.function("saxpy").name == "saxpy"
+
+
+def test_single_entry_module_acts_as_function():
+    s = HetSession("vectorized", cache=TranslationCache())
+    mod = s.load(suite.vadd()[0])
+    a = s.alloc(64).copy_from_host(RNG.normal(size=64).astype(np.float32))
+    b = s.alloc(64).copy_from_host(RNG.normal(size=64).astype(np.float32))
+    c = s.alloc(64)
+    mod.launch(2, 32, {"A": a, "B": b, "C": c, "n": 64})
+    np.testing.assert_allclose(c.copy_to_host(),
+                               a.copy_to_host() + b.copy_to_host(),
+                               atol=1e-6)
+    assert [p.name for p in mod.params] == ["A", "B", "C", "n"]
+
+
+# ---------------------------------------------------------------------------
+# DeviceBuffer: typed handles, explicit transfers, in-place mutation
+# ---------------------------------------------------------------------------
+
+def test_alloc_and_transfers():
+    s = HetSession("interp")
+    buf = s.alloc(16, "f32")
+    assert isinstance(buf, DeviceBuffer)
+    assert buf.size == 16 and buf.dtype == "f32"
+    assert buf.np_dtype == np.float32
+    host2d = np.arange(16, dtype=np.float32).reshape(4, 4)
+    buf.copy_from_host(host2d)           # multi-dim host flattens
+    np.testing.assert_array_equal(buf.copy_to_host(),
+                                  host2d.reshape(-1))
+    out = buf.copy_to_host()
+    out[:] = 0                           # defensive copy: no aliasing
+    assert buf.copy_to_host()[1] == 1.0
+    # multi-dim alloc shapes flatten (device memory is linear)
+    assert s.alloc((4, 8), np.int32).size == 32
+    with pytest.raises(ValueError, match="elements"):
+        buf.copy_from_host(np.zeros(5, np.float32))
+    buf.fill(3.0)
+    assert (buf.copy_to_host() == 3.0).all()
+    buf.free()
+    with pytest.raises(ValueError, match="freed"):
+        buf.copy_to_host()
+
+
+def test_launch_mutates_buffer_in_place():
+    s, fn = _vadd_session()
+    A = RNG.normal(size=64).astype(np.float32)
+    B = RNG.normal(size=64).astype(np.float32)
+    a, b = s.alloc(64).copy_from_host(A), s.alloc(64).copy_from_host(B)
+    c = s.alloc(64)
+    backing = c.data
+    fn.launch(2, 32, {"A": a, "B": b, "C": c, "n": 64})
+    assert c.data is backing, "in-place: same backing array, no rebind"
+    np.testing.assert_allclose(c.copy_to_host(), A + B, atol=1e-6)
+    # inputs untouched
+    np.testing.assert_array_equal(a.copy_to_host(), A)
+
+
+def test_typed_binding_errors():
+    s, fn = _vadd_session()
+    a = s.alloc(64)
+    b = s.alloc(64)
+    c = s.alloc(64)
+    ok = {"A": a, "B": b, "C": c, "n": 64}
+    with pytest.raises(TypeError, match="DeviceBuffer"):
+        fn.launch_async(2, 32, {**ok, "A": np.zeros(64, np.float32)})
+    with pytest.raises(TypeError, match="scalar"):
+        fn.launch_async(2, 32, {**ok, "n": s.alloc(1)})
+    with pytest.raises(TypeError, match="dtype"):
+        fn.launch_async(2, 32, {**ok, "C": s.alloc(64, np.int32)})
+    with pytest.raises(ValueError, match="missing argument"):
+        fn.launch_async(2, 32, {"A": a, "B": b, "C": c})
+    with pytest.raises(ValueError, match="unknown argument"):
+        fn.launch_async(2, 32, {**ok, "typo": 1})
+    other = HetSession("vectorized", cache=TranslationCache())
+    with pytest.raises(ValueError, match="different session"):
+        fn.launch_async(2, 32, {**ok, "A": other.alloc(64)})
+    freed = s.alloc(64)
+    freed.free()
+    with pytest.raises(ValueError, match="freed"):
+        fn.launch_async(2, 32, {**ok, "A": freed})
+
+
+def test_same_stream_dataflow_cuda_semantics():
+    """A launch only binds its buffers when prior same-stream work is
+    done — so back-to-back async launches chain through a DeviceBuffer
+    exactly like CUDA stream ordering."""
+    s, fn = _vadd_session()
+    A = RNG.normal(size=64).astype(np.float32)
+    B = RNG.normal(size=64).astype(np.float32)
+    a, b = s.alloc(64).copy_from_host(A), s.alloc(64).copy_from_host(B)
+    c, e = s.alloc(64), s.alloc(64)
+    fn.launch_async(2, 32, {"A": a, "B": b, "C": c, "n": 64})
+    # second launch reads C — enqueued before the first ran a segment
+    fn.launch_async(2, 32, {"A": c, "B": c, "C": e, "n": 64})
+    assert s.synchronize()
+    np.testing.assert_allclose(e.copy_to_host(), 2 * (A + B), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: async-writeback regression (the old surface was lossy)
+# ---------------------------------------------------------------------------
+
+def test_async_writeback_no_longer_lossy():
+    """Old bug: ``device_synchronize()`` completed engines but never wrote
+    results back, so a non-blocking launch's output silently vanished.
+    Under DeviceBuffer in-place semantics the writeback is part of launch
+    completion — the shim's sync must surface the results."""
+    s = HetSession("vectorized", cache=TranslationCache())
+    prog, _ = suite.vadd()
+    A = RNG.normal(size=64).astype(np.float32)
+    B = RNG.normal(size=64).astype(np.float32)
+    with pytest.warns(DeprecationWarning):
+        s.load_kernel(prog)
+        s.gpu_malloc("A", 64)
+        s.gpu_malloc("B", 64)
+        s.gpu_malloc("C", 64)
+        s.memcpy_h2d("A", A)
+        s.memcpy_h2d("B", B)
+        rec = s.launch("vadd", grid=2, block=32, args={"n": 64},
+                       blocking=False)
+        assert not rec.finished
+        s.device_synchronize()
+        assert rec.finished
+        np.testing.assert_allclose(s.memcpy_d2h("C"), A + B, atol=1e-6)
+
+
+def test_explicitly_passed_session_buffer_gets_writeback():
+    """Old bug #2: ``_writeback`` skipped any buffer passed explicitly in
+    ``args`` even when it *was* the session buffer."""
+    s = HetSession("vectorized", cache=TranslationCache())
+    prog, _ = suite.vadd()
+    A = RNG.normal(size=64).astype(np.float32)
+    B = RNG.normal(size=64).astype(np.float32)
+    with pytest.warns(DeprecationWarning):
+        s.load_kernel(prog)
+        s.gpu_malloc("A", 64)
+        s.gpu_malloc("B", 64)
+        cbuf = s.gpu_malloc("C", 64)
+        s.memcpy_h2d("A", A)
+        s.memcpy_h2d("B", B)
+        # pass the session's own C buffer explicitly — previously lossy
+        s.launch("vadd", grid=2, block=32, args={"n": 64, "C": cbuf})
+        np.testing.assert_allclose(s.memcpy_d2h("C"), A + B, atol=1e-6)
+
+
+def test_explicit_foreign_array_is_never_mutated():
+    """A raw host array passed explicitly keeps copy-in semantics: the
+    caller's array must not be mutated behind their back (oracles are
+    routinely fed the same args dict)."""
+    s = HetSession("vectorized", cache=TranslationCache())
+    prog, _ = suite.vadd()
+    A = RNG.normal(size=64).astype(np.float32)
+    B = RNG.normal(size=64).astype(np.float32)
+    mine = np.zeros(64, np.float32)
+    with pytest.warns(DeprecationWarning):
+        s.load_kernel(prog)
+        s.gpu_malloc("C", 64)       # session buffer with the same name
+        rec = s.launch("vadd", grid=2, block=32,
+                       args={"A": A, "B": B, "C": mine, "n": 64})
+    np.testing.assert_array_equal(mine, np.zeros(64, np.float32))
+    # session buffer untouched too (the kernel wrote to its own copy)
+    with pytest.warns(DeprecationWarning):
+        np.testing.assert_array_equal(s.memcpy_d2h("C"),
+                                      np.zeros(64, np.float32))
+    # results remain readable through the record
+    np.testing.assert_allclose(np.asarray(rec.engine.result("C")),
+                               A + B, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: stats split (translate_ms vs launch_ms)
+# ---------------------------------------------------------------------------
+
+def test_stats_split_translate_vs_launch():
+    s, fn = _vadd_session()
+    a = s.alloc(64).copy_from_host(RNG.normal(size=64).astype(np.float32))
+    b = s.alloc(64).copy_from_host(RNG.normal(size=64).astype(np.float32))
+    c = s.alloc(64)
+    fn.launch(2, 32, {"A": a, "B": b, "C": c, "n": 64})
+    assert s.stats["launches"] == 1
+    assert s.stats["launch_ms"] > 0.0
+    assert s.stats["translate_ms"] > 0.0, "cold launch must translate"
+    # deprecated alias mirrors the *translation* number now, not the old
+    # launch-inclusive mistiming
+    assert s.stats["translation_ms"] == s.stats["translate_ms"]
+    cold_translate = s.stats["translate_ms"]
+    fn.launch(2, 32, {"A": a, "B": b, "C": c, "n": 64})
+    assert s.stats["launches"] == 2
+    # warm launch: no new translation, but launch work still accrues
+    assert s.stats["translate_ms"] == pytest.approx(cold_translate)
+    assert s.stats["segments_executed"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# Satellite: restore lands on a caller-chosen stream; buffer identity
+# ---------------------------------------------------------------------------
+
+def test_restore_on_chosen_stream_and_buffer_identity():
+    s = HetSession("vectorized", cache=TranslationCache())
+    prog, oracle = suite.persistent_counter()
+    fn = s.load(prog).function()
+    init = RNG.normal(size=64).astype(np.float32)
+    state = s.alloc(64).copy_from_host(init)
+    rec = fn.launch_async(2, 32, {"State": state, "iters": 6})
+    s.step(3)                                   # in flight, at a barrier
+    assert rec.started and not rec.finished
+    blob = s.checkpoint(rec)
+    rec.cancel()
+
+    other = s.stream()
+    restored = s.restore("persistent_counter", blob, stream=other)
+    assert restored.stream is other, "restore must honour the stream"
+    # buffer identity: the restored launch re-bound the *same* handle
+    assert restored.buffer("State") is state
+    # synchronize() sweeps all streams, not just stream 0
+    assert s.synchronize()
+    assert restored.finished
+    expect = oracle({"State": init.copy(), "iters": 6})["State"]
+    np.testing.assert_allclose(state.copy_to_host(), expect,
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_restore_rejects_foreign_stream():
+    s = HetSession("vectorized", cache=TranslationCache())
+    other = HetSession("vectorized", cache=TranslationCache())
+    fn = s.load(suite.persistent_counter()[0]).function()
+    state = s.alloc(64).copy_from_host(np.ones(64, np.float32))
+    rec = fn.launch_async(2, 32, {"State": state, "iters": 4})
+    s.step(2)
+    blob = s.checkpoint(rec)
+    rec.cancel()
+    with pytest.raises(ValueError, match="different session"):
+        s.restore(fn, blob, stream=other.stream())
+
+
+def test_nonhetir_dtype_buffer_rejected_by_typed_binding():
+    """alloc() tolerates non-hetIR dtypes for host staging (the legacy
+    memcpy surface needs them), but the typed Function binding rejects
+    them."""
+    s, fn = _vadd_session()
+    staging = s.alloc(64, np.float64)
+    assert staging.dtype is None and staging.np_dtype == np.float64
+    ok = {"A": s.alloc(64), "B": s.alloc(64), "C": s.alloc(64), "n": 64}
+    with pytest.raises(TypeError, match="dtype"):
+        fn.launch_async(2, 32, {**ok, "A": staging})
+
+
+def test_restore_default_and_legacy_int_stream():
+    s = HetSession("vectorized", cache=TranslationCache())
+    prog, _ = suite.persistent_counter()
+    fn = s.load(prog).function()
+    state = s.alloc(64).copy_from_host(np.ones(64, np.float32))
+    rec = fn.launch_async(2, 32, {"State": state, "iters": 4})
+    s.step(2)
+    blob = s.checkpoint(rec)
+    rec.cancel()
+    r_def = s.restore(fn, blob)                  # Function + default stream
+    assert r_def.stream is s.default_stream
+    r_def.cancel()
+    r_int = s.restore("persistent_counter", blob, stream=0)  # legacy int
+    assert r_int.stream is s.default_stream
+    assert s.synchronize() and r_int.finished
+
+
+def test_checkpoint_of_queued_launch_refuses_stale_binding():
+    """A launch queued behind other same-stream work has no state yet —
+    materializing it early (e.g. via checkpoint/migrate) would snapshot
+    its buffers *before* the predecessor's writes.  It must refuse."""
+    s = HetSession("vectorized", cache=TranslationCache())
+    fn = s.load(suite.persistent_counter()[0]).function()
+    buf = s.alloc(64).copy_from_host(np.ones(64, np.float32))
+    fn.launch_async(2, 32, {"State": buf, "iters": 4})
+    rec2 = fn.launch_async(2, 32, {"State": buf, "iters": 4})
+    with pytest.raises(RuntimeError, match="queued behind"):
+        s.checkpoint(rec2)
+    assert not rec2.started
+    # once the predecessor finishes, chained results stay correct
+    assert s.synchronize()
+    oracle = suite.persistent_counter()[1]
+    once = oracle({"State": np.ones(64, np.float32), "iters": 4})["State"]
+    twice = oracle({"State": once.copy(), "iters": 4})["State"]
+    np.testing.assert_allclose(buf.copy_to_host(), twice,
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_restore_legacy_int_stream_history_key():
+    """restore(stream=<int>) must file the record in the legacy
+    ``_streams`` history under the caller's int id, matching launch()."""
+    s = HetSession("vectorized", cache=TranslationCache())
+    prog, _ = suite.persistent_counter()
+    with pytest.warns(DeprecationWarning):
+        s.load_kernel(prog)
+        rec = s.launch("persistent_counter", grid=2, block=32,
+                       args={"State": np.ones(64, np.float32),
+                             "iters": 4},
+                       stream=3, blocking=False)
+    rec.engine.run(max_segments=2)
+    blob = s.checkpoint(rec)
+    rec.cancel()
+    restored = s.restore("persistent_counter", blob, stream=3)
+    assert s._streams[3][-1] is restored
+    assert s.synchronize() and restored.finished
+
+
+def test_launch_record_future_surface():
+    s, fn = _vadd_session()
+    a = s.alloc(64).copy_from_host(RNG.normal(size=64).astype(np.float32))
+    b = s.alloc(64).copy_from_host(RNG.normal(size=64).astype(np.float32))
+    c = s.alloc(64)
+    rec = fn.launch_async(2, 32, {"A": a, "B": b, "C": c, "n": 64})
+    assert not rec.done() and not rec.started
+    assert rec.wait() is True
+    assert rec.done() and rec.finished
+    assert rec.buffer("C") is c
+    with pytest.raises(KeyError):
+        rec.buffer("n")

@@ -1,0 +1,277 @@
+"""Stream semantics: segment-granularity interleaving across streams,
+event ordering, cooperative pause-checkpoint of one stream while another
+keeps running, and migration of in-flight async launches (both backend
+directions, bit-identical)."""
+import numpy as np
+import pytest
+
+from repro.core import Event, HetSession, TranslationCache, migrate
+from repro.core import kernels_suite as suite
+
+RNG = np.random.default_rng(11)
+
+
+def _counter_session(backend="vectorized"):
+    s = HetSession(backend, cache=TranslationCache())
+    fn = s.load(suite.persistent_counter()[0]).function()
+    return s, fn
+
+
+def _mk_state(s, value=None):
+    init = RNG.normal(size=64).astype(np.float32) if value is None \
+        else np.full(64, value, np.float32)
+    return s.alloc(64).copy_from_host(init), init
+
+
+# ---------------------------------------------------------------------------
+# Interleaving
+# ---------------------------------------------------------------------------
+
+def test_two_streams_interleave_at_segment_granularity():
+    """The acceptance criterion: two async launches on different streams
+    demonstrably alternate segment-by-segment — not serial completion."""
+    s, fn = _counter_session()
+    st1, st2 = s.stream(), s.stream()
+    b1, i1 = _mk_state(s)
+    b2, i2 = _mk_state(s)
+    r1 = fn.launch_async(2, 32, {"State": b1, "iters": 6}, stream=st1)
+    r2 = fn.launch_async(2, 32, {"State": b2, "iters": 6}, stream=st2)
+    s.sched_trace.clear()
+    assert s.synchronize()
+    ids = [t["stream"] for t in s.sched_trace]
+    assert set(ids) == {st1.sid, st2.sid}
+    # round-robin: while both are in flight the trace alternates strictly
+    n_overlap = 2 * min(ids.count(st1.sid), ids.count(st2.sid))
+    overlap = ids[:n_overlap]
+    assert all(a != b for a, b in zip(overlap, overlap[1:])), \
+        f"streams did not alternate at segment granularity: {ids}"
+    assert n_overlap >= 8, f"too little overlap to call it async: {ids}"
+    # both finished with correct, independent results
+    oracle = suite.persistent_counter()[1]
+    for buf, init in ((b1, i1), (b2, i2)):
+        np.testing.assert_allclose(
+            buf.copy_to_host(),
+            oracle({"State": init.copy(), "iters": 6})["State"],
+            atol=1e-4, rtol=1e-4)
+    assert r1.finished and r2.finished
+
+
+def test_interleaving_visible_in_executed_ops():
+    """Both engines accumulate executed ops concurrently — neither ran to
+    completion before the other started."""
+    s, fn = _counter_session()
+    st1, st2 = s.stream(), s.stream()
+    b1, _ = _mk_state(s)
+    b2, _ = _mk_state(s)
+    r1 = fn.launch_async(2, 32, {"State": b1, "iters": 6}, stream=st1)
+    r2 = fn.launch_async(2, 32, {"State": b2, "iters": 6}, stream=st2)
+    assert s.step(2)                      # two round-robin passes
+    assert r1.started and r2.started
+    assert 0 < r1.engine.executed_ops
+    assert 0 < r2.engine.executed_ops
+    assert not r1.finished and not r2.finished
+    assert s.synchronize()
+
+
+# ---------------------------------------------------------------------------
+# Events
+# ---------------------------------------------------------------------------
+
+def test_event_wait_orders_across_streams():
+    """Stream 2's dependent launch must not execute a single segment
+    before stream 1 reaches the recorded event."""
+    s = HetSession("vectorized", cache=TranslationCache())
+    pc = s.load(suite.persistent_counter()[0]).function()
+    va = s.load(suite.vadd()[0]).function()
+    st1, st2 = s.stream(), s.stream()
+    state, init = _mk_state(s)
+    c = s.alloc(64)
+    r1 = pc.launch_async(2, 32, {"State": state, "iters": 5}, stream=st1)
+    ev = st1.record_event()
+    st2.wait_event(ev)
+    # reads the counter's output — legal only after the event
+    r2 = va.launch_async(2, 32, {"A": state, "B": state, "C": c, "n": 64},
+                         stream=st2)
+    s.sched_trace.clear()
+    assert s.synchronize()
+    seqs = [t["seq"] for t in s.sched_trace]
+    assert seqs.index(r2.seq) > max(i for i, q in enumerate(seqs)
+                                    if q == r1.seq), \
+        f"dependent launch ran before the event: {s.sched_trace}"
+    expect = suite.persistent_counter()[1](
+        {"State": init.copy(), "iters": 5})["State"]
+    np.testing.assert_allclose(c.copy_to_host(), 2 * expect,
+                               atol=1e-4, rtol=1e-4)
+    assert ev.query()
+
+
+def test_event_query_record_semantics():
+    s, fn = _counter_session()
+    ev = Event()
+    assert not ev.query()                 # never recorded
+    st = s.stream()
+    st.wait_event(ev)                     # CUDA: no-op, must not block
+    buf, _ = _mk_state(s)
+    fn.launch_async(2, 32, {"State": buf, "iters": 3}, stream=st)
+    assert s.synchronize()
+
+    ev2 = st.record_event()               # empty stream: completes now
+    assert ev2.query()
+    buf2, _ = _mk_state(s)
+    fn.launch_async(2, 32, {"State": buf2, "iters": 3}, stream=st)
+    ev3 = st.record_event()
+    assert not ev3.query()                # pending behind the launch
+    assert ev3.synchronize()
+    assert ev3.query()
+
+
+def test_event_rerecord_invalidates_old_marker():
+    """CUDA re-record semantics: moving an event's record point to a new
+    stream must invalidate the old marker — reaching the *old* point no
+    longer completes the event."""
+    s, fn = _counter_session()
+    st1, st2 = s.stream(), s.stream()
+    b1, _ = _mk_state(s)
+    b2, _ = _mk_state(s)
+    fn.launch_async(2, 32, {"State": b1, "iters": 3}, stream=st1)
+    ev = st1.record_event()
+    fn.launch_async(2, 32, {"State": b2, "iters": 6}, stream=st2)
+    st2.record_event(ev)                  # re-record behind st2's work
+    st2.pause()
+    assert st1.synchronize()              # old marker point reached...
+    assert not ev.query(), \
+        "stale marker completed a re-recorded event"
+    st2.resume()
+    assert s.synchronize()
+    assert ev.query()
+
+
+def test_event_wait_pins_record_point_at_wait_time():
+    """CUDA: a wait refers to the record point current when the wait was
+    issued; a later re-record must not move it (else two streams that
+    cross-record can deadlock)."""
+    s, fn = _counter_session()
+    a, b = s.stream(), s.stream()
+    b1, _ = _mk_state(s)
+    b2, _ = _mk_state(s)
+    fn.launch_async(2, 32, {"State": b1, "iters": 3}, stream=a)
+    ev = a.record_event()
+    b.wait_event(ev)                      # pinned to the record above
+    fn.launch_async(2, 32, {"State": b2, "iters": 3}, stream=b)
+    f = b.record_event()
+    a.wait_event(f)
+    a.record_event(ev)                    # re-record AFTER b's wait
+    assert s.synchronize(), \
+        "cross-recorded streams deadlocked: b's wait moved to the new " \
+        "record point instead of staying pinned"
+    assert ev.query() and f.query()
+
+
+# ---------------------------------------------------------------------------
+# Cooperative pause / checkpoint of one stream while another runs
+# ---------------------------------------------------------------------------
+
+def test_pause_one_stream_checkpoint_while_other_runs():
+    s, fn = _counter_session()
+    st1, st2 = s.stream(), s.stream()
+    b1, i1 = _mk_state(s)
+    b2, i2 = _mk_state(s)
+    r1 = fn.launch_async(2, 32, {"State": b1, "iters": 8}, stream=st1)
+    r2 = fn.launch_async(2, 32, {"State": b2, "iters": 8}, stream=st2)
+    s.step(2)                              # both in flight
+    st1.pause()
+    assert s.synchronize() is False, "paused work must remain"
+    assert r2.finished, "the unpaused stream must have kept running"
+    assert not r1.finished
+    eng = r1.engine
+    assert 0 < eng.node_idx < len(eng.nodes), "paused mid-kernel"
+
+    # checkpoint the paused in-flight launch, restore it, finish both
+    blob = s.checkpoint(r1)
+    r1.cancel()
+    st1.resume()
+    restored = s.restore("persistent_counter", blob, stream=st1)
+    assert s.synchronize()
+    oracle = suite.persistent_counter()[1]
+    # identity: restore re-bound b1, so results land in the original
+    np.testing.assert_allclose(
+        b1.copy_to_host(),
+        oracle({"State": i1.copy(), "iters": 8})["State"],
+        atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(
+        b2.copy_to_host(),
+        oracle({"State": i2.copy(), "iters": 8})["State"],
+        atol=1e-4, rtol=1e-4)
+    assert restored.finished
+
+
+def test_session_pause_flag_holds_all_streams():
+    s, fn = _counter_session()
+    buf, _ = _mk_state(s)
+    fn.launch_async(2, 32, {"State": buf, "iters": 6})
+    s.step(1)
+    s.pause_flag = True
+    assert s.synchronize() is False
+    s.pause_flag = False
+    assert s.synchronize() is True
+
+
+# ---------------------------------------------------------------------------
+# Migration of in-flight async launches — both directions, bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("src,dst", [("vectorized", "pallas"),
+                                     ("pallas", "vectorized")])
+def test_migrate_async_launch_mid_kernel_bit_identical(src, dst):
+    """Acceptance criterion: an in-flight async launch survives
+    checkpoint → migrate → resume *bit-identically* on the destination
+    backend (both jit backends share pinned fp semantics)."""
+    prog, _ = suite.persistent_counter()
+    init = RNG.normal(size=64).astype(np.float32)
+
+    # reference: the whole kernel on the destination backend
+    s_ref = HetSession(dst, cache=TranslationCache())
+    ref_buf = s_ref.alloc(64).copy_from_host(init)
+    s_ref.load(prog).launch(2, 32, {"State": ref_buf, "iters": 6})
+
+    s_src = HetSession(src, cache=TranslationCache())
+    s_dst = HetSession(dst, cache=TranslationCache())
+    fn = s_src.load(prog).function()
+    s_dst.load(prog)
+    buf = s_src.alloc(64).copy_from_host(init)
+    rec = fn.launch_async(2, 32, {"State": buf, "iters": 6})
+    assert s_src.step(3)                   # genuinely mid-kernel
+    assert rec.started and not rec.finished
+    assert 0 < rec.engine.node_idx < len(rec.engine.nodes)
+
+    new = migrate(rec, s_src, s_dst, "persistent_counter")
+    assert rec.cancelled, "migrated-away launch must not finish on src"
+    assert s_dst.synchronize() and new.finished
+    np.testing.assert_array_equal(
+        np.asarray(new.buffer("State").copy_to_host()),
+        np.asarray(ref_buf.copy_to_host()),
+        err_msg=f"{src}->{dst} async migration not bit-identical")
+    # the migrated buffer adopted the source uid: identity is stable
+    # across hops
+    assert new.buffer("State").uid == buf.uid
+
+
+def test_migrate_onto_chosen_destination_stream():
+    prog, oracle = suite.persistent_counter()
+    init = RNG.normal(size=64).astype(np.float32)
+    s_src = HetSession("vectorized", cache=TranslationCache())
+    s_dst = HetSession("interp", cache=TranslationCache())
+    fn = s_src.load(prog).function()
+    s_dst.load(prog)
+    buf = s_src.alloc(64).copy_from_host(init)
+    rec = fn.launch_async(2, 32, {"State": buf, "iters": 6})
+    s_src.step(2)
+    target = s_dst.stream()
+    new = migrate(rec, s_src, s_dst, "persistent_counter", stream=target)
+    assert new.stream is target
+    assert s_dst.synchronize() and new.finished
+    np.testing.assert_allclose(
+        new.buffer("State").copy_to_host(),
+        oracle({"State": init.copy(), "iters": 6})["State"],
+        atol=1e-4, rtol=1e-4)
+    assert s_dst.stats["last_migration"]["payload_bytes"] > 0

@@ -1,0 +1,195 @@
+"""Serving-tier benchmark — the multi-tenant coordinator under load
+(paper §4.3's abstraction held to serving scale): thousands of
+concurrent launches across many tenant streams, weighted-fair segment
+shares measured from ``sched_trace``, steady-state buffer-pool reuse,
+closed-loop latency against an SLO, and quota-based load shedding
+(rejected-with-error, never a lost in-flight request).
+
+``python -m benchmarks.bench_serving --smoke`` runs the same phases and
+*asserts* the serving acceptance criteria (CI smoke job).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import (HetSession, QuotaExceeded, ServingFrontEnd,
+                        TranslationCache)
+from repro.core import kernels_suite as suite
+
+# one request = one persistent_counter launch of ITERS segments on a
+# 64-element state buffer (allocated per request, freed on completion —
+# the alloc/free churn is what the pool has to absorb)
+ITERS = 4
+STATE = 64
+
+
+def _mk_front(n_tenants, weights, quota, **session_kw):
+    s = HetSession("vectorized", cache=TranslationCache(), **session_kw)
+    fn = s.load(suite.persistent_counter()[0]).function()
+    front = ServingFrontEnd(s, max_inflight=n_tenants * quota,
+                            default_quota=quota)
+    names = []
+    for i in range(n_tenants):
+        name = f"t{i}"
+        front.tenant(name, weight=weights[i % len(weights)])
+        names.append(name)
+    return s, fn, front, names
+
+
+def _submit_one(s, fn, front, name, live):
+    db = s.alloc(STATE)
+    ticket = front.submit(name, fn, 2, 32, {"State": db, "iters": ITERS})
+    live.append((ticket, db))
+    return ticket
+
+
+def _reap_free(live):
+    still = []
+    for ticket, db in live:
+        if ticket.done():
+            db.free()
+        else:
+            still.append((ticket, db))
+    live[:] = still
+
+
+def run(n_tenants: int = 8, total_launches: int = 1200,
+        per_tenant_backlog: int = 16) -> list:
+    rows = []
+    weights = [1.0, 1.0, 2.0, 2.0, 3.0, 3.0, 4.0, 4.0]
+
+    # ---- phase 1: sustained multi-tenant load ----------------------------
+    # closed loop per tenant: keep `per_tenant_backlog` requests in
+    # flight each, reap-and-free on completion, until `total_launches`
+    # have been admitted.  Mid-run (every tenant saturated) we measure
+    # the weighted-fair share split over a fixed trace window.
+    s, fn, front, names = _mk_front(n_tenants, weights,
+                                    quota=per_tenant_backlog)
+    fn.launch(2, 32, {"State": s.alloc(STATE), "iters": ITERS})  # warm
+    live: list = []
+    submitted = 0
+    t0 = time.perf_counter()
+    # saturate every tenant first
+    for name in names:
+        for _ in range(per_tenant_backlog):
+            _submit_one(s, fn, front, name, live)
+            submitted += 1
+
+    # steady state starts here: the pool has seen the cold allocations
+    pool0 = s.pool_stats()
+
+    # fairness window: all tenants backlogged, count segments per stream
+    s.sched_trace.clear()
+    window = 50 * n_tenants
+    s.step(window)
+    counts = {front.tenants[n].stream.sid: 0 for n in names}
+    for t in s.sched_trace:
+        if t["stream"] in counts:
+            counts[t["stream"]] += 1
+    total_segs = sum(counts.values()) or 1
+    total_w = sum(front.tenants[n].stream.weight for n in names)
+    max_rel_err = 0.0
+    for n in names:
+        st = front.tenants[n].stream
+        want = st.weight / total_w
+        got = counts[st.sid] / total_segs
+        max_rel_err = max(max_rel_err, abs(got - want) / want)
+
+    # keep the closed loop going until the launch target is admitted
+    while submitted < total_launches or live:
+        front.pump(64)
+        _reap_free(live)
+        for name in names:
+            t = front.tenants[name]
+            while (submitted < total_launches
+                   and len(t.inflight) < per_tenant_backlog):
+                _submit_one(s, fn, front, name, live)
+                submitted += 1
+    front.drain()
+    _reap_free(live)
+    elapsed = time.perf_counter() - t0
+
+    agg = front.stats()
+    pool = s.pool_stats()
+    dh = pool["hits"] - pool0["hits"]
+    dm = pool["misses"] - pool0["misses"]
+    steady_reuse = dh / max(dh + dm, 1)
+    lost = agg["admitted"] - agg["completed"] - agg["inflight"]
+    rows.append({
+        "bench": "serving",
+        "case": f"{n_tenants}tenants_x{total_launches}launches",
+        "launches": agg["admitted"],
+        "tenants": n_tenants,
+        "elapsed_ms": round(elapsed * 1e3, 1),
+        "throughput_lps": round(agg["completed"] / max(elapsed, 1e-9), 1),
+        "fair_share_max_rel_err": round(max_rel_err, 3),
+        "pool_reuse_rate": round(pool["reuse_rate"], 3),
+        "pool_steady_reuse_rate": round(steady_reuse, 3),
+        "p50_ms": agg.get("p50_ms", 0.0),
+        "p99_ms": agg.get("p99_ms", 0.0),
+        "lost_inflight": lost,
+        "sched_trace_dropped": s.stats["sched_trace_dropped"],
+    })
+
+    # ---- phase 2: oversubscription -> quota shedding ---------------------
+    # tiny quotas, a burst far above them: the excess is rejected with
+    # QuotaExceeded *at admission*; everything admitted still completes.
+    s2, fn2, front2, names2 = _mk_front(n_tenants, weights, quota=4)
+    live2: list = []
+    rejected = 0
+    for _ in range(8):                    # 8 bursts of n_tenants*8
+        for name in names2:
+            for _ in range(8):
+                try:
+                    _submit_one(s2, fn2, front2, name, live2)
+                except QuotaExceeded:
+                    rejected += 1
+        front2.pump(16)                   # a trickle of service
+        _reap_free(live2)
+    front2.drain()
+    _reap_free(live2)
+    agg2 = front2.stats()
+    rows.append({
+        "bench": "serving",
+        "case": "oversubscribed_shedding",
+        "offered": agg2["admitted"] + agg2["rejected"],
+        "admitted": agg2["admitted"],
+        "rejected": agg2["rejected"],
+        "completed": agg2["completed"],
+        "lost_inflight": agg2["admitted"] - agg2["completed"],
+    })
+    assert rejected == agg2["rejected"]
+    return rows
+
+
+def smoke(slo_p99_ms: float = 2000.0) -> None:
+    """CI smoke: run both phases and assert the acceptance criteria."""
+    rows = run()
+    load, shed = rows[0], rows[1]
+    assert load["launches"] >= 1000, load
+    assert load["tenants"] >= 8, load
+    assert load["fair_share_max_rel_err"] <= 0.15, \
+        f"weighted shares off by >15%: {load}"
+    assert load["pool_steady_reuse_rate"] >= 0.90, \
+        f"steady-state pool reuse below 90%: {load}"
+    assert load["lost_inflight"] == 0, load
+    assert load["p99_ms"] <= slo_p99_ms, \
+        f"p99 {load['p99_ms']}ms blew the {slo_p99_ms}ms smoke SLO: {load}"
+    assert shed["rejected"] > 0, \
+        f"oversubscription did not shed: {shed}"
+    assert shed["lost_inflight"] == 0, \
+        f"shedding lost admitted work: {shed}"
+    for r in rows:
+        print(r)
+    print("serving smoke OK")
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        for r in run():
+            print(r)

@@ -14,7 +14,8 @@ def _emit(rows) -> None:
 def main() -> None:
     from benchmarks import (bench_kernels, bench_migration,
                             bench_overhead, bench_portability,
-                            bench_streams, bench_translation, roofline)
+                            bench_serving, bench_streams,
+                            bench_translation, roofline)
 
     print("# hetGPU reproduction benchmarks (one per paper table)")
     print("# -- paper 6.1: portability matrix --")
@@ -33,6 +34,9 @@ def main() -> None:
     _emit(bench_migration.run())
     print("# -- paper 4.3: stream scheduler (async overlap + overhead) --")
     _emit(bench_streams.run())
+    print("# -- paper 4.3: multi-tenant serving tier (fair share, pool, "
+          "shedding) --")
+    _emit(bench_serving.run())
     print("# -- kernel structural benchmarks --")
     _emit(bench_kernels.run())
     print("# -- roofline (from dry-run artifacts; see EXPERIMENTS.md) --")

@@ -11,14 +11,18 @@ from .engine import Engine
 from .passes import (DEFAULT_OPT_LEVEL, OPT_MAX, PipelineStats,
                      SpecializationPolicy, get_optimized, get_specialized,
                      optimize)
-from .runtime import (DeviceBuffer, Event, Function, HetSession,
-                      LaunchRecord, Module, ParamInfo, Stream, migrate)
+from .pool import BufferPool
+from .runtime import (CopyRecord, DeviceBuffer, Event, Function,
+                      HetSession, LaunchRecord, Module, ParamInfo, Stream,
+                      TraceRing, migrate)
+from .serving import QuotaExceeded, ServeTicket, ServingFrontEnd
 from .state import Snapshot
 
 __all__ = ["alias", "hetir", "BACKENDS", "get_backend", "Engine",
            "HetSession", "migrate", "Snapshot", "TranslationCache",
            "Module", "Function", "DeviceBuffer", "Stream", "Event",
-           "LaunchRecord", "ParamInfo",
+           "LaunchRecord", "ParamInfo", "CopyRecord", "TraceRing",
+           "BufferPool", "ServingFrontEnd", "ServeTicket", "QuotaExceeded",
            "DiskStore", "global_cache", "register_reviver", "optimize",
            "get_optimized", "get_specialized", "SpecializationPolicy",
            "PipelineStats", "OPT_MAX", "DEFAULT_OPT_LEVEL"]

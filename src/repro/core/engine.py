@@ -145,10 +145,19 @@ class Engine:
 
     # ------------------------------------------------------------------
     def run(self, max_segments: Optional[int] = None,
-            pause_flag: Optional[Callable[[], bool]] = None) -> bool:
+            pause_flag: Optional[Callable[[], bool]] = None,
+            on_segment: Optional[Callable[["Engine"], bool]] = None
+            ) -> bool:
         """Execute until completion, ``max_segments`` executed segments, or
         ``pause_flag()`` turning true at a barrier.  Returns True iff the
-        program ran to completion."""
+        program ran to completion.
+
+        ``on_segment`` is the segment-boundary *yield hook*: it is invoked
+        after **every** executed segment (including the last one, so
+        callers can account/trace each segment exactly once), and a truthy
+        return requests a cooperative yield at this barrier — the serving
+        scheduler uses it to preempt a stream mid-quantum when a
+        higher-priority stream becomes runnable."""
         executed = 0
         while self.node_idx < len(self.nodes):
             if max_segments is not None and executed >= max_segments:
@@ -166,9 +175,12 @@ class Engine:
                 executed += 1
                 self.node_idx += 1
                 # a barrier boundary — the paper's cooperative pause point
-                if pause_flag is not None and pause_flag() \
-                        and self.node_idx < len(self.nodes):
-                    return False
+                yield_req = (on_segment is not None and on_segment(self))
+                if self.node_idx < len(self.nodes):
+                    if yield_req:
+                        return False
+                    if pause_flag is not None and pause_flag():
+                        return False
             elif isinstance(node, LoopStart):
                 if self._trip_count(node) <= 0:
                     # zero-trip loop: jump past the matching LoopEnd

@@ -13,7 +13,9 @@ barrier — cross-segment value numbering).  Two *dynamic-trip* kernels
 target launch-time specialization: ``dyn_matmul`` (the tile loop's trip
 count is a launch scalar, unrollable only once bound) and ``dyn_fir``
 (dynamic taps plus a loop-invariant load that the alias-aware hoist moves
-once the trip count is known positive).
+once the trip count is known positive).  ``decode_gemv`` is the
+serving-tier workload: one decode step's residual matvec, barriered per
+tile so the fair-share scheduler preempts between tiles.
 
 Each returns a :class:`~repro.core.hetir.Program` plus a pure-numpy oracle.
 """
@@ -559,6 +561,51 @@ def dyn_fir(size: int = 64) -> Tuple[ir.Program, Callable]:
 
 
 # ---------------------------------------------------------------------------
+def decode_gemv(tile_k: int = 8) -> Tuple[ir.Program, Callable]:
+    """The serving-tier workload: one decode step's matvec,
+    ``Out = relu(W @ X + R)`` (``R`` the residual), with ``X`` staged
+    through shared memory in ``tile_k`` chunks and a barrier per chunk.
+    One output row per *thread* (``grid*block`` rows), dynamic ``ktiles``
+    trip — so a single token's worth of work is many short segments, the
+    shape the fair-share scheduler preempts between, and the
+    specialization policy can bind the tile count at launch."""
+    b = Builder("decode_gemv",
+                [Ptr("W"), Ptr("X"), Ptr("R"), Ptr("Out"), Scalar("K"),
+                 Scalar("ktiles")], shared_size=tile_k)
+    row = b.global_id(0)
+    t = b.thread_id()
+    k = b.param("K")
+    acc = b.var(b.const(0.0, ir.F32), hint="acc")
+    with b.loop("ktiles", hint="kt") as kt:
+        with b.when(t < b.const(tile_k)):
+            b.store_shared(t, b.load("X", kt * b.const(tile_k) + t))
+        b.barrier("x-staged")
+        with b.loop(tile_k, hint="kk") as kk:
+            idx = kt * b.const(tile_k) + kk
+            b.assign(acc, b.fma(b.load("W", row * k + idx),
+                                b.load_shared(kk), acc))
+        b.barrier("x-consumed")
+    val = acc + b.load("R", row)
+    b.store("Out", row, b.maximum(val, b.const(0.0, ir.F32)))
+    prog = b.done()
+
+    def oracle(args):
+        K = int(args["K"])
+        used = int(args["ktiles"]) * tile_k
+        W = np.asarray(args["W"], np.float32)
+        X = np.asarray(args["X"], np.float32)
+        R = np.asarray(args["R"], np.float32)
+        M = W.size // K
+        Wm = W.reshape(M, K)[:, :used]
+        out = np.maximum(Wm @ X[:used] + R[:M], 0)
+        res = np.array(args["Out"], np.float32)
+        res[:M] = out
+        return {"Out": res}
+
+    return prog, oracle
+
+
+# ---------------------------------------------------------------------------
 def dot_product() -> Tuple[ir.Program, Callable]:
     b = Builder("dot_product", [Ptr("A"), Ptr("B"), Ptr("Out"), Scalar("n")])
     i = b.global_id(0)
@@ -652,6 +699,11 @@ EXAMPLES: Dict[str, Tuple[int, int, Callable, Tuple[str, ...]]] = {
         "A": rng.normal(size=64).astype(np.float32),
         "W": rng.normal(size=8).astype(np.float32),
         "Out": np.zeros(64, np.float32), "taps": 4}, ("Out",)),
+    "decode_gemv": (4, 16, lambda rng: {
+        "W": rng.normal(size=(64, 32)).astype(np.float32).reshape(-1),
+        "X": rng.normal(size=32).astype(np.float32),
+        "R": rng.normal(size=64).astype(np.float32),
+        "Out": np.zeros(64, np.float32), "K": 32, "ktiles": 4}, ("Out",)),
 }
 
 
@@ -684,4 +736,5 @@ SUITE: Dict[str, Callable] = {
     "tap_filter": tap_filter,
     "dyn_matmul": dyn_matmul,
     "dyn_fir": dyn_fir,
+    "decode_gemv": decode_gemv,
 }

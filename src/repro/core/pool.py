@@ -1,0 +1,120 @@
+"""Device-memory pooling for the serving tier (paper §4.3 memory
+abstraction under load).
+
+The driver API hands out :class:`~repro.core.runtime.DeviceBuffer`
+handles; a serving workload allocates and frees thousands of short-lived
+buffers per second, and backing each one with a fresh ``np.zeros`` turns
+the allocator into the hot path.  :class:`BufferPool` is a size-class
+sub-allocator: backings are carved in power-of-two element classes, a
+freed buffer's backing returns to the class free list, and the next
+``alloc`` of a compatible (dtype, class) reuses it — zeroed, so the
+"fresh allocation is zero-initialized" contract holds either way.
+
+The pool is bounded (``max_bytes``, env ``HETGPU_POOL_MAX_BYTES``):
+backings past the bound are dropped to the host allocator instead of
+accumulating.  ``stats()`` exposes hit/miss/reuse-rate counters — the
+serving benchmark's steady-state acceptance bar is a ≥ 90% reuse rate.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+#: floor for the smallest size class, in elements — tiny buffers all land
+#: in one class so a mixed small-allocation workload still pools well
+_MIN_CLASS = 64
+
+#: default pool bound: 64 MiB of retained free backings
+_DEFAULT_MAX_BYTES = 64 << 20
+
+
+def size_class(size: int) -> int:
+    """The pooled capacity (in elements) that backs a ``size``-element
+    request: the next power of two, floored at ``_MIN_CLASS``."""
+    size = max(int(size), 1)
+    cls = _MIN_CLASS
+    while cls < size:
+        cls <<= 1
+    return cls
+
+
+class BufferPool:
+    """Size-class free lists of ndarray backings, keyed by (dtype, class).
+
+    ``take(size, np_dtype)`` returns a zeroed backing of
+    ``size_class(size)`` elements (the caller views the first ``size``);
+    ``release(backing)`` returns it for reuse.  Both are O(1).  A
+    ``max_bytes=0`` (or ``enabled=False``) pool degenerates to plain
+    allocation — every take is a miss, every release a drop."""
+
+    def __init__(self, max_bytes: Optional[int] = None,
+                 enabled: bool = True):
+        if max_bytes is None:
+            max_bytes = int(os.environ.get("HETGPU_POOL_MAX_BYTES",
+                                           _DEFAULT_MAX_BYTES))
+        self.max_bytes = int(max_bytes)
+        self.enabled = bool(enabled) and self.max_bytes > 0
+        self._free: Dict[Tuple[str, int], List[np.ndarray]] = {}
+        self.pooled_bytes = 0
+        self.hits = 0          # takes served from a free list
+        self.misses = 0        # takes that hit the host allocator
+        self.released = 0      # backings accepted back into the pool
+        self.dropped = 0       # releases past the bound (or disabled)
+
+    # ------------------------------------------------------------------
+    def take(self, size: int, np_dtype: np.dtype) -> np.ndarray:
+        """A zeroed backing array of ``size_class(size)`` elements."""
+        np_dtype = np.dtype(np_dtype)
+        cls = size_class(size)
+        lst = self._free.get((np_dtype.str, cls))
+        if lst:
+            backing = lst.pop()
+            self.pooled_bytes -= backing.nbytes
+            self.hits += 1
+            backing[:size] = 0          # the visible span must read as fresh
+            return backing
+        self.misses += 1
+        return np.zeros(cls, dtype=np_dtype)
+
+    def release(self, backing: np.ndarray) -> bool:
+        """Return a backing to its class free list.  Returns False when the
+        pool is full (or disabled) and the backing was dropped instead."""
+        if not self.enabled \
+                or self.pooled_bytes + backing.nbytes > self.max_bytes:
+            self.dropped += 1
+            return False
+        key = (backing.dtype.str, backing.size)
+        self._free.setdefault(key, []).append(backing)
+        self.pooled_bytes += backing.nbytes
+        self.released += 1
+        return True
+
+    def trim(self) -> int:
+        """Drop every retained backing (e.g. before handing memory back to
+        the host).  Returns the number of bytes released."""
+        freed = self.pooled_bytes
+        self._free.clear()
+        self.pooled_bytes = 0
+        return freed
+
+    # ------------------------------------------------------------------
+    def reuse_rate(self) -> float:
+        """Fraction of takes served from the pool."""
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> Dict[str, object]:
+        return {
+            "hits": self.hits, "misses": self.misses,
+            "released": self.released, "dropped": self.dropped,
+            "pooled_bytes": self.pooled_bytes,
+            "max_bytes": self.max_bytes,
+            "free_lists": len(self._free),
+            "reuse_rate": round(self.reuse_rate(), 4),
+        }
+
+    def __repr__(self) -> str:
+        return (f"<BufferPool {self.pooled_bytes}/{self.max_bytes}B "
+                f"reuse={self.reuse_rate():.2%}>")

@@ -14,15 +14,29 @@ APIs present theirs — as an *object model*, not a string-keyed grab-bag:
   :meth:`DeviceBuffer.copy_to_host` / :meth:`~DeviceBuffer.copy_from_host`
   transfers and no name-matching writeback.
 * :meth:`Function.launch_async` enqueues onto a real :class:`Stream` and
-  returns a :class:`LaunchRecord` future.  A cooperative round-robin
-  scheduler interleaves *segments* (the unit between barriers — see
-  :mod:`~repro.core.engine`) from concurrent streams, so two async
-  launches genuinely overlap at segment granularity, observable in
-  ``HetSession.sched_trace``.
+  returns a :class:`LaunchRecord` future.  A cooperative priority /
+  weighted-fair-share scheduler interleaves *segments* (the unit between
+  barriers — see :mod:`~repro.core.engine`) from concurrent streams —
+  equal weights degenerate to exact round-robin — so two async launches
+  genuinely overlap at segment granularity, observable in
+  ``HetSession.sched_trace`` (a capped ring).
 * :class:`Event` objects give cross-stream ordering
   (:meth:`Stream.record_event` / :meth:`Stream.wait_event` / ``query`` /
   ``synchronize``), with CUDA's semantics (waiting on a never-recorded
   event is a no-op).
+* The scheduler is a **priority / weighted-fair-share** segment scheduler
+  (the serving tier): each :class:`Stream` carries a ``weight`` and a
+  ``priority``, the session picks the runnable stream with the highest
+  priority and least weighted virtual time for each segment, preemption
+  happens at segment boundaries (via the engine's segment-boundary yield
+  hook), and a starvation guard periodically serves the longest-waiting
+  stream so zero-weight / low-priority work still progresses.
+* :meth:`DeviceBuffer.copy_from_host_async` /
+  :meth:`~DeviceBuffer.copy_to_host_async` enqueue data movement as
+  stream work items, so copies participate in stream ordering *and* in
+  scheduling; :meth:`HetSession.alloc` sub-allocates from a bounded
+  :class:`~repro.core.pool.BufferPool` so short-lived serving buffers
+  reuse backings instead of thrashing the host allocator.
 * ``checkpoint`` / :func:`migrate` work on in-flight async launches at
   their next barrier; :class:`DeviceBuffer` identity survives restore
   within a session (a restored launch re-binds the live buffer by uid)
@@ -46,6 +60,7 @@ old→new table.
 from __future__ import annotations
 
 import itertools
+import os
 import time
 import uuid
 import warnings
@@ -62,7 +77,65 @@ from .backends.base import Backend
 from .cache import DiskStore, TranslationCache
 from .engine import Engine
 from .passes import DEFAULT_OPT_LEVEL, OPT_MAX
+from .pool import BufferPool
 from .state import Snapshot
+
+#: default ``sched_trace`` ring capacity — generous enough that every
+#: existing test window fits whole, small enough that a serving session
+#: driving millions of segments stays bounded
+_DEFAULT_TRACE_CAP = 100_000
+
+#: a zero-weight stream's virtual time advances this fast per segment —
+#: effectively "never pick me on weight grounds"; only the starvation
+#: guard (or an otherwise-idle session) serves it
+_ZERO_WEIGHT_RATE = 1e9
+
+
+class TraceRing:
+    """The scheduler trace as a capped ring buffer: list-like for readers
+    (iteration, indexing, ``len``, ``clear``), but appends past ``cap``
+    evict the oldest entry and bump ``dropped`` — a serving session that
+    executes millions of segments keeps a bounded window of the most
+    recent ones instead of leaking one dict per segment."""
+
+    __slots__ = ("_d", "dropped")
+
+    def __init__(self, cap: int = _DEFAULT_TRACE_CAP):
+        if cap <= 0:
+            raise ValueError(f"trace cap must be positive, got {cap}")
+        self._d: deque = deque(maxlen=int(cap))
+        self.dropped = 0
+
+    @property
+    def cap(self) -> int:
+        return self._d.maxlen
+
+    def append(self, item: Dict[str, object]) -> None:
+        if len(self._d) == self._d.maxlen:
+            self.dropped += 1
+        self._d.append(item)
+
+    def clear(self) -> None:
+        """Empty the window (``dropped`` stays cumulative)."""
+        self._d.clear()
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __iter__(self):
+        return iter(self._d)
+
+    def __getitem__(self, idx):
+        if isinstance(idx, slice):
+            return list(self._d)[idx]
+        return self._d[idx]
+
+    def __bool__(self) -> bool:
+        return bool(self._d)
+
+    def __repr__(self) -> str:
+        return (f"<TraceRing {len(self._d)}/{self.cap} "
+                f"dropped={self.dropped}>")
 
 # Buffer uids must stay unique across sessions *and* across processes
 # (snapshots carry them; restore re-binds by uid, and a false match would
@@ -95,13 +168,20 @@ class DeviceBuffer:
     Kernels mutate the buffer **in place**: after a launch that bound this
     buffer completes, ``data`` holds the kernel's writes — same object,
     no name matching, no implicit writeback.  Host transfers are explicit
-    (:meth:`copy_to_host` returns a defensive copy).
+    (:meth:`copy_to_host` returns a defensive copy); the ``_async``
+    variants enqueue the transfer on a :class:`Stream` instead, so it
+    runs in stream order and participates in scheduling.
+
+    Backings come from the session's :class:`~repro.core.pool.BufferPool`
+    when one is attached: ``data`` is a ``size``-element view of a
+    size-class backing, and :meth:`free` returns the backing for reuse.
     """
 
-    __slots__ = ("session", "uid", "dtype", "data", "freed")
+    __slots__ = ("session", "uid", "dtype", "data", "freed", "_backing")
 
     def __init__(self, session: "HetSession", size: int,
-                 dtype: object = np.float32, uid: Optional[str] = None):
+                 dtype: object = np.float32, uid: Optional[str] = None,
+                 pool: Optional[BufferPool] = None):
         self.session = session
         self.uid = uid if uid is not None else _next_uid()
         # non-hetIR dtypes (f64, f16, ...) are allocatable for host-side
@@ -113,7 +193,13 @@ class DeviceBuffer:
         except TypeError:
             self.dtype = None
             np_dt = np.dtype(dtype)
-        self.data = np.zeros(int(size), dtype=np_dt)
+        size = int(size)
+        if pool is not None:
+            self._backing: Optional[np.ndarray] = pool.take(size, np_dt)
+            self.data = self._backing[:size]
+        else:
+            self._backing = None
+            self.data = np.zeros(size, dtype=np_dt)
         self.freed = False
 
     # -- geometry ----------------------------------------------------------
@@ -147,6 +233,34 @@ class DeviceBuffer:
         self._check_alive()
         return self.data.copy()
 
+    # -- asynchronous transfers (stream work items) ------------------------
+    def copy_from_host_async(self, host, stream: Optional["Stream"] = None
+                             ) -> "CopyRecord":
+        """Enqueue an H2D copy on ``stream`` (default stream if None) and
+        return a :class:`CopyRecord` future.  The copy executes in stream
+        order — work enqueued after it observes the new contents — and
+        counts as one unit of scheduled work, so data movement competes
+        under the same fair-share policy as kernels.  Like the driver
+        APIs' async memcpy, ``host`` must stay unmodified until the copy
+        completes (the array is referenced, not staged)."""
+        self._check_alive()
+        arr = np.asarray(host)
+        if arr.size != self.size:
+            raise ValueError(
+                f"host array has {arr.size} elements, buffer holds "
+                f"{self.size}")
+        return self.session._enqueue_copy("h2d", self, stream, host=arr)
+
+    def copy_to_host_async(self, stream: Optional["Stream"] = None
+                           ) -> "CopyRecord":
+        """Enqueue a D2H copy on ``stream``; the returned
+        :class:`CopyRecord`'s :meth:`~CopyRecord.result` holds the buffer
+        contents *as of the copy's position in the stream* once it
+        completes (enqueue before a launch to read the pre-launch
+        state — CUDA stream semantics)."""
+        self._check_alive()
+        return self.session._enqueue_copy("d2h", self, stream)
+
     def fill(self, value) -> "DeviceBuffer":
         self._check_alive()
         self.data.fill(value)
@@ -154,9 +268,17 @@ class DeviceBuffer:
 
     def free(self) -> None:
         """Release the handle (drops the session's uid registration; a
-        later restore can no longer re-bind this buffer)."""
+        later restore can no longer re-bind this buffer, and queued work
+        that still binds it fails with a use-after-free error when it
+        reaches the stream front).  The backing returns to the session's
+        buffer pool for reuse.  Idempotent."""
+        if self.freed:
+            return
         self.session._buffers_by_uid.pop(self.uid, None)
         self.freed = True
+        backing, self._backing = self._backing, None
+        if backing is not None:
+            self.session.pool.release(backing)
 
     def _check_alive(self) -> None:
         if self.freed:
@@ -226,22 +348,111 @@ class _EventWait:
         return self.event._last_retired_generation >= self.generation
 
 
+class CopyRecord:
+    """Future for an asynchronous host↔device copy: a first-class stream
+    work item (the scheduler executes it at the stream front, one
+    scheduling unit, traced as ``<h2d>`` / ``<d2h>``), with the same
+    future surface as a :class:`LaunchRecord` (``done`` / ``wait``)."""
+
+    __slots__ = ("session", "kind", "buffer", "stream", "seq", "finished",
+                 "_host", "_array")
+
+    def __init__(self, session: "HetSession", kind: str,
+                 buffer: DeviceBuffer, stream: "Stream",
+                 host: Optional[np.ndarray] = None):
+        self.session = session
+        self.kind = kind                      # "h2d" | "d2h"
+        self.buffer = buffer
+        self.stream = stream
+        self.seq = next(session._seq)
+        self.finished = False
+        self._host = host
+        self._array: Optional[np.ndarray] = None
+
+    def done(self) -> bool:
+        return self.finished
+
+    def wait(self) -> bool:
+        """Drive the scheduler until this copy completes.  Returns False
+        if blocked by paused work."""
+        ok = self.session._drain(until=lambda: self.finished)
+        return ok and self.finished
+
+    def result(self) -> np.ndarray:
+        """The copied host array (D2H only) — waits if still pending."""
+        if self.kind != "d2h":
+            raise ValueError("result() is only defined for d2h copies")
+        if not self.finished and not self.wait():
+            raise RuntimeError("d2h copy blocked on paused work")
+        return self._array
+
+    def _execute(self) -> None:
+        db = self.buffer
+        if db.freed:
+            raise RuntimeError(
+                f"async {self.kind} copy #{self.seq} on stream "
+                f"{self.stream.sid}: buffer {db.uid} was freed before the "
+                "copy reached the stream front — device memory must stay "
+                "alive until queued work that binds it has run")
+        if self.kind == "h2d":
+            np.copyto(db.data, self._host.reshape(-1), casting="same_kind")
+            self._host = None
+        else:
+            self._array = db.data.copy()
+        self.finished = True
+
+    def __repr__(self) -> str:
+        state = "finished" if self.finished else "queued"
+        return (f"<CopyRecord #{self.seq} {self.kind} {self.buffer.uid} "
+                f"stream={self.stream.sid} {state}>")
+
+
 class Stream:
     """An in-order work queue with genuinely asynchronous execution: the
-    session's round-robin scheduler interleaves segments from all runnable
-    streams.  Within a stream, a launch only *starts* (binds its buffers
-    and translates) once everything before it has completed — so same-
-    stream dataflow through a :class:`DeviceBuffer` behaves like CUDA
-    stream ordering."""
+    session's priority / weighted-fair-share scheduler hands out segments
+    to runnable streams.  Within a stream, a launch only *starts* (binds
+    its buffers and translates) once everything before it has completed —
+    so same-stream dataflow through a :class:`DeviceBuffer` behaves like
+    CUDA stream ordering.
 
-    def __init__(self, session: "HetSession", sid: int):
+    Scheduling knobs (the serving tier's policy surface):
+
+    * ``weight`` — fair-share weight: over any window where a set of
+      streams stays backlogged, each receives segment service roughly
+      proportional to its weight.  ``0`` opts the stream out of weighted
+      competition entirely; it only runs via the starvation guard or when
+      nothing else is runnable.
+    * ``priority`` — strict tiers: a runnable higher-priority stream is
+      always served first (and *preempts* a lower-priority stream's
+      multi-segment quantum at the next segment boundary).  Fair share
+      applies within a tier.  The starvation guard is the backstop that
+      keeps lower tiers alive under sustained high-priority load.
+    * ``quantum`` — segments granted per scheduling decision (default 1 =
+      finest interleaving; serving fronts raise it to cut scheduler
+      overhead per segment).
+    """
+
+    def __init__(self, session: "HetSession", sid: int,
+                 weight: float = 1.0, priority: int = 0, quantum: int = 1):
+        if weight < 0:
+            raise ValueError(f"stream weight must be >= 0, got {weight}")
         self.session = session
         self.sid = sid
+        self.weight = float(weight)
+        self.priority = int(priority)
+        self.quantum = max(1, int(quantum))
         self._q: deque = deque()
         #: cooperative per-stream pause: the scheduler stops stepping this
         #: stream's launches (they hold at their current barrier — the
         #: checkpoint hook), while other streams keep running.
         self.paused = False
+        self.destroyed = False
+        # weighted-fair bookkeeping: virtual time consumed (advances by
+        # 1/weight per executed segment) and the pick counter at the last
+        # scheduling decision that chose this stream (starvation guard +
+        # tie-break).
+        self._vtime = 0.0
+        self._last_pick = 0
 
     # -- queue state -------------------------------------------------------
     def query(self) -> bool:
@@ -254,6 +465,31 @@ class Stream:
         progress stopped on paused work."""
         return self.session._drain(until=lambda: not self._q)
 
+    # -- retirement --------------------------------------------------------
+    def destroy(self) -> None:
+        """Retire the stream: refuse further work and drop it from the
+        scheduler's scan set, so long-lived sessions that create many
+        short-lived streams keep stepping in O(active streams).  Refuses
+        while work is pending (drain first); the default stream cannot be
+        destroyed."""
+        if self.destroyed:
+            return
+        self.session._settle()
+        if self._q:
+            raise RuntimeError(
+                f"cannot destroy stream {self.sid}: {len(self._q)} work "
+                "item(s) still pending — synchronize() it first")
+        if self is self.session.default_stream:
+            raise ValueError("the default stream cannot be destroyed")
+        self.destroyed = True
+        self.session._retire_stream(self)
+
+    def _check_usable(self) -> None:
+        if self.destroyed:
+            raise RuntimeError(
+                f"stream {self.sid} has been destroyed — create a new "
+                "stream with session.stream()")
+
     # -- pause (cooperative checkpoint) ------------------------------------
     def pause(self) -> None:
         self.paused = True
@@ -263,6 +499,7 @@ class Stream:
 
     # -- events ------------------------------------------------------------
     def record_event(self, event: Optional[Event] = None) -> Event:
+        self._check_usable()
         ev = event if event is not None else Event(self.session)
         ev._session = self.session
         ev._recorded = True
@@ -277,14 +514,25 @@ class Stream:
         record point is reached (CUDA semantics: a later re-record does
         not move an already-issued wait).  A never-recorded or
         already-complete event is a no-op."""
+        self._check_usable()
         self.session._settle()
         if not event._recorded \
                 or event._last_retired_generation >= event._generation:
             return
         self._q.append(_EventWait(event, event._generation))
 
-    def _enqueue(self, rec: "LaunchRecord") -> None:
+    def _enqueue(self, rec) -> None:
+        self._check_usable()
+        if not self._q:
+            # idle -> runnable: catch the virtual clock up so a stream
+            # that slept does not monopolize the scheduler on wake
+            self._vtime = max(self._vtime, self.session._vclock)
         self._q.append(rec)
+
+    def _charge(self, units: float = 1.0) -> None:
+        """Advance virtual time by ``units`` of weighted service."""
+        rate = 1.0 / self.weight if self.weight > 0 else _ZERO_WEIGHT_RATE
+        self._vtime += units * rate
 
     def _describe_front(self) -> str:
         if not self._q:
@@ -294,11 +542,15 @@ class Stream:
             return "waiting on event"
         if isinstance(item, _EventRecord):
             return "event record"
+        if isinstance(item, CopyRecord):
+            return f"{item.kind} copy #{item.seq}"
         return f"launch #{item.seq} ({item.program_name})"
 
     def __repr__(self) -> str:
         flags = " paused" if self.paused else ""
-        return f"<Stream {self.sid} depth={len(self._q)}{flags}>"
+        flags += " destroyed" if self.destroyed else ""
+        return (f"<Stream {self.sid} w={self.weight:g} p={self.priority} "
+                f"depth={len(self._q)}{flags}>")
 
 
 # ---------------------------------------------------------------------------
@@ -367,6 +619,18 @@ class LaunchRecord:
 
     def _materialize(self) -> None:
         s = self.session
+        # use-after-free guard: a buffer freed between launch_async and
+        # the lazy stream-front bind still *has* a ``.data`` array, so
+        # without this check the launch would silently execute against
+        # released memory (and its writes would vanish at _finish, which
+        # skips freed buffers).  Fail loudly instead.
+        for pname, db in self.bindings.items():
+            if db.freed:
+                raise RuntimeError(
+                    f"launch #{self.seq} ({self.program_name}): buffer "
+                    f"parameter {pname!r} ({db.uid}) was freed before the "
+                    "launch reached the stream front — device memory must "
+                    "stay alive until queued work that binds it has run")
         eng = Engine(self.function.program, s.backend, self.grid,
                      self.block, self._eng_args, opt_level=s.opt_level,
                      specialize=s.specialize)
@@ -386,7 +650,7 @@ class LaunchRecord:
 
     def wait(self) -> bool:
         """Drive the scheduler until this launch completes (other streams
-        make round-robin progress too — host-side sync, not serialization).
+        make fair-share progress too — host-side sync, not serialization).
         Returns False if blocked by a paused stream or the pause flag."""
         ok = self.session._drain(
             until=lambda: self.finished or self.cancelled)
@@ -597,10 +861,30 @@ class HetSession:
                  opt_level: Optional[int] = None,
                  cache: Optional[TranslationCache] = None,
                  store: Optional[Union[str, DiskStore]] = None,
-                 specialize: Optional[bool] = None):
+                 specialize: Optional[bool] = None,
+                 pool: Optional[Union[BufferPool, bool]] = None,
+                 trace_cap: Optional[int] = None,
+                 starvation_guard: Optional[int] = None):
         # specialize: None = policy default (HETGPU_SPECIALIZE / auto),
         # True = force launch-time specialization, False = always generic
         self.specialize = specialize
+        # pool: None = a default bounded BufferPool (HETGPU_POOL_MAX_BYTES),
+        # False = pooling off, or a caller-provided BufferPool instance
+        if pool is None or pool is True:
+            pool = BufferPool()
+        elif pool is False:
+            pool = BufferPool(enabled=False)
+        self.pool: BufferPool = pool
+        if trace_cap is None:
+            trace_cap = int(os.environ.get("HETGPU_SCHED_TRACE_CAP",
+                                           _DEFAULT_TRACE_CAP))
+        # starvation guard period: every Nth scheduling decision serves
+        # the longest-waiting runnable stream regardless of priority and
+        # weight (0 disables — pure priority/WFQ)
+        if starvation_guard is None:
+            starvation_guard = int(os.environ.get(
+                "HETGPU_STARVATION_GUARD", "32"))
+        self.starvation_guard = max(0, int(starvation_guard))
         self.backend_name = backend
         if store is not None and not isinstance(store, DiskStore):
             store = DiskStore(store)
@@ -625,12 +909,23 @@ class HetSession:
         self._functions: Dict[str, Function] = {}
         self._buffers_by_uid: Dict[str, DeviceBuffer] = {}
         self._seq = itertools.count()
+        #: the *active* streams — the scheduler's scan set.  Destroyed
+        #: streams are removed, so a long-lived serving session that has
+        #: created (and retired) thousands of streams still schedules in
+        #: O(active).
         self.streams: List[Stream] = []
+        self._sid_counter = itertools.count()
+        # scheduler state: decision counter (starvation guard + LRU
+        # tie-break) and the virtual clock newly-runnable streams sync to
+        self._picks = 0
+        self._vclock = 0.0
         self.default_stream = self.stream()          # sid 0
-        #: scheduler trace: one entry per executed segment
+        #: scheduler trace: one entry per executed segment or async copy
         #: {"stream", "kernel", "seq", "node_idx"} — the observable
-        #: interleaving (tests assert alternation on it)
-        self.sched_trace: List[Dict[str, object]] = []
+        #: interleaving (tests assert alternation and fair shares on it).
+        #: A capped ring: the newest ``trace_cap`` entries are kept and
+        #: ``stats["sched_trace_dropped"]`` counts evictions.
+        self.sched_trace = TraceRing(trace_cap)
         self.pause_flag = False  # the paper's cooperative pause flag
 
         # -- legacy shim state --------------------------------------------
@@ -644,6 +939,8 @@ class HetSession:
         self.stats = {"launches": 0, "launch_ms": 0.0, "translate_ms": 0.0,
                       "translation_ms": 0.0,  # deprecated alias, see API.md
                       "segments_executed": 0, "migrations": 0,
+                      "async_copies": 0, "sched_trace_dropped": 0,
+                      "streams_retired": 0,
                       "cache_hits": 0, "cache_misses": 0,
                       "cache_evictions": 0, "cache_restored": 0,
                       "cache_translated": 0}
@@ -694,24 +991,53 @@ class HetSession:
     def alloc(self, shape, dtype: object = np.float32) -> DeviceBuffer:
         """Allocate a typed :class:`DeviceBuffer` (zero-initialized).
         ``shape`` may be an int or a tuple — device memory is linear, so
-        multi-dim shapes are flattened to their total size."""
+        multi-dim shapes are flattened to their total size.  Backings are
+        sub-allocated from the session's bounded :class:`BufferPool`
+        (``pool=False`` to opt out), so alloc/free churn under serving
+        load reuses memory instead of thrashing the host allocator."""
         size = int(shape) if isinstance(shape, (int, np.integer)) \
             else int(np.prod(shape))
-        db = DeviceBuffer(self, size, dtype)
+        db = DeviceBuffer(self, size, dtype, pool=self.pool)
         self._buffers_by_uid[db.uid] = db
         return db
 
+    def pool_stats(self) -> Dict[str, object]:
+        """Buffer-pool counters (hits/misses/reuse_rate/pooled_bytes)."""
+        return self.pool.stats()
+
     # -- streams and events ------------------------------------------------
-    def stream(self) -> Stream:
-        """Create a new asynchronous stream."""
-        st = Stream(self, len(self.streams))
+    def stream(self, weight: float = 1.0, priority: int = 0,
+               quantum: int = 1) -> Stream:
+        """Create a new asynchronous stream with fair-share scheduling
+        policy: ``weight`` (share of segment service while backlogged;
+        0 = guard-only), ``priority`` (strict tiers, higher first), and
+        ``quantum`` (segments per scheduling decision)."""
+        st = Stream(self, next(self._sid_counter), weight=weight,
+                    priority=priority, quantum=quantum)
         self.streams.append(st)
         return st
+
+    def _retire_stream(self, st: Stream) -> None:
+        try:
+            self.streams.remove(st)
+        except ValueError:
+            pass
+        self.stats["streams_retired"] += 1
+
+    def _enqueue_copy(self, kind: str, db: DeviceBuffer,
+                      stream: Optional[Stream],
+                      host: Optional[np.ndarray] = None) -> CopyRecord:
+        st = stream if stream is not None else self.default_stream
+        if st.session is not self:
+            raise ValueError("stream belongs to a different session")
+        rec = CopyRecord(self, kind, db, st, host=host)
+        st._enqueue(rec)
+        return rec
 
     def event(self) -> Event:
         return Event(self)
 
-    # -- the cooperative round-robin scheduler -----------------------------
+    # -- the cooperative fair-share segment scheduler ----------------------
     def _settle(self) -> None:
         """Retire every ripe non-launch queue item (event records at queue
         front, waits whose event completed) without executing segments."""
@@ -743,11 +1069,13 @@ class HetSession:
                         break
 
     def step(self, passes: int = 1) -> bool:
-        """Public scheduler stepping: run up to ``passes`` round-robin
-        passes, each advancing every runnable stream by one *segment*
-        (the paper's barrier-to-barrier unit).  Returns True iff any
-        progress was made — the hook cooperative serving layers (and the
-        stream tests) drive."""
+        """Public scheduler stepping: make up to ``passes`` scheduling
+        decisions.  Each decision picks one runnable stream under the
+        priority / weighted-fair-share policy and advances it by up to its
+        ``quantum`` of *segments* (the paper's barrier-to-barrier unit) —
+        with equal weights and the default quantum of 1 this degenerates
+        to exact round-robin.  Returns True iff any progress was made —
+        the hook cooperative serving layers (and the stream tests) drive."""
         progressed = False
         for _ in range(passes):
             if not self._step():
@@ -755,27 +1083,106 @@ class HetSession:
             progressed = True
         return progressed
 
+    def _runnable(self) -> List[Stream]:
+        """Streams whose front item is executable work (a launch or an
+        async copy) right now.  Callers settle first, so event markers at
+        queue fronts have already been retired."""
+        return [st for st in self.streams
+                if st._q and not st.paused
+                and isinstance(st._q[0], (LaunchRecord, CopyRecord))]
+
+    def _pick(self) -> Optional[Stream]:
+        """One scheduling decision: highest priority tier first, least
+        weighted virtual time within the tier (ties broken
+        least-recently-served, then by sid).  Every ``starvation_guard``-th
+        decision instead serves the longest-waiting runnable stream
+        outright — the guard that keeps zero-weight / low-priority
+        streams progressing under sustained load."""
+        if self.pause_flag:
+            return None
+        runnable = self._runnable()
+        if not runnable:
+            return None
+        self._picks += 1
+        guard = self.starvation_guard
+        if guard and self._picks % guard == 0:
+            st = min(runnable, key=lambda s: (s._last_pick, s.sid))
+        else:
+            # zero-weight streams opt out of competition entirely: they
+            # are served by the guard or when nothing weighted is
+            # runnable, and never advance the virtual clock
+            weighted = [s for s in runnable if s.weight > 0]
+            pool_ = weighted or runnable
+            top = max(s.priority for s in pool_)
+            st = min((s for s in pool_ if s.priority == top),
+                     key=lambda s: (s._vtime, s._last_pick, s.sid))
+        st._last_pick = self._picks
+        if st.weight > 0:
+            self._vclock = max(self._vclock, st._vtime)
+        return st
+
+    def _preempt_for_higher_priority(self, cur: Stream) -> bool:
+        """Mid-quantum yield check (the engine's segment-boundary hook):
+        a runnable stream in a strictly higher priority tier takes the
+        next scheduling decision."""
+        return any(st.priority > cur.priority for st in self._runnable()
+                   if st is not cur)
+
+    def _trace(self, st: Stream, kernel: str, seq: int,
+               node_idx: int) -> None:
+        self.sched_trace.append(
+            {"stream": st.sid, "kernel": kernel, "seq": seq,
+             "node_idx": node_idx})
+        self.stats["sched_trace_dropped"] = self.sched_trace.dropped
+
     def _step(self) -> bool:
         self._settle()
-        progressed = False
-        for st in list(self.streams):
-            if st.paused or self.pause_flag or not st._q:
-                continue
-            item = st._q[0]
-            if not isinstance(item, LaunchRecord):
-                continue        # blocked on an event wait
+        st = self._pick()
+        if st is None:
+            return False
+        item = st._q[0]
+        if isinstance(item, CopyRecord):
+            # data movement is scheduled work: one decision, one copy
+            try:
+                item._execute()
+            except Exception:
+                st._q.popleft()     # don't wedge the stream on the error
+                raise
+            st._q.popleft()
+            st._charge(1.0)
+            self._trace(st, f"<{item.kind}>", item.seq, -1)
+            self.stats["async_copies"] += 1
+            self._settle()
+            return True
+        try:
             eng = item.engine   # lazy copy-in happens here, at start
-            finished = eng.run(max_segments=1)
-            self.sched_trace.append(
-                {"stream": st.sid, "kernel": eng.program.name,
-                 "seq": item.seq, "node_idx": eng.node_idx})
+        except Exception:
+            # e.g. a freed-buffer bind: withdraw the poisoned launch so
+            # the stream is not permanently wedged, then surface it
+            st._q.popleft()
+            item.cancelled = True
+            raise
+        quantum = st.quantum
+        executed = 0
+
+        def _boundary(e: Engine) -> bool:
+            # segment-boundary yield hook: trace + charge each segment,
+            # end the quantum when it is spent or a higher-priority
+            # stream became runnable (preemption at the barrier)
+            nonlocal executed
+            executed += 1
+            st._charge(1.0)
+            self._trace(st, e.program.name, item.seq, e.node_idx)
             self.stats["segments_executed"] += 1
-            progressed = True
-            if finished:
-                st._q.popleft()
-                item._finish()
+            return (executed >= quantum
+                    or self._preempt_for_higher_priority(st))
+
+        finished = eng.run(on_segment=_boundary)
+        if finished:
+            st._q.popleft()
+            item._finish()
         self._settle()
-        return progressed
+        return True
 
     def _drain(self, until: Optional[Callable[[], bool]] = None) -> bool:
         """Drive the scheduler until ``until()`` holds (or, with no
@@ -1016,10 +1423,12 @@ class HetSession:
                     eng_args[p.name] = v
                     bindings[p.name] = v
                 elif named is not None and isinstance(v, np.ndarray) \
-                        and (v is named.data or v.base is named.data):
+                        and np.shares_memory(v, named.data):
                     # the async-writeback fix: an explicitly passed
                     # session buffer (or a gpu_malloc-returned view of
-                    # it) is still a session buffer
+                    # it) is still a session buffer — identity via
+                    # shares_memory because a pooled buffer's views
+                    # collapse their ``.base`` to the pool backing
                     eng_args[p.name] = named
                     bindings[p.name] = named
                 else:

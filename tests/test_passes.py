@@ -96,6 +96,12 @@ def _suite_cases():
          {"A": RNG.normal(size=64).astype(np.float32),
           "W": RNG.normal(size=5).astype(np.float32),
           "Out": np.zeros(64, np.float32), "taps": 5}, ["Out"]),
+        ("decode_gemv", 4, 16,
+         {"W": RNG.normal(size=64 * 32).astype(np.float32),
+          "X": RNG.normal(size=32).astype(np.float32),
+          "R": RNG.normal(size=64).astype(np.float32),
+          "Out": np.zeros(64, np.float32), "K": 32, "ktiles": 3},
+         ["Out"]),
     ]
 
 

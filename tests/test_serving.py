@@ -1,0 +1,447 @@
+"""Serving tier: weighted-fair-share scheduling (shares, starvation
+guard, priority preemption), buffer pooling, async copies as scheduled
+stream work, the serving-scale runtime fixes (sched_trace ring cap,
+use-after-free detection on queued launches, stream retirement), and the
+ServingFrontEnd coordinator's quota-based admission control."""
+import numpy as np
+import pytest
+
+from repro.core import (BufferPool, HetSession, QuotaExceeded,
+                        ServingFrontEnd, TranslationCache)
+from repro.core import kernels_suite as suite
+from repro.core.pool import size_class
+
+RNG = np.random.default_rng(23)
+
+
+def _counter_session(**kw):
+    s = HetSession("vectorized", cache=TranslationCache(), **kw)
+    fn = s.load(suite.persistent_counter()[0]).function()
+    return s, fn
+
+
+def _state(s, value=0.0):
+    return s.alloc(64).copy_from_host(np.full(64, value, np.float32))
+
+
+def _backlog(s, fn, streams, iters=8, launches=3):
+    """Keep every stream backlogged with multi-segment launches."""
+    recs = []
+    for st in streams:
+        for _ in range(launches):
+            recs.append(fn.launch_async(
+                2, 32, {"State": _state(s), "iters": iters}, stream=st))
+    return recs
+
+
+def _shares(s, sids):
+    counts = {sid: 0 for sid in sids}
+    for t in s.sched_trace:
+        if t["stream"] in counts:
+            counts[t["stream"]] += 1
+    total = sum(counts.values()) or 1
+    return {sid: c / total for sid, c in counts.items()}
+
+
+# ---------------------------------------------------------------------------
+# Weighted fair share
+# ---------------------------------------------------------------------------
+
+def test_weighted_shares_match_weights():
+    """Over a window where all streams stay backlogged, segment service
+    splits proportionally to weight (guard off: pure WFQ)."""
+    s, fn = _counter_session(starvation_guard=0)
+    w = {1.0: None, 2.0: None, 4.0: None}
+    streams = [s.stream(weight=wt) for wt in w]
+    _backlog(s, fn, streams, iters=30, launches=4)
+    s.sched_trace.clear()
+    s.step(140)                       # all streams still backlogged after
+    shares = _shares(s, [st.sid for st in streams])
+    total_w = sum(st.weight for st in streams)
+    for st in streams:
+        want = st.weight / total_w
+        got = shares[st.sid]
+        assert abs(got - want) <= 0.15 * want + 0.02, \
+            f"stream {st.sid} w={st.weight}: share {got:.3f} vs {want:.3f}"
+    assert s.synchronize()
+
+
+def test_equal_weights_degenerate_to_round_robin():
+    s, fn = _counter_session(starvation_guard=0)
+    st1, st2 = s.stream(), s.stream()
+    _backlog(s, fn, [st1, st2], iters=6, launches=1)
+    s.sched_trace.clear()
+    assert s.synchronize()
+    ids = [t["stream"] for t in s.sched_trace]
+    assert all(a != b for a, b in zip(ids, ids[1:])), ids
+
+
+def test_late_waker_does_not_monopolize():
+    """A stream that sat idle while another accumulated virtual time must
+    not get a catch-up burst when it wakes (vclock sync on enqueue)."""
+    s, fn = _counter_session(starvation_guard=0)
+    st1, st2 = s.stream(), s.stream()
+    fn.launch_async(2, 32, {"State": _state(s), "iters": 20}, stream=st1)
+    s.step(10)                        # st1 runs alone for a while
+    fn.launch_async(2, 32, {"State": _state(s), "iters": 20}, stream=st2)
+    s.sched_trace.clear()
+    s.step(10)
+    ids = [t["stream"] for t in s.sched_trace]
+    # st2 must not take more than ~half the window + slack
+    assert ids.count(st2.sid) <= 6, ids
+    assert s.synchronize()
+
+
+# ---------------------------------------------------------------------------
+# Starvation guard + priority
+# ---------------------------------------------------------------------------
+
+def test_zero_weight_stream_progresses_via_guard():
+    s, fn = _counter_session(starvation_guard=8)
+    fast = s.stream(weight=1.0)
+    starved = s.stream(weight=0.0)
+    _backlog(s, fn, [fast], iters=40, launches=4)
+    rec = fn.launch_async(2, 32, {"State": _state(s), "iters": 4},
+                          stream=starved)
+    s.sched_trace.clear()
+    s.step(100)
+    served = [t for t in s.sched_trace if t["stream"] == starved.sid]
+    assert served, "guard never served the zero-weight stream"
+    assert s.synchronize()
+    assert rec.finished
+
+
+def test_zero_weight_stream_starves_without_guard():
+    """Control: with the guard off, a zero-weight stream gets nothing
+    while a weighted stream stays backlogged."""
+    s, fn = _counter_session(starvation_guard=0)
+    fast = s.stream(weight=1.0)
+    starved = s.stream(weight=0.0)
+    _backlog(s, fn, [fast], iters=40, launches=4)
+    fn.launch_async(2, 32, {"State": _state(s), "iters": 4},
+                    stream=starved)
+    s.sched_trace.clear()
+    s.step(60)
+    assert not [t for t in s.sched_trace if t["stream"] == starved.sid]
+    assert s.synchronize()            # ...but it drains once fast is done
+
+
+def test_priority_tier_served_first_and_preempts_quantum():
+    """A higher-priority stream is served ahead of lower tiers, and a
+    lower-priority stream's multi-segment quantum yields at the next
+    segment boundary when high-priority work arrives."""
+    s, fn = _counter_session(starvation_guard=0)
+    low = s.stream(priority=0, quantum=100)   # would hog without preemption
+    high = s.stream(priority=5)
+    fn.launch_async(2, 32, {"State": _state(s), "iters": 30}, stream=low)
+    s.step(1)                         # low's quantum starts...
+    fn.launch_async(2, 32, {"State": _state(s), "iters": 3}, stream=high)
+    s.sched_trace.clear()
+    s.step(8)
+    ids = [t["stream"] for t in s.sched_trace]
+    assert high.sid in ids
+    first_high = ids.index(high.sid)
+    # preempted promptly: high ran within the first couple of decisions,
+    # and once runnable it finished before low got service again
+    assert first_high <= 2, ids
+    high_slots = [i for i, x in enumerate(ids) if x == high.sid]
+    assert high_slots == list(range(first_high,
+                                    first_high + len(high_slots))), ids
+    assert s.synchronize()
+
+
+# ---------------------------------------------------------------------------
+# sched_trace ring (fix #1)
+# ---------------------------------------------------------------------------
+
+def test_sched_trace_is_capped_with_dropped_counter():
+    s, fn = _counter_session(trace_cap=16)
+    recs = _backlog(s, fn, [s.stream()], iters=20, launches=2)
+    assert s.synchronize()
+    assert all(r.finished for r in recs)
+    assert len(s.sched_trace) <= 16
+    assert s.sched_trace.cap == 16
+    assert s.sched_trace.dropped > 0
+    assert s.stats["sched_trace_dropped"] == s.sched_trace.dropped
+    # ring keeps the *latest* entries and stays list-like
+    assert s.sched_trace[-1]["node_idx"] >= 0
+    assert len(s.sched_trace[:4]) == 4
+    # clear() empties the window but the drop counter is cumulative
+    before = s.sched_trace.dropped
+    s.sched_trace.clear()
+    assert len(s.sched_trace) == 0
+    assert s.sched_trace.dropped == before
+
+
+def test_trace_cap_env_override(monkeypatch):
+    monkeypatch.setenv("HETGPU_SCHED_TRACE_CAP", "7")
+    s = HetSession("vectorized", cache=TranslationCache())
+    assert s.sched_trace.cap == 7
+
+
+# ---------------------------------------------------------------------------
+# Use-after-free on queued launches (fix #2)
+# ---------------------------------------------------------------------------
+
+def test_freed_buffer_behind_queued_launch_raises_cleanly():
+    """enqueue -> free -> drain must fail loudly at materialization, not
+    silently compute on freed memory — and must not wedge the stream."""
+    s, fn = _counter_session()
+    st = s.stream()
+    keep = _state(s)
+    doomed = _state(s)
+    fn.launch_async(2, 32, {"State": keep, "iters": 4}, stream=st)
+    bad = fn.launch_async(2, 32, {"State": doomed, "iters": 4}, stream=st)
+    after = fn.launch_async(2, 32, {"State": keep, "iters": 4}, stream=st)
+    doomed.free()                     # while the launch is still queued
+    with pytest.raises(RuntimeError, match="freed before the launch"):
+        s.synchronize()
+    assert bad.cancelled and not bad.finished
+    # the stream is not wedged: the rest of the queue drains
+    assert s.synchronize()
+    assert after.finished
+
+
+def test_freed_buffer_behind_queued_copy_raises_cleanly():
+    s = HetSession("vectorized", cache=TranslationCache())
+    st = s.stream()
+    db = s.alloc(32)
+    rec = db.copy_to_host_async(stream=st)
+    db.free()
+    with pytest.raises(RuntimeError, match="freed before the copy"):
+        s.synchronize()
+    assert not rec.finished
+    assert s.synchronize()            # stream drained, not wedged
+
+
+# ---------------------------------------------------------------------------
+# Stream retirement (fix #3)
+# ---------------------------------------------------------------------------
+
+def test_destroyed_streams_leave_the_scan_set():
+    """1k drained-and-destroyed streams: the session scan set stays
+    O(active), retirement is counted, and scheduling still works."""
+    s, fn = _counter_session()
+    for _ in range(1000):
+        st = s.stream()
+        st.destroy()
+    assert len(s.streams) == 1        # just the default stream
+    assert s.stats["streams_retired"] == 1000
+    rec = fn.launch_async(2, 32, {"State": _state(s), "iters": 2})
+    assert s.synchronize() and rec.finished
+
+
+def test_destroy_refuses_with_pending_work():
+    s, fn = _counter_session()
+    st = s.stream()
+    fn.launch_async(2, 32, {"State": _state(s), "iters": 4}, stream=st)
+    with pytest.raises(RuntimeError, match="still pending"):
+        st.destroy()
+    assert st.synchronize()
+    st.destroy()                      # idempotent once drained
+    st.destroy()
+
+
+def test_destroy_default_stream_refused():
+    s = HetSession("vectorized", cache=TranslationCache())
+    with pytest.raises(ValueError):
+        s.default_stream.destroy()
+
+
+def test_destroyed_stream_rejects_new_work():
+    s, fn = _counter_session()
+    st = s.stream()
+    st.destroy()
+    with pytest.raises(RuntimeError, match="destroyed"):
+        fn.launch_async(2, 32, {"State": _state(s), "iters": 2}, stream=st)
+    with pytest.raises(RuntimeError, match="destroyed"):
+        st.record_event()
+
+
+# ---------------------------------------------------------------------------
+# Buffer pool
+# ---------------------------------------------------------------------------
+
+def test_pool_reuses_and_zeroes_backings():
+    s = HetSession("vectorized", cache=TranslationCache())
+    a = s.alloc(100)
+    backing_id = id(a._backing)
+    a.data[:] = 7.0
+    a.free()
+    b = s.alloc(90)                   # same size class (128)
+    assert id(b._backing) == backing_id
+    assert not b.data.any(), "pooled reuse must present zeroed memory"
+    st = s.pool_stats()
+    assert st["hits"] >= 1
+    assert 0.0 <= st["reuse_rate"] <= 1.0
+
+
+def test_pool_reuse_rate_converges_under_churn():
+    s = HetSession("vectorized", cache=TranslationCache())
+    for _ in range(300):
+        s.alloc(64).free()
+        s.alloc(200).free()
+    assert s.pool_stats()["reuse_rate"] >= 0.90
+
+
+def test_pool_respects_byte_bound():
+    pool = BufferPool(max_bytes=size_class(64) * 4)   # one f32 backing
+    s = HetSession("vectorized", cache=TranslationCache(), pool=pool)
+    bufs = [s.alloc(64) for _ in range(4)]
+    for b in bufs:
+        b.free()
+    st = s.pool_stats()
+    assert st["pooled_bytes"] <= st["max_bytes"]
+    assert st["dropped"] >= 3         # only one backing fit
+
+
+def test_pool_opt_out():
+    s = HetSession("vectorized", cache=TranslationCache(), pool=False)
+    db = s.alloc(64)
+    assert db._backing is None or not s.pool.enabled
+    db.free()
+    assert s.pool_stats()["hits"] == 0
+
+
+def test_double_free_is_idempotent():
+    s = HetSession("vectorized", cache=TranslationCache())
+    db = s.alloc(64)
+    db.free()
+    db.free()
+    assert s.pool_stats()["released"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Async copies as scheduled stream work
+# ---------------------------------------------------------------------------
+
+def test_async_copies_run_in_stream_order():
+    """A d2h enqueued before a launch observes pre-launch contents; one
+    enqueued after observes the kernel's writes (CUDA stream semantics)."""
+    s, fn = _counter_session()
+    st = s.stream()
+    db = s.alloc(64)
+    init = np.full(64, 2.0, np.float32)
+    up = db.copy_from_host_async(init, stream=st)
+    pre = db.copy_to_host_async(stream=st)
+    rec = fn.launch_async(2, 32, {"State": db, "iters": 3}, stream=st)
+    post = db.copy_to_host_async(stream=st)
+    assert not up.done() and not pre.done()
+    assert s.synchronize()
+    np.testing.assert_allclose(pre.result(), init)
+    oracle = suite.persistent_counter()[1]
+    np.testing.assert_allclose(
+        post.result(), oracle({"State": init.copy(), "iters": 3})["State"],
+        atol=1e-4, rtol=1e-4)
+    assert rec.finished
+    assert s.stats["async_copies"] == 3
+    kinds = [t["kernel"] for t in s.sched_trace
+             if t["kernel"] in ("<h2d>", "<d2h>")]
+    assert kinds == ["<h2d>", "<d2h>", "<d2h>"]
+
+
+def test_async_copy_competes_across_streams():
+    """Copies are scheduling units: a copy on one stream interleaves with
+    segments on another rather than jumping the fair-share queue."""
+    s, fn = _counter_session(starvation_guard=0)
+    st1, st2 = s.stream(), s.stream()
+    fn.launch_async(2, 32, {"State": _state(s), "iters": 6}, stream=st1)
+    db = s.alloc(64)
+    recs = [db.copy_from_host_async(np.full(64, i, np.float32), stream=st2)
+            for i in range(4)]
+    s.sched_trace.clear()
+    assert s.synchronize()
+    ids = [t["stream"] for t in s.sched_trace]
+    n_overlap = 2 * min(ids.count(st1.sid), ids.count(st2.sid))
+    assert n_overlap >= 6, ids
+    assert all(r.finished for r in recs)
+    np.testing.assert_allclose(db.copy_to_host(), np.full(64, 3.0))
+
+
+# ---------------------------------------------------------------------------
+# ServingFrontEnd: admission control + end-to-end
+# ---------------------------------------------------------------------------
+
+def test_quota_shedding_rejects_before_enqueue():
+    s, fn = _counter_session()
+    front = ServingFrontEnd(s, default_quota=2)
+    front.tenant("a")
+    args = lambda: {"State": _state(s), "iters": 2}   # noqa: E731
+    front.submit("a", fn, 2, 32, args())
+    front.submit("a", fn, 2, 32, args())
+    with pytest.raises(QuotaExceeded) as ei:
+        front.submit("a", fn, 2, 32, args())
+    assert ei.value.tenant == "a"
+    t = front.tenants["a"]
+    assert t.rejected == 1 and t.admitted == 2
+    assert len(t.stream._q) == 2      # nothing extra was enqueued
+    assert front.drain()
+    assert t.completed == 2           # shedding never cancels in-flight
+    front.submit("a", fn, 2, 32, args())   # admits again after drain
+
+
+def test_global_cap_sheds_across_tenants():
+    s, fn = _counter_session()
+    front = ServingFrontEnd(s, max_inflight=3, default_quota=10)
+    front.tenant("a")
+    front.tenant("b")
+    args = lambda: {"State": _state(s), "iters": 2}   # noqa: E731
+    for name in ("a", "b", "a"):
+        front.submit(name, fn, 2, 32, args())
+    with pytest.raises(QuotaExceeded):
+        front.submit("b", fn, 2, 32, args())
+    assert front.drain()
+    assert front.stats()["completed"] == 3
+    assert front.stats()["rejected"] == 1
+
+
+def test_serving_end_to_end_weighted_tenants():
+    """Two tenants with 1:3 weights, sticky streams, correct results and
+    latency accounting."""
+    s, fn = _counter_session(starvation_guard=0)
+    front = ServingFrontEnd(s, slo_ms=60_000)
+    front.tenant("small", weight=1.0)
+    front.tenant("big", weight=3.0)
+    assert front.tenant("big") is front.tenants["big"]   # idempotent
+    tickets = []
+    for _ in range(4):
+        for name in ("small", "big"):
+            tickets.append(front.submit(
+                name, fn, 2, 32, {"State": _state(s, 1.0), "iters": 10}))
+    # measure shares over a window where both tenants stay backlogged
+    s.sched_trace.clear()
+    front.pump(24)
+    shares = _shares(s, [front.tenants["small"].stream.sid,
+                         front.tenants["big"].stream.sid])
+    big = shares[front.tenants["big"].stream.sid]
+    assert 0.60 <= big <= 0.90, shares
+    while front.pump(16):
+        pass
+    assert all(t.done() for t in tickets)
+    agg = front.stats()
+    assert agg["completed"] == 8 and agg["inflight"] == 0
+    assert agg["slo_violations"] == 0
+    assert agg["p99_ms"] >= agg["p50_ms"] >= 0
+
+
+def test_retire_tenant_frees_its_stream():
+    s, fn = _counter_session()
+    front = ServingFrontEnd(s)
+    front.tenant("x")
+    tk = front.submit("x", fn, 2, 32, {"State": _state(s), "iters": 2})
+    with pytest.raises(RuntimeError, match="in-flight"):
+        front.retire_tenant("x")
+    front.drain()
+    assert tk.done()
+    n = len(s.streams)
+    front.retire_tenant("x")
+    assert len(s.streams) == n - 1
+    assert "x" not in front.tenants
+    front.retire_tenant("x")          # unknown tenant is a no-op
+
+
+def test_submit_unknown_tenant_is_an_error():
+    s, fn = _counter_session()
+    front = ServingFrontEnd(s)
+    with pytest.raises(KeyError):
+        front.submit("ghost", fn, 2, 32, {})

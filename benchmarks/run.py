@@ -12,7 +12,7 @@ def _emit(rows) -> None:
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, bench_migration,
+    from benchmarks import (bench_fleet, bench_kernels, bench_migration,
                             bench_overhead, bench_portability,
                             bench_serving, bench_streams,
                             bench_translation, roofline)
@@ -37,6 +37,8 @@ def main() -> None:
     print("# -- paper 4.3: multi-tenant serving tier (fair share, pool, "
           "shedding) --")
     _emit(bench_serving.run())
+    print("# -- paper 6.3: self-healing fleet (kill -9 recovery latency) --")
+    _emit(bench_fleet.run())
     print("# -- kernel structural benchmarks --")
     _emit(bench_kernels.run())
     print("# -- roofline (from dry-run artifacts; see EXPERIMENTS.md) --")

@@ -8,6 +8,9 @@ from .backends import BACKENDS, get_backend
 from .cache import (DiskStore, TranslationCache, global_cache,
                     register_reviver)
 from .engine import Engine
+from .fleet import (FAULT_POINTS, FaultInjector, FleetCoordinator,
+                    FleetError, FleetTicket, FleetTimeout,
+                    FleetWorkerError, RetryQueue, WorkerLost)
 from .passes import (DEFAULT_OPT_LEVEL, OPT_MAX, PipelineStats,
                      SpecializationPolicy, get_optimized, get_specialized,
                      optimize)
@@ -23,6 +26,9 @@ __all__ = ["alias", "hetir", "BACKENDS", "get_backend", "Engine",
            "Module", "Function", "DeviceBuffer", "Stream", "Event",
            "LaunchRecord", "ParamInfo", "CopyRecord", "TraceRing",
            "BufferPool", "ServingFrontEnd", "ServeTicket", "QuotaExceeded",
+           "FleetCoordinator", "FleetTicket", "RetryQueue", "FaultInjector",
+           "FAULT_POINTS", "FleetError", "FleetTimeout", "FleetWorkerError",
+           "WorkerLost",
            "DiskStore", "global_cache", "register_reviver", "optimize",
            "get_optimized", "get_specialized", "SpecializationPolicy",
            "PipelineStats", "OPT_MAX", "DEFAULT_OPT_LEVEL"]

@@ -51,6 +51,7 @@ layout, and invalidation rules.
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import os
 import pickle
@@ -59,6 +60,11 @@ import threading
 import time
 from pathlib import Path
 from typing import Any, Callable, Dict, Hashable, Iterator, Optional, Tuple
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX platform
+    fcntl = None
 
 #: bump when the envelope layout or any persisted payload format changes —
 #: old store directories are simply never looked at again (tag mismatch)
@@ -108,7 +114,22 @@ class DiskStore:
     ``os.replace``), so concurrent writers race benignly (last identical
     write wins) and a crash can never leave a half-written entry visible.
     Loads never raise on bad data: any unpickling error, magic/version
-    skew, or key mismatch counts as a miss and quarantines the file.
+    skew, or key mismatch counts as a miss and quarantines the file —
+    but only when the file is provably still the bytes that failed to
+    parse (same inode size/mtime): another process may have atomically
+    republished a healthy entry at that path between our read and the
+    unlink, and quarantining *that* would delete good data.
+
+    The store is **process-safe**, not just thread-safe: a fleet of
+    worker processes (:mod:`~repro.core.fleet`) shares one directory.
+    :meth:`lock` hands out a per-key advisory ``flock`` (a sidecar
+    ``.lock`` file, never unlinked — removing a lock file another
+    process is blocked on would silently split the lock), which
+    :meth:`TranslationCache.get_or_translate` uses for cross-process
+    *single-flight* translation: N processes missing on the same key
+    produce one translation and N−1 disk restores, not N translations.
+    Set ``HETGPU_CACHE_SINGLE_FLIGHT=0`` to opt out (translations then
+    race benignly, last write wins, work is duplicated).
     """
 
     def __init__(self, root, tag: Optional[str] = None,
@@ -148,6 +169,35 @@ class DiskStore:
     def _path(self, key: Hashable) -> Path:
         digest = hashlib.sha256(repr(key).encode()).hexdigest()[:40]
         return self.dir / f"{digest}.tce"
+
+    # -- cross-process locking ------------------------------------------
+    @contextlib.contextmanager
+    def lock(self, key: Hashable) -> Iterator[bool]:
+        """Advisory per-key cross-process lock (``flock`` on a sidecar
+        ``<digest>.lock`` file).  Yields ``True`` while holding the lock,
+        or ``False`` when locking is unavailable (no ``fcntl``, unwritable
+        directory) — callers must treat ``False`` as "proceed unlocked",
+        which is always safe because entry publishes are atomic; the lock
+        only de-duplicates work.  Lock files are deliberately never
+        unlinked: removing one while another process is blocked on it
+        would hand out two "exclusive" locks on fresh inodes."""
+        if fcntl is None:
+            yield False
+            return
+        lock_path = self._path(key).with_suffix(".lock")
+        try:
+            fd = os.open(str(lock_path), os.O_RDWR | os.O_CREAT, 0o644)
+        except OSError:
+            yield False
+            return
+        try:
+            fcntl.flock(fd, fcntl.LOCK_EX)
+            yield True
+        finally:
+            try:
+                fcntl.flock(fd, fcntl.LOCK_UN)
+            finally:
+                os.close(fd)
 
     # -- write ----------------------------------------------------------
     def save(self, key: Hashable, kind: str, payload: Any,
@@ -207,6 +257,7 @@ class DiskStore:
 
     def _read_envelope(self, path: Path) -> Optional[Dict[str, Any]]:
         try:
+            stat_before = path.stat()
             blob = path.read_bytes()
         except OSError:
             return None
@@ -220,11 +271,18 @@ class DiskStore:
                 raise ValueError("bad envelope")
             env["size_bytes"] = len(blob)
         except Exception:
-            # corruption tolerance: quarantine and report a miss
+            # corruption tolerance: quarantine and report a miss — but only
+            # if the file is still the bytes that failed to parse.  Another
+            # process may have atomically republished a healthy entry here
+            # between our read and this unlink; deleting that would throw
+            # away good data, so re-stat and skip the unlink on any change.
             with self._lock:
                 self.corrupt += 1
             try:
-                os.unlink(path)
+                st = path.stat()
+                if (st.st_mtime_ns == stat_before.st_mtime_ns
+                        and st.st_size == stat_before.st_size):
+                    os.unlink(path)
             except OSError:
                 pass
             return None
@@ -445,6 +503,27 @@ class TranslationCache:
         """Lookup; on miss, run ``factory`` (the translation) and cache."""
         return self.get_or_translate(key, lambda: (factory(), None))
 
+    def _try_restore(self, key: Hashable) -> Optional[Any]:
+        """Disk-tier lookup: load the envelope and revive it into the
+        memory tier.  Returns the live value, or ``None`` on any miss
+        (absent entry, unknown kind, revival failure)."""
+        env = self.store.load(key)
+        if env is None or env["kind"] not in _REVIVERS:
+            return None
+        t0 = time.perf_counter()
+        try:
+            value = _REVIVERS[env["kind"]](env["payload"])
+        except Exception:
+            return None  # revival failure degrades to a miss
+        dt = (time.perf_counter() - t0) * 1e3
+        if value is not None:
+            with self._lock:
+                self.restored += 1
+                self.restore_ms += dt
+                self._insert(key, value, env.get("cost_ms", 0.0),
+                             env.get("size_bytes", 1))
+        return value
+
     # -- full lookup path: memory -> disk -> translate --------------------
     def get_or_translate(
             self, key: Hashable,
@@ -455,28 +534,38 @@ class TranslationCache:
         ``(live value, persist)`` where ``persist`` is ``(kind, payload)``
         for the disk tier or ``None`` for memory-only values.  Translation
         wall-time is measured here and drives both the eviction score and
-        ``stats()['translate_ms']``."""
+        ``stats()['translate_ms']``.
+
+        When a disk tier is attached, translation runs under the store's
+        per-key cross-process lock (*single-flight*): of N processes
+        missing on the same key, one translates while the rest block on
+        the lock, then find the published entry on their re-check and
+        restore it.  ``HETGPU_CACHE_SINGLE_FLIGHT=0`` disables the lock
+        (translations then race benignly — atomic publishes mean the
+        last identical write wins, work is merely duplicated)."""
         value = self.get(key)
         if value is not None:
             return value
         if self.store is not None:
-            env = self.store.load(key)
-            if env is not None and env["kind"] in _REVIVERS:
-                t0 = time.perf_counter()
-                try:
-                    value = _REVIVERS[env["kind"]](env["payload"])
-                except Exception:
-                    value = None  # revival failure degrades to a miss
-                dt = (time.perf_counter() - t0) * 1e3
-                if value is not None:
-                    with self._lock:
-                        self.restored += 1
-                        self.restore_ms += dt
-                        self._insert(key, value, env.get("cost_ms", 0.0),
-                                     env.get("size_bytes", 1))
-                    return value
+            value = self._try_restore(key)
+            if value is not None:
+                return value
             with self._lock:
                 self.disk_misses += 1
+            if os.environ.get("HETGPU_CACHE_SINGLE_FLIGHT", "1") != "0":
+                with self.store.lock(key) as locked:
+                    if locked:
+                        # a lock-holder may have published while we waited
+                        value = self._try_restore(key)
+                        if value is not None:
+                            return value
+                    return self._translate_and_insert(key, translate)
+        return self._translate_and_insert(key, translate)
+
+    def _translate_and_insert(
+            self, key: Hashable,
+            translate: Callable[[], Tuple[Any, Optional[Tuple[str, Any]]]]
+    ) -> Any:
         t0 = time.perf_counter()
         value, persist = translate()
         dt = (time.perf_counter() - t0) * 1e3

@@ -660,6 +660,54 @@ class LaunchRecord:
         """The DeviceBuffer bound to buffer parameter ``name``."""
         return self.bindings[name]
 
+    def advance(self, max_segments: Optional[int] = None,
+                on_segment: Optional[Callable[[Engine], bool]] = None
+                ) -> bool:
+        """Drive *only this launch* forward by up to ``max_segments``
+        segments (None = to completion), returning True iff it finished.
+
+        This is the control-plane stepping primitive the worker-fleet
+        layer (:mod:`~repro.core.fleet`) drives over IPC: a coordinator
+        hands out bounded segment slices, and between slices the launch
+        rests at a barrier — exactly where ``checkpoint`` is legal — so
+        drain / rebalance / evacuation policies can interpose without a
+        cooperative pause flag.  ``on_segment`` is forwarded to the
+        engine's segment-boundary yield hook (fault injectors hang off
+        it); segments executed here are charged/traced like scheduler
+        steps, so fleet work shows up in ``sched_trace`` and stats.
+
+        The launch must be at its stream front (same rule as lazy
+        materialization — prior same-stream work must have written its
+        buffers); a cancelled launch cannot be advanced.
+        """
+        if self.finished:
+            return True
+        if self.cancelled:
+            raise RuntimeError(
+                f"launch #{self.seq} ({self.program_name}) was cancelled "
+                "— it cannot be advanced")
+        s = self.session
+        s._settle()
+        if not self.stream._q or self.stream._q[0] is not self:
+            raise RuntimeError(
+                f"launch #{self.seq} ({self.program_name}) is not at the "
+                f"front of stream {self.stream.sid} — drain prior work "
+                "before single-stepping it")
+        eng = self.engine
+
+        def _boundary(e: Engine) -> bool:
+            self.stream._charge(1.0)
+            s._trace(self.stream, e.program.name, self.seq, e.node_idx)
+            s.stats["segments_executed"] += 1
+            return bool(on_segment is not None and on_segment(e))
+
+        finished = eng.run(max_segments=max_segments, on_segment=_boundary)
+        if finished:
+            self.stream._q.popleft()
+            self._finish()
+            s._settle()
+        return finished
+
     def cancel(self) -> None:
         """Withdraw the launch from its stream (a migrated-away launch
         must not also run to completion on the source)."""

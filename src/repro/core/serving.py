@@ -21,12 +21,21 @@ The coordinator/worker-queue shape (a dispatcher in front of sticky
 per-worker queues, with per-worker state and counters) follows the
 GPU-miner coordinator idiom referenced in the roadmap; here the
 "workers" are scheduler streams and the dispatch currency is segments.
+
+The front end can alternatively sit on a **fleet**
+(:class:`~repro.core.fleet.FleetCoordinator`) instead of an in-process
+session: pass a coordinator as the first constructor argument and
+tenants keep their quotas, admission control, and latency accounting,
+but launches dispatch to worker *processes* (kernels named by string,
+args as host arrays) and survive worker deaths via the fleet's retry
+queue — the serving tier inherits self-healing without changing its
+API surface.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 from .runtime import Function, HetSession, LaunchRecord, Stream
 
@@ -69,11 +78,14 @@ class ServeTicket:
 
 @dataclass
 class TenantState:
-    """Per-tenant serving state: the sticky stream, the quota, and the
-    counters the front end reports."""
+    """Per-tenant serving state: the sticky stream (``None`` in fleet
+    mode, where dispatch is the fleet's), the quota, and the counters
+    the front end reports."""
     name: str
-    stream: Stream
+    stream: Optional[Stream]
     max_inflight: int
+    weight: float = 1.0
+    priority: int = 0
     inflight: List[ServeTicket] = field(default_factory=list)
     admitted: int = 0
     rejected: int = 0
@@ -81,9 +93,9 @@ class TenantState:
     latencies_ms: List[float] = field(default_factory=list)
 
     def stats(self) -> Dict[str, object]:
-        out = {"tenant": self.name, "stream": self.stream.sid,
-               "weight": self.stream.weight,
-               "priority": self.stream.priority,
+        out = {"tenant": self.name,
+               "stream": self.stream.sid if self.stream else None,
+               "weight": self.weight, "priority": self.priority,
                "max_inflight": self.max_inflight,
                "inflight": len(self.inflight),
                "admitted": self.admitted, "rejected": self.rejected,
@@ -118,10 +130,16 @@ class ServingFrontEnd:
     blowing the deadline of admitted work.
     """
 
-    def __init__(self, session: HetSession, max_inflight: int = 256,
+    def __init__(self, session, max_inflight: int = 256,
                  default_quota: int = 32, slo_ms: Optional[float] = None,
                  quantum: int = 1):
-        self.session = session
+        # ``session`` is either an in-process HetSession or a
+        # FleetCoordinator (duck-typed on its fleet_stats surface) —
+        # fleet mode routes launches to worker processes instead of
+        # in-process streams, with identical admission semantics.
+        self.fleet = session if hasattr(session, "fleet_stats") else None
+        self.session: Optional[HetSession] = \
+            None if self.fleet is not None else session
         self.max_inflight = int(max_inflight)
         self.default_quota = int(default_quota)
         self.slo_ms = slo_ms
@@ -139,11 +157,18 @@ class ServingFrontEnd:
         priority is fixed at creation."""
         t = self.tenants.get(name)
         if t is None:
-            st = self.session.stream(weight=weight, priority=priority,
-                                     quantum=self.quantum)
-            t = TenantState(name, st,
-                            self.default_quota if max_inflight is None
-                            else int(max_inflight))
+            quota = self.default_quota if max_inflight is None \
+                else int(max_inflight)
+            if self.fleet is not None:
+                # fleet mode: no sticky stream — the fleet's dispatcher
+                # owns placement; weight/priority kept for reporting
+                t = TenantState(name, None, quota,
+                                weight=weight, priority=priority)
+            else:
+                st = self.session.stream(weight=weight, priority=priority,
+                                         quantum=self.quantum)
+                t = TenantState(name, st, quota,
+                                weight=st.weight, priority=st.priority)
             self.tenants[name] = t
         return t
 
@@ -157,16 +182,19 @@ class ServingFrontEnd:
             raise RuntimeError(
                 f"tenant {name!r} has {len(t.inflight)} in-flight "
                 "request(s) — drain before retiring")
-        t.stream.destroy()
+        if t.stream is not None:
+            t.stream.destroy()
         del self.tenants[name]
 
     # -- admission + dispatch ----------------------------------------------
-    def submit(self, name: str, fn: Function, grid: int, block: int,
-               args: Dict[str, object]) -> ServeTicket:
+    def submit(self, name: str, fn: Union[Function, str], grid: int,
+               block: int, args: Dict[str, object]) -> ServeTicket:
         """Admit and enqueue one request for tenant ``name`` (which must
         be registered).  Raises :class:`QuotaExceeded` — *before* anything
         is enqueued — when the tenant or the coordinator is at its
-        in-flight cap."""
+        in-flight cap.  In fleet mode ``fn`` may be the kernel name (the
+        fleet registry resolves it in each worker) and ``args`` are host
+        values (scalars / numpy arrays), not device buffers."""
         t = self.tenants.get(name)
         if t is None:
             raise KeyError(f"unknown tenant {name!r} — register with "
@@ -184,7 +212,11 @@ class ServingFrontEnd:
                 f"serving front end is at its global in-flight cap "
                 f"({self.max_inflight}) — shed or retry after completions",
                 tenant=name)
-        rec = fn.launch_async(grid, block, args, stream=t.stream)
+        if self.fleet is not None:
+            kernel = fn if isinstance(fn, str) else fn.name
+            rec = self.fleet.submit(kernel, grid, block, args)
+        else:
+            rec = fn.launch_async(grid, block, args, stream=t.stream)
         ticket = ServeTicket(name, rec)
         t.inflight.append(ticket)
         t.admitted += 1
@@ -194,16 +226,26 @@ class ServingFrontEnd:
     # -- driving the scheduler ---------------------------------------------
     def pump(self, decisions: int = 64) -> bool:
         """Make up to ``decisions`` scheduling decisions and reap
-        completions.  Returns True iff any progress was made."""
-        progressed = self.session.step(decisions)
+        completions.  Returns True iff any progress was made.  In fleet
+        mode a "decision" is one fleet pump round (dispatch sweep + one
+        segment slice per busy worker)."""
+        if self.fleet is not None:
+            progressed = self.fleet.pump()
+        else:
+            progressed = self.session.step(decisions)
         for t in self.tenants.values():
             self._reap(t)
         return progressed
 
-    def drain(self) -> bool:
+    def drain(self, timeout: Optional[float] = None) -> bool:
         """Drive everything to completion (False if paused work remains),
-        then reap."""
-        ok = self.session.synchronize()
+        then reap.  In fleet mode this waits until every accepted launch
+        is acked — surviving worker deaths along the way."""
+        if self.fleet is not None:
+            self.fleet.wait_all(timeout=timeout)
+            ok = True
+        else:
+            ok = self.session.synchronize()
         for t in self.tenants.values():
             self._reap(t)
         return ok
@@ -241,6 +283,8 @@ class ServingFrontEnd:
         if lats:
             agg["p50_ms"] = round(_pct(lats, 50), 3)
             agg["p99_ms"] = round(_pct(lats, 99), 3)
+        if self.fleet is not None:
+            agg["fleet"] = self.fleet.fleet_stats()
         return agg
 
     def __repr__(self) -> str:

@@ -1,0 +1,356 @@
+"""Chaos suite for the self-healing fleet (ISSUE 7 acceptance bar).
+
+Every test here spawns real worker *processes* and most of them kill one
+with SIGKILL at a named fault point — ``pre-launch``, ``mid-kernel`` (at
+a segment boundary), ``post-checkpoint-pre-ack`` — via the in-worker
+:class:`~repro.core.fleet.FaultInjector`.  The property under test is the
+paper's live-migration claim under failure: the launch must complete on a
+surviving worker **bit-identical** to a single-process oracle run, with
+zero lost and zero double-acked launches, and the fleet's ``retried`` /
+``evacuated`` counters must match the injected schedule exactly.
+
+Marked ``fleet`` and deselected from the tier-1 default run (see
+pytest.ini); CI's chaos job runs them with a fixed ``HETGPU_FAULT_SEED``
+and a job-level timeout so a wedged fleet fails loudly.
+"""
+import numpy as np
+import pytest
+
+from repro.core.fleet import (FAULT_POINTS, MID_KERNEL,
+                              POST_CHECKPOINT_PRE_ACK, PRE_LAUNCH,
+                              FleetCoordinator)
+from repro.core.kernels_suite import example_launch
+from repro.core.runtime import HetSession
+from repro.core.serving import ServingFrontEnd
+
+pytestmark = pytest.mark.fleet
+
+KERNELS = ("dyn_matmul", "decode_gemv")
+_WAIT = 180.0   # generous per-test fleet deadline; CI adds a job timeout
+
+_oracle_cache = {}
+
+
+def _example(kernel):
+    prog, _oracle, grid, block, args, outs = example_launch(kernel)
+    return prog, grid, block, args, outs
+
+
+def oracle_outputs(kernel):
+    """Single-process interp run of the canonical example launch — the
+    bit-identity reference every fleet result is compared against."""
+    if kernel not in _oracle_cache:
+        prog, grid, block, args, outs = _example(kernel)
+        sess = HetSession("interp")
+        sess.load(prog)
+        fn = sess.function(prog.name)
+        eng_args = {}
+        for p in fn.params:
+            v = args[p.name]
+            if p.kind == "buffer":
+                arr = np.asarray(v)
+                db = sess.alloc(arr.size, arr.dtype)
+                db.copy_from_host(arr)
+                eng_args[p.name] = db
+            else:
+                eng_args[p.name] = v
+        rec = fn.launch_async(grid, block, eng_args)
+        assert sess.synchronize()
+        _oracle_cache[kernel] = {
+            n: rec.buffer(n).copy_to_host() for n in outs}
+    return _oracle_cache[kernel]
+
+
+def assert_bit_identical(ticket, kernel):
+    for name, expect in oracle_outputs(kernel).items():
+        got = ticket.result(name)
+        assert got.dtype == expect.dtype
+        assert np.array_equal(got, expect), \
+            f"{kernel}.{name} diverged from the single-process oracle"
+
+
+# ---------------------------------------------------------------------------
+# baseline: no faults
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_happy_path_bit_identical(tmp_path, kernel):
+    prog, grid, block, args, _outs = _example(kernel)
+    with FleetCoordinator(backends=("interp", "interp"),
+                          queue_dir=tmp_path / "q",
+                          fault_plan=[]) as fleet:
+        fleet.register(prog)
+        tickets = [fleet.submit(kernel, grid, block, args)
+                   for _ in range(3)]
+        fleet.wait_all(timeout=_WAIT)
+        for t in tickets:
+            assert_bit_identical(t, kernel)
+        st = fleet.fleet_stats()
+        assert st["completed"] == 3
+        assert st["retried"] == st["evacuated"] == st["workers_lost"] == 0
+        assert st["duplicate_acks"] == 0
+        assert st["queue"]["acked"] == 3 and not fleet.queue.unacked()
+
+
+# ---------------------------------------------------------------------------
+# the acceptance matrix: every named fault point x both kernels
+# ---------------------------------------------------------------------------
+
+def _plan_for(point, kernel):
+    spec = {"point": point, "worker": 0, "kernel": kernel, "nth": 1}
+    if point == MID_KERNEL:
+        spec["after_segments"] = 2   # kill two segment boundaries in
+    return [spec]
+
+
+@pytest.mark.parametrize("kernel", KERNELS)
+@pytest.mark.parametrize("point", FAULT_POINTS)
+def test_kill_point_replays_bit_identical(tmp_path, point, kernel):
+    """SIGKILL worker 0 at ``point``; the launch must complete on the
+    surviving worker bit-identical to the oracle, exactly once."""
+    prog, grid, block, args, _outs = _example(kernel)
+    with FleetCoordinator(backends=("interp", "interp"),
+                          queue_dir=tmp_path / "q",
+                          fault_plan=_plan_for(point, kernel),
+                          fault_seed=42) as fleet:
+        fleet.register(prog)
+        ticket = fleet.submit(kernel, grid, block, args)
+        fleet.wait_all(timeout=_WAIT)
+
+        assert ticket.finished
+        assert_bit_identical(ticket, kernel)
+        st = fleet.fleet_stats()
+        # counters must match the injected schedule exactly: one kill ->
+        # one lost worker, one evacuation, one retry, no duplicates
+        assert st["workers_lost"] == 1
+        assert st["evacuated"] == 1
+        assert st["retried"] == 1
+        assert st["duplicate_acks"] == 0
+        assert st["completed"] == 1
+        assert ticket.attempts == 2 and ticket.worker == 1
+        # nothing lost: the queue holds exactly one record, acked
+        assert st["queue"] == {"pending": 0, "inflight": 0, "acked": 1,
+                               "total": 1, "durable": True}
+        # the recovery log recorded detect -> replay -> complete
+        assert len(fleet.failures) == 1
+        assert ticket.launch_id in fleet.failures[0]["recovered"]
+        assert fleet.failures[0]["recovered"][ticket.launch_id] > 0
+
+
+def test_mid_kernel_seed_resolved(tmp_path):
+    """A mid-kernel spec without ``after_segments`` resolves it from the
+    seed — the unpinned plan is still deterministic and still heals."""
+    kernel = "dyn_matmul"
+    prog, grid, block, args, _outs = _example(kernel)
+    plan = [{"point": MID_KERNEL, "worker": 0, "kernel": kernel}]
+    with FleetCoordinator(backends=("interp", "interp"),
+                          queue_dir=tmp_path / "q",
+                          fault_plan=plan, fault_seed=7) as fleet:
+        fleet.register(prog)
+        ticket = fleet.submit(kernel, grid, block, args)
+        fleet.wait_all(timeout=_WAIT)
+        assert_bit_identical(ticket, kernel)
+        assert fleet.fleet_stats()["workers_lost"] == 1
+
+
+def test_multi_kill_schedule(tmp_path):
+    """Three kills (one per fault point, on three different workers)
+    across a batch of launches: everything still completes exactly once,
+    and the loss/evacuation counters match the schedule."""
+    kernel = "dyn_matmul"
+    prog, grid, block, args, _outs = _example(kernel)
+    plan = [
+        {"point": PRE_LAUNCH, "worker": 0, "kernel": kernel, "nth": 1},
+        {"point": MID_KERNEL, "worker": 1, "kernel": kernel, "nth": 1,
+         "after_segments": 1},
+        {"point": POST_CHECKPOINT_PRE_ACK, "worker": 2, "kernel": kernel,
+         "nth": 1},
+    ]
+    with FleetCoordinator(backends=("interp",) * 4,
+                          queue_dir=tmp_path / "q",
+                          fault_plan=plan, fault_seed=42) as fleet:
+        fleet.register(prog)
+        tickets = [fleet.submit(kernel, grid, block, args)
+                   for _ in range(6)]
+        fleet.wait_all(timeout=_WAIT)
+        for t in tickets:
+            assert_bit_identical(t, kernel)
+        st = fleet.fleet_stats()
+        assert st["workers_lost"] == 3
+        assert st["completed"] == 6
+        assert st["duplicate_acks"] == 0
+        assert st["evacuated"] >= 3 and st["retried"] >= 3
+        assert st["queue"]["acked"] == 6 and not fleet.queue.unacked()
+
+
+# ---------------------------------------------------------------------------
+# cross-backend healing (the paper's point: snapshots are device-neutral)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_evacuation_lands_on_other_backend(tmp_path, kernel):
+    """Kill the interp worker mid-kernel; the replay lands on the
+    vectorized worker and must still be bit-identical (backends are
+    bit-exact per PR 4's FP pinning)."""
+    prog, grid, block, args, _outs = _example(kernel)
+    with FleetCoordinator(backends=("interp", "vectorized"),
+                          queue_dir=tmp_path / "q",
+                          fault_plan=_plan_for(MID_KERNEL, kernel),
+                          fault_seed=42) as fleet:
+        fleet.register(prog)
+        ticket = fleet.submit(kernel, grid, block, args)
+        fleet.wait_all(timeout=_WAIT)
+        assert ticket.worker == 1   # healed onto the vectorized worker
+        assert_bit_identical(ticket, kernel)
+
+
+def test_graceful_drain_migrates_live_state(tmp_path):
+    """drain() moves in-flight launches via checkpoint/restore across
+    backends — a migration, not a replay: attempts stay at 1."""
+    kernel = "dyn_matmul"
+    prog, grid, block, args, _outs = _example(kernel)
+    with FleetCoordinator(backends=("interp", "vectorized"),
+                          queue_dir=tmp_path / "q", slice_segments=1,
+                          fault_plan=[]) as fleet:
+        fleet.register(prog)
+        tickets = [fleet.submit(kernel, grid, block, args)
+                   for _ in range(4)]
+        fleet.pump()                 # dispatch + first slices
+        victim_launches = len(fleet.workers[0].launches)
+        assert victim_launches > 0
+        moved = fleet.drain(0)       # checkpoint/restore onto worker 1
+        assert moved == victim_launches
+        fleet.wait_all(timeout=_WAIT)
+        for t in tickets:
+            assert_bit_identical(t, kernel)
+            assert t.attempts == 1   # moved live, never replayed
+        st = fleet.fleet_stats()
+        assert st["migrated"] == moved
+        assert st["retried"] == st["evacuated"] == 0
+
+
+def test_rebalance_moves_load(tmp_path):
+    kernel = "dyn_matmul"
+    prog, grid, block, args, _outs = _example(kernel)
+    with FleetCoordinator(backends=("interp", "interp"),
+                          queue_dir=tmp_path / "q", slice_segments=1,
+                          fault_plan=[]) as fleet:
+        fleet.register(prog)
+        tickets = [fleet.submit(kernel, grid, block, args)
+                   for _ in range(4)]
+        fleet.pump()
+        # pile everything on worker 1 (graceful), then rebalance back
+        fleet.drain(0, shutdown=False)
+        fleet.workers[0].draining = False
+        assert len(fleet.workers[1].launches) >= 2
+        moves = fleet.rebalance()
+        assert moves >= 1
+        loads = [len(w.launches) for w in fleet.workers.values()]
+        assert max(loads) - min(loads) <= 1
+        fleet.wait_all(timeout=_WAIT)
+        for t in tickets:
+            assert_bit_identical(t, kernel)
+
+
+# ---------------------------------------------------------------------------
+# durability: the coordinator itself dies
+# ---------------------------------------------------------------------------
+
+def test_coordinator_restart_replays_unacked(tmp_path):
+    """Kill the whole control plane mid-flight; a fresh coordinator over
+    the same queue_dir recovers the launch and completes it
+    bit-identically (attempts == 2: one stale dispatch, one replay)."""
+    kernel = "decode_gemv"
+    prog, grid, block, args, _outs = _example(kernel)
+    qdir = tmp_path / "q"
+    fleet = FleetCoordinator(backends=("interp",), queue_dir=qdir,
+                             slice_segments=1, fault_plan=[])
+    try:
+        fleet.register(prog)
+        lid = fleet.submit(kernel, grid, block, args).launch_id
+        fleet.pump()                 # inflight, not finished
+        assert fleet.queue.get(lid)["state"] == "inflight"
+    finally:
+        fleet.shutdown()             # queue dir survives
+
+    with FleetCoordinator(backends=("interp",), queue_dir=qdir,
+                          fault_plan=[]) as fleet2:
+        recovered = fleet2.recover()
+        assert [t.launch_id for t in recovered] == [lid]
+        fleet2.register(prog)        # programs must be re-registered
+        fleet2.wait_all(timeout=_WAIT)
+        assert recovered[0].finished and recovered[0].attempts == 2
+        assert_bit_identical(recovered[0], kernel)
+
+
+def test_respawn_replaces_dead_worker(tmp_path):
+    kernel = "dyn_matmul"
+    prog, grid, block, args, _outs = _example(kernel)
+    with FleetCoordinator(backends=("interp", "interp"),
+                          queue_dir=tmp_path / "q",
+                          fault_plan=_plan_for(PRE_LAUNCH, kernel),
+                          fault_seed=42, respawn=True) as fleet:
+        fleet.register(prog)
+        ticket = fleet.submit(kernel, grid, block, args)
+        fleet.wait_all(timeout=_WAIT)
+        assert_bit_identical(ticket, kernel)
+        st = fleet.fleet_stats()
+        assert st["workers_lost"] == 1
+        assert st["workers_spawned"] == 3   # 2 initial + 1 replacement
+        assert st["alive_workers"] == 2
+
+
+def test_evacuate_on_failure_policy(tmp_path):
+    """The evacuation policy entry point, driven directly: kill=True is a
+    real SIGKILL and the launches replay elsewhere."""
+    kernel = "dyn_matmul"
+    prog, grid, block, args, _outs = _example(kernel)
+    with FleetCoordinator(backends=("interp", "interp"),
+                          queue_dir=tmp_path / "q", slice_segments=1,
+                          fault_plan=[]) as fleet:
+        fleet.register(prog)
+        tickets = [fleet.submit(kernel, grid, block, args)
+                   for _ in range(2)]
+        fleet.pump()
+        victim = fleet.workers[0]
+        owned = list(victim.launches)
+        assert owned
+        requeued = fleet.evacuate_on_failure(0, kill=True)
+        assert sorted(requeued) == sorted(owned)
+        assert not victim.alive
+        fleet.wait_all(timeout=_WAIT)
+        for t in tickets:
+            assert_bit_identical(t, kernel)
+        assert fleet.fleet_stats()["evacuated"] == len(owned)
+
+
+# ---------------------------------------------------------------------------
+# serving tier riding the fleet
+# ---------------------------------------------------------------------------
+
+def test_serving_front_end_over_fleet(tmp_path):
+    """ServingFrontEnd fronting a FleetCoordinator: tenant quotas and
+    latency accounting on top, self-healing dispatch underneath — a
+    mid-kernel kill is invisible to the serving API."""
+    kernel = "dyn_matmul"
+    prog, grid, block, args, _outs = _example(kernel)
+    with FleetCoordinator(backends=("interp", "interp"),
+                          queue_dir=tmp_path / "q",
+                          fault_plan=_plan_for(MID_KERNEL, kernel),
+                          fault_seed=42) as fleet:
+        fleet.register(prog)
+        front = ServingFrontEnd(fleet, default_quota=8)
+        front.tenant("alpha", weight=2.0)
+        front.tenant("beta")
+        tickets = [front.submit("alpha", kernel, grid, block, args)
+                   for _ in range(3)]
+        tickets += [front.submit("beta", kernel, grid, block, args)
+                    for _ in range(2)]
+        assert front.drain(timeout=_WAIT)
+        st = front.stats()
+        assert st["admitted"] == st["completed"] == 5
+        assert st["fleet"]["workers_lost"] == 1
+        assert st["fleet"]["duplicate_acks"] == 0
+        for t in tickets:
+            assert t.done() and t.latency_ms is not None
+            assert_bit_identical(t.record, kernel)

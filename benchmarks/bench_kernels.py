@@ -23,6 +23,106 @@ def _time(fn, reps=3):
     return (time.perf_counter() - t0) / reps * 1e3
 
 
+#: tiled-capable suite kernels and a large launch for each: (builder kwargs,
+#: grid, block, args builder).  ``grid * block`` is the element count.
+_BLOCK_CASES = {
+    "vadd": ({}, 64, 256, lambda rng, n: {
+        "A": rng.normal(size=n).astype(np.float32),
+        "B": rng.normal(size=n).astype(np.float32),
+        "C": np.zeros(n, np.float32), "n": n}),
+    "saxpy": ({}, 64, 256, lambda rng, n: {
+        "X": rng.normal(size=n).astype(np.float32),
+        "Y": rng.normal(size=n).astype(np.float32),
+        "n": n, "a": 1.5}),
+    "stencil_1d": ({}, 64, 256, lambda rng, n: {
+        "A": rng.normal(size=n).astype(np.float32),
+        "Out": np.zeros(n, np.float32), "n": n}),
+    "poly_eval": ({}, 64, 256, lambda rng, n: {
+        "X": rng.normal(size=n).astype(np.float32),
+        "Coef": rng.normal(size=7).astype(np.float32),
+        "Out": np.zeros(n, np.float32), "n": n}),
+    "swizzle_copy": ({"size": 16384}, 64, 256, lambda rng, n: {
+        "A": rng.normal(size=n).astype(np.float32),
+        "Out": np.zeros(n, np.float32)}),
+    "dyn_fir": ({"size": 16384}, 64, 256, lambda rng, n: {
+        "A": rng.normal(size=n).astype(np.float32),
+        "W": rng.normal(size=8).astype(np.float32),
+        "Out": np.zeros(n, np.float32), "taps": 4}),
+}
+
+
+def run_het_block() -> list:
+    """Scalar-per-thread vs block-tiled pallas codegen on the tiled-capable
+    suite kernels at large geometry.  Each mode gets a fresh private
+    TranslationCache; the timed run is the warm (cache-hit) launch, so the
+    numbers compare executed kernels, not tracing.  ``sched_steps`` is the
+    number of pallas grid steps the segment schedules — the structural
+    scheduled-op reduction the tiled path buys (each step runs the same
+    per-segment op list, just over a wider tile)."""
+    import os
+
+    from repro.core import kernels_suite as suite
+    from repro.core.backends.pallas_backend import PallasBackend
+    from repro.core.cache import TranslationCache
+    from repro.core.engine import Engine
+
+    rows = []
+    rng = np.random.default_rng(7)
+
+    def measure(enabled, prog, grid, block, args):
+        old = os.environ.get("HETGPU_BLOCK_LOWER")
+        os.environ["HETGPU_BLOCK_LOWER"] = "1" if enabled else "0"
+        try:
+            backend = PallasBackend(cache=TranslationCache())
+            # cold run populates the cache; warm run is what we time
+            Engine(prog, backend, grid, block,
+                   {k: (v.copy() if isinstance(v, np.ndarray) else v)
+                    for k, v in args.items()}).run()
+            t0 = time.perf_counter()
+            eng = Engine(prog, backend, grid, block,
+                         {k: (v.copy() if isinstance(v, np.ndarray) else v)
+                          for k, v in args.items()})
+            eng.run()
+            ms = (time.perf_counter() - t0) * 1e3
+            stats = dict(backend.block_stats)
+            return eng, ms, stats
+        finally:
+            if old is None:
+                os.environ.pop("HETGPU_BLOCK_LOWER", None)
+            else:
+                os.environ["HETGPU_BLOCK_LOWER"] = old
+
+    for name, (kwargs, grid, block, mk) in _BLOCK_CASES.items():
+        prog, _oracle = suite.SUITE[name](**kwargs) \
+            if kwargs else suite.SUITE[name]()
+        n = grid * block
+        args = mk(rng, n)
+        eng_s, scalar_ms, _ = measure(False, prog, grid, block, args)
+        eng_t, tiled_ms, tstats = measure(True, prog, grid, block, args)
+        # conformance: the tiled path must be bit-identical to scalar
+        identical = all(
+            np.array_equal(np.asarray(eng_s.result(o)),
+                           np.asarray(eng_t.result(o)))
+            for o in (p.name for p in prog.buffers()))
+        # scheduled grid steps: scalar path walks one step per hetIR block,
+        # the tiled path one step per BLOCK-wide element tile
+        from repro.core.passes import choose_block
+        cand = choose_block(n) or n
+        sched_scalar, sched_tiled = grid, max(1, n // cand)
+        rows.append({
+            "bench": "het_block", "kernel": name, "n": n,
+            "tiled_segments": tstats.get("tiled", 0),
+            "scalar_ms": round(scalar_ms, 2),
+            "tiled_ms": round(tiled_ms, 2),
+            "speedup": round(scalar_ms / max(tiled_ms, 1e-9), 2),
+            "sched_steps_scalar": sched_scalar,
+            "sched_steps_tiled": sched_tiled,
+            "sched_reduction": round(sched_scalar / sched_tiled, 1),
+            "bit_identical": identical,
+        })
+    return rows
+
+
 def run() -> list:
     rows = []
     rng = np.random.default_rng(3)

@@ -193,6 +193,24 @@ def _pow2_gcd(coeffs) -> int:
     return 1 << min(shift, 31)
 
 
+def injective_step(coeff: int, span: int) -> bool:
+    """Is ``i -> coeff * i`` injective over ``i in [0, span)`` under i32/u32
+    wraparound?  ``coeff * (i - j) ≡ 0 (mod 2^32)`` requires ``i - j`` to be
+    a multiple of ``2^(32 - tz(coeff))`` (``tz`` = trailing zero count), so
+    injectivity holds exactly when ``span`` does not reach that multiple.
+    This is the wrap-safe leg of the lane-independence proof
+    (:func:`repro.core.passes.block_lower`): a store whose index is
+    ``coeff · global_id + uniform`` hits a distinct element per thread —
+    for *any* two threads — whenever this returns True."""
+    coeff = abs(int(coeff))
+    if coeff == 0:
+        return span <= 1
+    tz = (coeff & -coeff).bit_length() - 1
+    if tz >= 32:
+        return span <= 1
+    return span <= (1 << (32 - tz))
+
+
 def may_alias(a: Optional[AffineIndex], b: Optional[AffineIndex],
               stable: Callable[[str], bool] = lambda name: True) -> bool:
     """May two same-buffer accesses with index forms ``a`` and ``b``

@@ -39,6 +39,13 @@ class Launch:
     # program fingerprints already differ — the key stays self-describing
     # for store scans and debugging)
     spec_key: Tuple = ()
+    # buffer name -> shape tuple for every global buffer bound at launch
+    # (the PR 5 remainder: the policy and cache keys were shape-blind).
+    # Feeds SpecializationPolicy.consider (two launches differing only in
+    # buffer length are distinct specialization candidates) and the block
+    # lowering's tiled-buffer legality check (a buffer may only be
+    # BlockSpec-tiled when its length is exactly num_blocks * block_size)
+    buffer_shapes: Dict[str, Tuple[int, ...]] = field(default_factory=dict)
     # stream-scheduler metadata, set by the session when the launch is
     # enqueued/materialized.  Diagnostic only — NEVER part of a
     # translation-cache key: a translated segment is stream-agnostic, and

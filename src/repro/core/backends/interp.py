@@ -92,7 +92,10 @@ class _BlockCtx:
         self.regs[reg.name][t] = value
 
     def reg_read(self, reg: ir.Reg, t: int):
-        return self.regs[reg.name][t]
+        row = self.regs.get(reg.name)
+        if row is None:  # never-written register: reads as zero
+            return ir.np_dtype(reg.dtype).type(0)
+        return row[t]
 
 
 class _Plan:

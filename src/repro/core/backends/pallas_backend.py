@@ -18,13 +18,28 @@ This is the "SIMT hardware" target: one ``pl.pallas_call`` per segment
   reads/writes go through the output ref (constant ``index_map`` keeps the
   block resident in VMEM across the sequential TPU grid).
 
+**Block-tiled fast path** (the scalar-per-thread speed-ceiling fix): when
+:func:`~repro.core.passes.block_lower` proves a segment *lane-independent*,
+the segment is emitted as one ``pl.pallas_call`` whose grid tiles the flat
+*element* domain ``N = num_blocks * block_size`` into constexpr ``BLOCK``
+chunks — the Triton vector-addition idiom — instead of one grid step per
+hetIR block.  Registers travel as ``[1, N]`` flat arrays BlockSpec'd
+``(1, BLOCK)``; buffers whose every access is exactly the flat global id
+are BlockSpec-tiled ``(BLOCK,)`` and everything else takes the staged
+gather path.  Segments the proof rejects (shared memory, collectives,
+atomics, unprovable store indices) fall back to the scalar-per-thread path
+below; ``PallasBackend.block_stats`` counts both and records the refusal
+reasons.  ``HETGPU_BLOCK_LOWER=0`` disables the fast path;
+``HETGPU_BLOCK_MAX`` caps the tile size (default 1024).
+
 On this CPU container kernels execute with ``interpret=True``; the emitted
 BlockSpecs are the TPU contract.  Lane width: ``block_size`` should be a
 multiple of 128 for peak TPU efficiency (any size is functionally correct).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+import os
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +48,7 @@ from jax.experimental import pallas as pl
 
 from .. import hetir as ir
 from ..cache import TranslationCache
+from ..passes import BlockPlan, block_lower, choose_block
 from ..segments import SegNode
 from .base import (Backend, HostState, Launch, export_translation,
                    scalar_signature, state_signature)
@@ -68,6 +84,15 @@ class PallasBackend(Backend):
                  cache: "TranslationCache" = None):
         super().__init__(cache)
         self.interpret = interpret
+        # fast-path observability: how many segment executions took the
+        # block-tiled vs scalar-per-thread path, and why refusals happened
+        self.block_stats: Dict[str, object] = \
+            {"tiled": 0, "scalar": 0, "reasons": {}}
+
+    @staticmethod
+    def _block_enabled() -> bool:
+        return os.environ.get("HETGPU_BLOCK_LOWER", "1").lower() \
+            not in ("0", "off", "false")
 
     # ------------------------------------------------------------------
     def _translate(self, seg: SegNode, launch: Launch, reg_sig: Tuple,
@@ -75,23 +100,42 @@ class PallasBackend(Backend):
         # geometry, scalars, and the register/buffer shape+dtype signatures
         # all specialize the emitted kernel, so they join the shared key
         # (on top of the base key's launch-time specialization vector —
-        # a scalar-specialized segment emits from a different body)
+        # a scalar-specialized segment emits from a different body).  The
+        # candidate tile size joins too: it folds in HETGPU_BLOCK_LOWER /
+        # HETGPU_BLOCK_MAX, so flipping either can never revive a
+        # translation emitted under the other setting.
+        cand = choose_block(launch.num_blocks * launch.block_size) \
+            if self._block_enabled() else None
         key = self._cache_key(seg, launch, launch.num_blocks,
                               launch.block_size, scalar_signature(launch),
-                              reg_sig, glb_sig, shared_sig)
+                              reg_sig, glb_sig, shared_sig, ("block", cand))
 
         def translate():
-            return self._build(seg, launch, reg_sig, glb_sig, shared_sig)
+            return self._build(seg, launch, reg_sig, glb_sig, shared_sig,
+                               cand)
 
         return self.cache.get_or_translate(key, translate)
 
     def _build(self, seg: SegNode, launch: Launch, reg_sig: Tuple,
-               glb_sig: Tuple, shared_sig):
+               glb_sig: Tuple, shared_sig, block_cand: Optional[int] = None):
         """Emit, trace, and export the segment's ``pl.pallas_call`` kernel.
         Returns ``((jitted fn, meta), persist)`` for the translation cache;
         the persisted payload is the serialized ``jax.export`` artifact plus
-        ``meta``, so a warm process skips re-emitting and re-tracing."""
+        ``meta``, so a warm process skips re-emitting and re-tracing.
+
+        Tries the block-tiled fast path first (``block_cand`` is the
+        candidate tile size, None when disabled); the scalar-per-thread
+        lowering below is the fallback, with the refusal reason recorded in
+        ``meta["block_reason"]``."""
         B, T = launch.num_blocks, launch.block_size
+        block_reason = "disabled"
+        if block_cand is not None:
+            plan, block_reason = block_lower(
+                seg.stmts, B, T, block_cand,
+                buffer_lens={n: shape[0] for n, shape, _ in glb_sig
+                             if len(shape) == 1})
+            if plan is not None:
+                return self._build_block(plan, seg, launch, reg_sig, glb_sig)
         scalars = dict(launch.scalars)
         reg_names = tuple(n for n, _, _ in reg_sig)
         reg_dtypes = {n: dt for n, _, dt in reg_sig}
@@ -200,12 +244,135 @@ class PallasBackend(Backend):
         )
         meta = dict(reg_names=reg_names, new_regs=new_regs,
                     glb_names=glb_names, written=written_order,
-                    has_shared=has_shared, coalesced=coalesced)
+                    has_shared=has_shared, coalesced=coalesced,
+                    block=None, block_reason=block_reason)
         example = tuple(
             [jax.ShapeDtypeStruct(shape, np.dtype(dt))
              for _, shape, dt in reg_sig]
             + ([jax.ShapeDtypeStruct(shared_sig[0], np.dtype(shared_sig[1]))]
                if has_shared else [])
+            + [jax.ShapeDtypeStruct(shape, np.dtype(dt))
+               for _, shape, dt in glb_sig])
+        fn, blob = export_translation(jax.jit(call), example,
+                                      cache=self.cache)
+        persist = None if blob is None else ("jax-export-meta", (blob, meta))
+        return (fn, meta), persist
+
+    def _build_block(self, plan: BlockPlan, seg: SegNode, launch: Launch,
+                     reg_sig: Tuple, glb_sig: Tuple):
+        """Block-tiled lowering of a proven lane-independent segment: one
+        ``pl.pallas_call`` whose grid walks ``N // BLOCK`` flat element
+        tiles.  Registers are ``[1, N]`` flat arrays (``run_segment``
+        reshapes the host-state ``[B, T]`` view; row-major flatten makes
+        lane ``gid = b * T + t`` land at flat position ``gid``); tiled
+        buffers get one ``(BLOCK,)`` tile per grid step, gather buffers are
+        staged whole with the revisited-output accumulator when written.
+        The segment is proven free of shared memory, so hetIR shared state
+        (if any) bypasses the kernel untouched."""
+        B, T = launch.num_blocks, launch.block_size
+        N = B * T
+        BLOCK, grid = plan.block, plan.grid
+        scalars = dict(launch.scalars)
+        reg_names = tuple(n for n, _, _ in reg_sig)
+        reg_dtypes = {n: dt for n, _, dt in reg_sig}
+        glb_names = tuple(n for n, _, _ in glb_sig)
+        glb_shapes = {n: (shape, dt) for n, shape, dt in glb_sig}
+        tiled = set(plan.tiled)
+        written_order = tuple(sorted(seg.gwrites))
+        new_regs = tuple(sorted(r.name for r in seg.defs
+                                if r.name not in reg_names))
+        new_dt = {r.name: ir.np_dtype(r.dtype) for r in seg.defs
+                  if r.name in new_regs}
+
+        row_spec = pl.BlockSpec((1, BLOCK), lambda i: (0, i))
+
+        in_specs: List[pl.BlockSpec] = [row_spec] * len(reg_names)
+        for n in glb_names:
+            if n in tiled:
+                in_specs.append(pl.BlockSpec((BLOCK,), lambda i: (i,)))
+            else:
+                in_specs.append(pl.BlockSpec(glb_shapes[n][0],
+                                             lambda i: (0,)))
+
+        out_specs: List[pl.BlockSpec] = []
+        out_shapes: List[jax.ShapeDtypeStruct] = []
+        for n in reg_names:
+            out_specs.append(row_spec)
+            out_shapes.append(jax.ShapeDtypeStruct((1, N), reg_dtypes[n]))
+        for n in new_regs:
+            out_specs.append(row_spec)
+            out_shapes.append(jax.ShapeDtypeStruct((1, N), new_dt[n]))
+        for n in written_order:
+            shape, dt = glb_shapes[n]
+            if n in tiled:
+                out_specs.append(pl.BlockSpec((BLOCK,), lambda i: (i,)))
+            else:
+                out_specs.append(pl.BlockSpec(shape, lambda i: (0,)))
+            out_shapes.append(jax.ShapeDtypeStruct(shape, dt))
+
+        n_in = len(reg_names) + len(glb_names)
+
+        def kernel(*refs):
+            in_refs, out_refs = refs[:n_in], refs[n_in:]
+            i = pl.program_id(0)
+
+            reg_in = dict(zip(reg_names, in_refs[:len(reg_names)]))
+            glb_in = dict(zip(glb_names, in_refs[len(reg_names):]))
+            out_reg_refs = dict(zip(reg_names + new_regs, out_refs))
+            o = len(reg_names) + len(new_regs)
+            out_glb_refs = dict(zip(written_order, out_refs[o:]))
+
+            # revisited-output init for written gather buffers
+            for n in written_order:
+                if n not in tiled:
+                    @pl.when(i == 0)
+                    def _init(n=n):
+                        out_glb_refs[n][...] = glb_in[n][...]
+
+            glbs = {}
+            for n in glb_names:
+                if n in written_order and n not in tiled:
+                    glbs[n] = out_glb_refs[n][...]
+                else:
+                    glbs[n] = glb_in[n][...]
+
+            env = Env(regs={k: v[...] for k, v in reg_in.items()},
+                      shared=None, globals_=glbs, scalars=scalars,
+                      num_blocks=B, block_size=T)
+            env.lane_shape = (1, BLOCK)
+            env.flat_base = i * BLOCK   # lanes are flat global-id tiles
+            env.coalesced = tiled       # tiled indices rebase to the tile
+            env.tile_base = i * BLOCK
+            eval_stmts(plan.stmts, env, mask=None)
+
+            for k, ref in out_reg_refs.items():
+                if k in env.regs:
+                    ref[...] = jnp.broadcast_to(
+                        env.regs[k], (1, BLOCK)).astype(ref.dtype)
+                elif k in reg_in:  # untouched register: pass through
+                    ref[...] = reg_in[k][...]
+                else:  # defined only in a zero-trip loop: zeros
+                    ref[...] = jnp.zeros((1, BLOCK), ref.dtype)
+            for n in written_order:
+                out_glb_refs[n][...] = env.globals[n]
+
+        call = pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=out_shapes,
+            interpret=self.interpret,
+        )
+        meta = dict(reg_names=reg_names, new_regs=new_regs,
+                    glb_names=glb_names, written=written_order,
+                    has_shared=False, coalesced=tiled,
+                    block=dict(block=BLOCK, grid=grid,
+                               tiled=tuple(sorted(tiled))),
+                    block_reason=None)
+        example = tuple(
+            [jax.ShapeDtypeStruct((1, N), np.dtype(dt))
+             for _, _, dt in reg_sig]
             + [jax.ShapeDtypeStruct(shape, np.dtype(dt))
                for _, shape, dt in glb_sig])
         fn, blob = export_translation(jax.jit(call), example,
@@ -222,6 +389,33 @@ class PallasBackend(Backend):
 
         call, meta = self._translate(seg, launch, reg_sig, glb_sig,
                                      shared_sig)
+
+        blk = meta.get("block")
+        if blk is not None:
+            self.block_stats["tiled"] += 1
+            B, T = launch.num_blocks, launch.block_size
+            N = B * T
+            # registers travel flat: [B, T] row-major == lane gid order
+            args = [jnp.asarray(state.regs[n]).reshape(1, N)
+                    for n in reg_names]
+            args += [jnp.asarray(state.globals_[n]) for n in glb_names]
+            outs = call(*args)
+            i = 0
+            regs = {}
+            for n in meta["reg_names"] + meta["new_regs"]:
+                regs[n] = outs[i].reshape(B, T)
+                i += 1
+            state.regs = regs
+            for n in meta["written"]:
+                state.globals_[n] = outs[i]
+                i += 1
+            # shared memory provably untouched by a block-lowered segment
+            return
+        self.block_stats["scalar"] += 1
+        reason = meta.get("block_reason")
+        if reason:
+            rs = self.block_stats["reasons"]
+            rs[reason] = rs.get(reason, 0) + 1
 
         args = [jnp.asarray(state.regs[n]) for n in reg_names]
         if meta["has_shared"]:

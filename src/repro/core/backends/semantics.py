@@ -50,26 +50,46 @@ class Env:
         # backends.
         self.coalesced: set = set()
         self.tile_base = 0
+        # Block-tiled fast path: when set, lane arrays are flat element
+        # tiles ``[1, BLOCK]`` starting at this flat global id instead of
+        # ``[rows, block_size]`` — thread identity is reconstructed from
+        # ``gid = flat_base + iota`` (sound only for segments proven
+        # lane-independent by ``passes.block_lower``).
+        self.flat_base: Optional[Any] = None
 
     def write_reg(self, reg: ir.Reg, value, mask):
         value = jnp.asarray(value, dtype=ir.np_dtype(reg.dtype))
         value = jnp.broadcast_to(value, self.lane_shape)
-        if mask is not None and reg.name in self.regs:
-            old = jnp.broadcast_to(
-                jnp.asarray(self.regs[reg.name],
-                            dtype=ir.np_dtype(reg.dtype)), self.lane_shape)
+        if mask is not None:
+            old = self.regs.get(reg.name)
+            if old is None:
+                # hetIR registers read as zero until first written; a
+                # masked first write must leave inactive lanes at zero
+                # (matches the interpreter's per-lane zero-fill).
+                old = jnp.zeros(self.lane_shape, ir.np_dtype(reg.dtype))
+            else:
+                old = jnp.broadcast_to(
+                    jnp.asarray(old, dtype=ir.np_dtype(reg.dtype)),
+                    self.lane_shape)
             value = jnp.where(mask, value, old)
         self.regs[reg.name] = value
 
     def read_reg(self, reg: ir.Reg):
-        v = self.regs[reg.name]
+        v = self.regs.get(reg.name)
+        if v is None:  # never-written register: reads as zero
+            return jnp.zeros(self.lane_shape, ir.np_dtype(reg.dtype))
         return jnp.broadcast_to(jnp.asarray(v, ir.np_dtype(reg.dtype)),
                                 self.lane_shape)
 
 
 def _lane_ids(env: Env):
-    """[rows, block_size] thread / block index arrays."""
-    rows = env.lane_shape[0]
+    """[rows, block_size] thread / block index arrays (or, in flat block
+    mode, identities reconstructed from the flat global id)."""
+    if env.flat_base is not None:
+        gid = jax.lax.broadcasted_iota(jnp.int32, env.lane_shape, 1) \
+            + jnp.asarray(env.flat_base, jnp.int32)
+        t = jnp.int32(env.block_size)
+        return gid // t, gid % t
     tid = jax.lax.broadcasted_iota(jnp.int32, env.lane_shape, 1)
     bid = jax.lax.broadcasted_iota(jnp.int32, env.lane_shape, 0)
     bid = bid + jnp.asarray(env.block_offset, jnp.int32)
@@ -153,13 +173,17 @@ def eval_op(op: ir.Op, env: Env, mask) -> None:
         env.write_reg(d, jnp.where(c, a, b), mask)
 
     # ---- global memory -----------------------------------------------------
-    elif oc == ir.LD_GLOBAL:
+    # BLOCK_LD/BLOCK_ST evaluate exactly like their scalar forms — the tile
+    # geometry in their attrs steers BlockSpec construction in the pallas
+    # backend, not the per-lane value semantics ("tiled" buffers are rebased
+    # via env.coalesced/tile_base like any coalesced buffer).
+    elif oc in (ir.LD_GLOBAL, ir.BLOCK_LD):
         buf = env.globals[op.args[0]]
         idx = _global_idx(env, op.args[0], op.args[1])
         safe = idx if mask is None else jnp.where(mask, idx, 0)
         env.write_reg(d, jnp.take(buf, safe.reshape(-1), axis=0)
                       .reshape(env.lane_shape), mask)
-    elif oc == ir.ST_GLOBAL:
+    elif oc in (ir.ST_GLOBAL, ir.BLOCK_ST):
         buf = env.globals[op.args[0]]
         idx = _global_idx(env, op.args[0], op.args[1])
         val = _arg(env, op.args[2]).astype(buf.dtype)

@@ -10,6 +10,13 @@ translated kernels").  Translation goes through ``jax.export``: the trace
 is recorded as a StableHLO artifact whose serialized bytes ride into the
 cache's disk tier, so a warm process re-compiles the recorded program
 instead of re-tracing the Python IR evaluator (the dominant cost).
+
+Register contract (shared with interp and pallas via
+:mod:`~repro.core.backends.semantics`): hetIR registers read as **zero**
+until first written — a register defined only inside a zero-trip loop, or
+first written under a mask, yields zeros for the lanes never reached.
+Registers in the incoming state that the segment does not touch pass
+through unchanged (``env.regs`` starts as the live register dict).
 """
 from __future__ import annotations
 

@@ -57,11 +57,22 @@ class Engine:
         # specialization (paper §4.2 — translation happens at launch, when
         # every scalar is known) may bind them into the optimized body
         scalars: Dict[str, object] = {}
+        shapes: Dict[str, tuple] = {}
         if not _from_snapshot:
             for p in program.scalars():
                 if p.name not in args:
                     raise ValueError(f"missing scalar argument {p.name}")
                 scalars[p.name] = ir.np_dtype(p.dtype).type(args[p.name])
+            # buffer shapes join the launch record up front: the
+            # specialization policy keys on them (two launches differing
+            # only in buffer length are distinct variants) and the pallas
+            # block lowering proves tiled-buffer legality against them
+            for p in program.buffers():
+                if p.name in args:
+                    val = args[p.name]
+                    if hasattr(val, "uid") and hasattr(val, "data"):
+                        val = val.data
+                    shapes[p.name] = tuple(np.shape(val))
         # run the pass pipeline before translation (paper §4.2: the runtime
         # "dynamically translates this IR to the target GPU's native code" —
         # every backend then consumes the same optimized body).  Memoized per
@@ -73,7 +84,8 @@ class Engine:
             self.spec_key = tuple(tuple(e) for e in _spec_key)
         else:
             self.spec_key = SPECIALIZATION_POLICY.consider(
-                program, self.opt_level, scalars, override=specialize)
+                program, self.opt_level, scalars, override=specialize,
+                shapes=shapes)
         if self.spec_key:
             opt_prog, self.opt_stats = get_specialized(
                 program, self.opt_level, self.spec_key)
@@ -92,7 +104,7 @@ class Engine:
         self.nodes = nodes
         self.launch = Launch(opt_prog, num_blocks, block_size,
                              scalars=scalars, opt_level=self.opt_level,
-                             spec_key=self.spec_key)
+                             spec_key=self.spec_key, buffer_shapes=shapes)
         self.node_idx = 0
         self.loop_counters: Dict[int, int] = {}
         self.finished = False
@@ -183,11 +195,17 @@ class Engine:
                         return False
             elif isinstance(node, LoopStart):
                 if self._trip_count(node) <= 0:
-                    # zero-trip loop: jump past the matching LoopEnd
-                    self.node_idx = next(
-                        n.index for n in self.nodes
-                        if isinstance(n, LoopEnd)
-                        and n.loop_id == node.loop_id) + 1
+                    # zero-trip loop: jump past the matching LoopEnd.  The
+                    # skipped segments never execute, so registers they
+                    # would define are materialized as zeros (hetIR
+                    # registers read as zero until first written) — later
+                    # segments and snapshots then see identical state on
+                    # every backend.
+                    end = next(n.index for n in self.nodes
+                               if isinstance(n, LoopEnd)
+                               and n.loop_id == node.loop_id)
+                    self._zero_fill_skipped_defs(self.node_idx, end)
+                    self.node_idx = end + 1
                     continue
                 self.loop_counters[node.loop_id] = 0
                 self._set_loop_var(node, 0)
@@ -216,6 +234,15 @@ class Engine:
         self.state.regs[start.var.name] = np.full(
             (self.launch.num_blocks, self.launch.block_size), value,
             dtype=ir.np_dtype(start.var.dtype))
+
+    def _zero_fill_skipped_defs(self, lo: int, hi: int) -> None:
+        shape = (self.launch.num_blocks, self.launch.block_size)
+        for n in self.nodes[lo:hi]:
+            if isinstance(n, SegNode):
+                for r in n.defs:
+                    if r.name in self._live and r.name not in self.state.regs:
+                        self.state.regs[r.name] = np.zeros(
+                            shape, dtype=ir.np_dtype(r.dtype))
 
     def _prune_dead_regs(self) -> None:
         self.state.regs = {k: v for k, v in self.state.regs.items()
@@ -259,6 +286,8 @@ class Engine:
                   args={}, opt_level=snap.opt_level, _from_snapshot=True,
                   _spec_key=tuple(snap.spec_key))
         eng.launch.scalars = dict(snap.scalars)
+        eng.launch.buffer_shapes = {k: tuple(np.shape(v))
+                                    for k, v in snap.globals_.items()}
         eng.buffer_uids = dict(snap.buffer_uids)
         eng.node_idx = snap.node_idx
         eng.loop_counters = dict(snap.loop_counters)

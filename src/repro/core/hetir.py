@@ -160,12 +160,26 @@ REDUCE_ADD = "REDUCE_ADD"  # block-wide sum broadcast to all active threads
 REDUCE_MAX = "REDUCE_MAX"
 SCAN_ADD = "SCAN_ADD"  # inclusive prefix-sum over lanes of the block
 ATOMIC_ADD = "ATOMIC_ADD"  # global-memory atomic add, returns old value
+# block primitives (Triton-style): the form lane-independent segments are
+# rewritten into by passes.block_lower before the pallas fast path consumes
+# them.  Same (buf, idx[, val]) operands as LD_GLOBAL/ST_GLOBAL; attrs carry
+# the constexpr tile geometry chosen at translate time:
+#   attrs["block"] — constexpr BLOCK size (elements per grid step),
+#   attrs["mode"]  — "tiled" (index is exactly the flat global id; the
+#                    buffer is BlockSpec-tiled and the index rebased to the
+#                    tile) or "gather" (arbitrary proven-disjoint affine
+#                    index; the buffer is staged whole and masked-gathered).
+# Stores are always masked (predication masks + mode="drop" writes), so a
+# partially-active tile never writes out of its proven footprint.
+BLOCK_LD = "BLOCK_LD"
+BLOCK_ST = "BLOCK_ST"
 
 ALU_UNARY = {NEG, ABS, SQRT, EXP, NOT, MOV}
 ALU_BINARY = {ADD, SUB, MUL, DIV, MOD, MIN, MAX, AND, OR, XOR, SHL, SHR}
 CMP_OPS = {LT, LE, GT, GE, EQ, NE}
 COLLECTIVE_OPS = {VOTE_ANY, VOTE_ALL, VOTE_BALLOT, SHUFFLE, REDUCE_ADD,
                   REDUCE_MAX, SCAN_ADD}
+BLOCK_OPS = {BLOCK_LD, BLOCK_ST}
 
 
 @dataclass(frozen=True)
@@ -631,9 +645,9 @@ def body_global_accesses(body: Sequence[Stmt]) -> Tuple[set, set]:
     def walk(stmts: Sequence[Stmt]):
         for s in stmts:
             if isinstance(s, Op):
-                if s.opcode == LD_GLOBAL:
+                if s.opcode in (LD_GLOBAL, BLOCK_LD):
                     reads.add(s.args[0])
-                elif s.opcode == ST_GLOBAL:
+                elif s.opcode in (ST_GLOBAL, BLOCK_ST):
                     writes.add(s.args[0])
                 elif s.opcode == ATOMIC_ADD:
                     reads.add(s.args[0])

@@ -96,8 +96,9 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import hetir as ir
-from .alias import (GLOBAL_SPACE, SHARED_BUF, SHARED_SPACE, affine_env,
-                    body_mem_accesses, index_form, may_alias)
+from .alias import (GLOBAL_SPACE, SHARED_BUF, SHARED_SPACE, AffineIndex,
+                    affine_env, body_mem_accesses, index_form,
+                    injective_step, may_alias)
 from .segments import specializable_counts, static_trip_count
 
 # --------------------------------------------------------------------------
@@ -1167,8 +1168,12 @@ _MAX_PIPELINE_ITERS = 4
 #: bump when any pass's *output semantics* change without a rename — part
 #: of :func:`pipeline_fingerprint`, hence of the persistent store's tag
 #: (v3: launch-time specialization + alias-aware load hoisting; the
-#: translation-cache key layout also gained the bound-scalar vector)
-_PASS_SCHEMA_VERSION = 3
+#: translation-cache key layout also gained the bound-scalar vector.
+#: v4: block-tiled pallas lowering — translation keys gained the block
+#: plan component, spec keys gained inert ``name#shape`` buffer-extent
+#: entries, and uninitialized-register reads are defined as zero on every
+#: backend — stale DiskStore entries from v3 must not be revived)
+_PASS_SCHEMA_VERSION = 4
 
 DEFAULT_OPT_LEVEL = max(0, min(
     int(os.environ.get("HETGPU_OPT_LEVEL", str(OPT_MAX))), OPT_MAX))
@@ -1317,6 +1322,24 @@ def get_specialized(program: ir.Program, level: int, spec_key: SpecKey
     return hit
 
 
+def shape_spec_entries(shapes: Optional[Dict[str, Tuple]]) -> list:
+    """Buffer extents as *inert* spec-key entries.
+
+    Names carry a ``#shape`` suffix no hetIR parameter name can have, so
+    :func:`bind_launch_scalars` (which matches ``LD_PARAM`` argument names
+    and loop-count scalar names) never binds them — they change no op in
+    the specialized body.  They exist purely to make the specialization
+    key, the memoized variant, every translation-cache key, and the
+    snapshot's ``spec_key`` distinguish launches per buffer shape: the
+    block-tiled pallas path specializes tile geometry on exactly these
+    extents (the PR 5 remainder the roadmap calls "shapes in the launch
+    record")."""
+    if not shapes:
+        return []
+    return [(f"{name}#shape", int(np.prod(shape, dtype=np.int64)))
+            for name, shape in shapes.items()]
+
+
 class SpecializationPolicy:
     """Decides whether a launch gets a specialized variant.
 
@@ -1342,19 +1365,24 @@ class SpecializationPolicy:
 
     def consider(self, program: ir.Program, level: int,
                  scalars: Dict[str, object],
-                 override: Optional[bool] = None) -> SpecKey:
+                 override: Optional[bool] = None,
+                 shapes: Optional[Dict[str, Tuple]] = None) -> SpecKey:
         if override is False:
             return ()
         mode = "all" if override else \
             os.environ.get("HETGPU_SPECIALIZE", "auto").strip().lower()
         if mode in ("off", "0", "false", "no"):
             return ()
-        if level < 1 or not scalars:
+        if level < 1 or (not scalars and not shapes):
             return ()  # O0 is the differential baseline: always generic
         if mode != "all" and not specializable_counts(program.body):
             return ()
+        # buffer extents join the key (inert ``name#shape`` entries): two
+        # launches differing only in buffer length are *different*
+        # specialization variants — the policy used to be shape-blind
         key: SpecKey = tuple(sorted(
-            (name, np.asarray(v).item()) for name, v in scalars.items()))
+            [(name, np.asarray(v).item()) for name, v in scalars.items()]
+            + shape_spec_entries(shapes)))
         budget = max(0, int(os.environ.get("HETGPU_SPECIALIZE_BUDGET",
                                            "8")))
         seen = program.__dict__.setdefault("_spec_variants", {}) \
@@ -1368,3 +1396,242 @@ class SpecializationPolicy:
 
 #: process-wide policy instance (stateless beyond env/program lookups)
 SPECIALIZATION_POLICY = SpecializationPolicy()
+
+
+# --------------------------------------------------------------------------
+# Block lowering — the lane-independence proof behind the pallas tiled
+# fast path (see docs/PASSES.md, "Block lowering")
+# --------------------------------------------------------------------------
+
+#: thread-identity base kinds an affine index term may stand on
+_THREAD_BASES = {ir.GET_GLOBAL_ID: "gid", ir.GET_BLOCK_ID: "bid",
+                 ir.GET_THREAD_ID: "tid"}
+
+#: ops whose dest is launch-uniform when every Reg argument is
+_UNIFORM_SEED_OPS = {ir.CONST, ir.LD_PARAM, ir.GET_BLOCK_DIM,
+                     ir.GET_NUM_BLOCKS}
+_UNIFORM_PURE_OPS = (ir.ALU_UNARY | ir.ALU_BINARY | ir.CMP_OPS
+                     | {ir.MOV, ir.CVT, ir.SELECT, ir.FMA})
+
+
+@dataclass(frozen=True)
+class BlockPlan:
+    """A proven-legal block-tiled lowering of one barrier-free segment.
+
+    ``stmts`` is the segment body with every global access rewritten into
+    the block-primitive form (:data:`~repro.core.hetir.BLOCK_LD` /
+    :data:`~repro.core.hetir.BLOCK_ST`, constexpr ``block`` size and
+    tiling ``mode`` in the op attrs).  ``tiled`` names the buffers whose
+    every access index is exactly the flat global id (BlockSpec-tiled one
+    tile per grid step); every other accessed buffer is staged whole and
+    masked-gathered.  ``block``/``grid`` tile the flat element domain
+    ``N = num_blocks * block_size`` into ``grid = N // block`` steps."""
+
+    stmts: Tuple[ir.Stmt, ...]
+    tiled: frozenset
+    block: int
+    grid: int
+
+
+def choose_block(n_elems: int, cap: Optional[int] = None) -> Optional[int]:
+    """Constexpr tile size for a flat element domain of ``n_elems``: the
+    largest power of two dividing ``n_elems`` (tiles are always full — the
+    semantic mask is the program's own predication), capped by
+    ``HETGPU_BLOCK_MAX`` (default 1024, the Triton-style constexpr BLOCK
+    ceiling).  ``None`` when no tile exists (``n_elems <= 0``)."""
+    if cap is None:
+        cap = int(os.environ.get("HETGPU_BLOCK_MAX", "1024"))
+    if n_elems <= 0 or cap <= 0:
+        return None
+    pow2 = n_elems & -n_elems
+    cap2 = 1 << (cap.bit_length() - 1)
+    return min(pow2, cap2)
+
+
+def _uniform_regs(stmts: Sequence[ir.Stmt]) -> set:
+    """Single-def registers provably launch-uniform (equal across every
+    thread of every block): transitive closure of pure ops over uniform
+    inputs, seeded by CONST / LD_PARAM / GET_BLOCK_DIM / GET_NUM_BLOCKS.
+    Loop variables are *excluded*: they are uniform across threads at any
+    instant but vary across iterations, and the block-lowering proof needs
+    values stable over the whole segment."""
+    defs = ir.reg_def_counts(stmts)
+    uni: set = set()
+
+    def uniform_arg(a) -> bool:
+        return not isinstance(a, ir.Reg) or a.name in uni
+
+    def walk(body):
+        for s in body:
+            if isinstance(s, ir.Op):
+                d = s.dest
+                if d is None or defs.get(d.name, 0) != 1:
+                    continue
+                if s.opcode in _UNIFORM_SEED_OPS:
+                    uni.add(d.name)
+                elif s.opcode in _UNIFORM_PURE_OPS \
+                        and all(uniform_arg(a) for a in s.args):
+                    uni.add(d.name)
+            elif isinstance(s, (ir.Pred, ir.Loop)):
+                walk(s.body)
+
+    walk(stmts)
+    return uni
+
+
+def _decompose(form: AffineIndex, kinds: Dict[str, str], uniform: set,
+               block_size: int) -> Optional[Tuple[int, int, bool]]:
+    """Split an affine index form's thread dependence into per-thread
+    coefficients.  With ``gid = bid * T + tid``, the address difference of
+    two threads ``(bid1, tid1)`` vs ``(bid2, tid2)`` is
+    ``cb * (bid1 - bid2) + ct * (tid1 - tid2)`` where ``ct`` / ``cb`` are
+    the effective tid / bid coefficients returned here.  Returns ``(ct,
+    cb, has_uniform_terms)``, or ``None`` when any base is neither thread
+    identity nor launch-uniform (loop variables, loaded values, multi-def
+    registers — nothing sound can be said)."""
+    c_gid = c_bid = c_tid = 0
+    has_uniform = False
+    for base, coeff in form.terms:
+        k = kinds.get(base)
+        if k == "gid":
+            c_gid += coeff
+        elif k == "bid":
+            c_bid += coeff
+        elif k == "tid":
+            c_tid += coeff
+        elif base in uniform:
+            has_uniform = True
+        else:
+            return None
+    return (c_gid + c_tid, c_gid * block_size + c_bid, has_uniform)
+
+
+def _store_injective(ct: int, cb: int, num_blocks: int,
+                     block_size: int) -> bool:
+    """Does the store form hit a distinct element for every thread of the
+    launch, wrap-safely under i32?  Degenerate grids only need one axis;
+    the general case requires the (bid, tid) dependence to collapse onto
+    the flat global id (``cb == ct * T``) with an injective step."""
+    B, T = num_blocks, block_size
+    if B <= 1:
+        return injective_step(ct, T)
+    if T <= 1:
+        return injective_step(cb, B)
+    return cb == ct * T and injective_step(ct, B * T)
+
+
+def block_lower(stmts: Sequence[ir.Stmt], num_blocks: int, block_size: int,
+                block: int,
+                buffer_lens: Optional[Dict[str, int]] = None
+                ) -> Tuple[Optional[BlockPlan], Optional[str]]:
+    """Prove a barrier-free segment *lane-independent* and rewrite it into
+    block-primitive form; returns ``(plan, None)`` on success or
+    ``(None, reason)`` when the proof fails (the pallas backend then keeps
+    the scalar-per-thread path and surfaces ``reason`` in its stats).
+
+    A segment is lane-independent when reordering its threads into
+    arbitrary flat tiles of ``block`` elements cannot change any result
+    bit.  The proof obligations, checked in order:
+
+    * **no cross-thread traffic by construction** — no shared-memory ops,
+      no collectives, no ``ATOMIC_ADD`` (its returned old value is
+      execution-order-dependent).  Loop trip counts are uniform by hetIR
+      construction (an int literal or a uniform scalar param), so there
+      are no divergent loop trips to consider.
+    * **global stores are thread-injective** — every store index must have
+      an affine form (:mod:`~repro.core.alias`) over thread-identity bases
+      (``GET_GLOBAL_ID``/``GET_BLOCK_ID``/``GET_THREAD_ID``) and
+      launch-uniform values only, whose effective per-thread step is
+      injective over the launch under i32 wraparound
+      (:func:`~repro.core.alias.injective_step`).  Loop-variable bases
+      fail the proof: a store whose address varies per iteration could
+      collide with another thread's address from a *different* iteration,
+      which tile reordering would then order differently.
+    * **same-buffer accesses are per-lane or disjoint** — for every buffer
+      the segment writes, each (load, store) and (store, store) pair must
+      either share an *identical* index form (the per-lane slot: program
+      order within a lane is preserved by any tiling, and store
+      injectivity rules out cross-lane hits) or be provably disjoint under
+      :func:`~repro.core.alias.may_alias`.  Buffers only read are
+      unconstrained (gather tiles never conflict).
+
+    Buffers whose every access is exactly the flat global id *and* whose
+    length (from ``buffer_lens``, the launch record's buffer shapes) is
+    exactly ``num_blocks * block_size`` become BlockSpec-tiled
+    (``mode="tiled"``); all other accesses gather from the whole staged
+    buffer (``mode="gather"``)."""
+    B, T = int(num_blocks), int(block_size)
+    N = B * T
+    if block <= 0 or N % block:
+        return None, "bad-block"
+
+    for op in ir.walk_ops(stmts):
+        if op.opcode in (ir.LD_SHARED, ir.ST_SHARED):
+            return None, "shared-memory"
+        if op.opcode in ir.COLLECTIVE_OPS:
+            return None, f"collective:{op.opcode}"
+        if op.opcode == ir.ATOMIC_ADD:
+            return None, "atomic"
+
+    env = affine_env(stmts)
+    defs = ir.reg_def_counts(stmts)
+    uniform = _uniform_regs(stmts)
+    kinds: Dict[str, str] = {}
+    for op in ir.walk_ops(stmts):
+        if op.dest is not None and defs.get(op.dest.name, 0) == 1 \
+                and op.opcode in _THREAD_BASES:
+            kinds[op.dest.name] = _THREAD_BASES[op.opcode]
+
+    reads, writes = body_mem_accesses(stmts)
+    per_buf: Dict[str, list] = {}
+    for is_store, accs in ((False, reads), (True, writes)):
+        for space, buf, idx in accs:
+            assert space == GLOBAL_SPACE  # shared ops rejected above
+            per_buf.setdefault(buf, []).append(
+                (is_store, index_form(idx, env, defs)))
+
+    written = {buf for _, buf, _ in writes}
+    for buf in sorted(written):
+        forms = per_buf[buf]
+        for is_store, f in forms:
+            if f is None:
+                return None, f"opaque-index:{buf}"
+            if _decompose(f, kinds, uniform, T) is None:
+                return None, f"unprovable-base:{buf}"
+        store_forms = [f for is_store, f in forms if is_store]
+        for fs in store_forms:
+            ct, cb, _ = _decompose(fs, kinds, uniform, T)
+            if not _store_injective(ct, cb, B, T):
+                return None, f"store-not-injective:{buf}"
+        for fs in store_forms:
+            for _, f in forms:
+                if f == fs:
+                    continue  # identical form: the per-lane slot
+                if may_alias(f, fs):
+                    return None, f"may-alias:{buf}"
+
+    tiled = set()
+    for buf, forms in per_buf.items():
+        if buffer_lens is None or buffer_lens.get(buf) != N:
+            continue
+        ok = True
+        for _, f in forms:
+            dec = None if f is None else _decompose(f, kinds, uniform, T)
+            if dec != (1, T, False) or f.const != 0:
+                ok = False
+                break
+        if ok:
+            tiled.add(buf)
+
+    def rw(op: ir.Op):
+        if op.opcode in (ir.LD_GLOBAL, ir.ST_GLOBAL):
+            mode = "tiled" if op.args[0] in tiled else "gather"
+            oc = ir.BLOCK_LD if op.opcode == ir.LD_GLOBAL else ir.BLOCK_ST
+            return ir.Op(oc, op.dest, op.args,
+                         {"block": int(block), "mode": mode})
+        return op
+
+    plan = BlockPlan(stmts=tuple(ir.rewrite_body(list(stmts), rw)),
+                     tiled=frozenset(tiled), block=int(block),
+                     grid=N // int(block))
+    return plan, None

@@ -1002,6 +1002,13 @@ class HetSession:
         """Shared translation-cache counters (paper §4.2 JIT cache)."""
         return self.cache.stats()
 
+    def block_stats(self) -> Dict[str, object]:
+        """Block-tiled fast-path counters for backends that have one
+        (pallas): segment executions that took the ``tiled`` vs ``scalar``
+        path and the per-reason refusal histogram.  Empty for backends
+        without a tiled path."""
+        return dict(getattr(self.backend, "block_stats", None) or {})
+
     def _sync_cache_stats(self) -> None:
         st = self.cache.stats()
         self.stats["cache_hits"] = st["hits"]

@@ -115,6 +115,32 @@ def dynamic_op_count(body: Sequence[ir.Stmt],
     return total
 
 
+def dynamic_op_histogram(body: Sequence[ir.Stmt],
+                         scalars: Optional[Dict[str, object]] = None
+                         ) -> Dict[str, int]:
+    """Per-thread executed-op schedule of ``body`` broken down *by opcode*
+    — the same walk as :func:`dynamic_op_count` (loop bodies multiplied by
+    resolved trip counts, ``@PRED`` bodies in full, unresolved trips
+    counted once) but keeping each opcode's tally.  This is what the
+    measured roofline mode feeds on: memory opcodes (``LD_GLOBAL`` /
+    ``ST_GLOBAL`` / ``ATOMIC_ADD`` / block forms) give the bytes term,
+    ALU/FMA opcodes give the FLOPs term."""
+    hist: Dict[str, int] = {}
+
+    def walk(stmts: Sequence[ir.Stmt], mult: int) -> None:
+        for s in stmts:
+            if isinstance(s, ir.Op):
+                hist[s.opcode] = hist.get(s.opcode, 0) + mult
+            elif isinstance(s, ir.Pred):
+                walk(s.body, mult)
+            elif isinstance(s, ir.Loop):
+                trips = resolve_trip_count(s.count, scalars)
+                walk(s.body, mult * max(0, 1 if trips is None else trips))
+
+    walk(body, 1)
+    return hist
+
+
 def specializable_counts(body: Sequence[ir.Stmt]) -> set:
     """Scalar-param names used as trip counts of *barrier-free* loops —
     the profitability signal for launch-time specialization: binding one

@@ -1,0 +1,296 @@
+"""Block-tiled codegen tests: the lane-independence proof, the tiled pallas
+fast path's conformance against the interpreter, the zero-default register
+contract the differential sweep pinned down, and snapshot/restore through a
+block-lowered backend."""
+import numpy as np
+import pytest
+
+from repro.core import Engine, Snapshot, get_backend
+from repro.core import hetir as ir
+from repro.core import kernels_suite as suite
+from repro.core.backends.pallas_backend import PallasBackend
+from repro.core.cache import TranslationCache
+from repro.core.hetir import Builder, Ptr, Scalar
+from repro.core.passes import block_lower, choose_block
+
+RNG = np.random.default_rng(11)
+
+TILED_KERNELS = ["vadd", "saxpy", "stencil_1d", "poly_eval",
+                 "swizzle_copy", "dyn_fir"]
+
+
+# ---------------------------------------------------------------------------
+# choose_block / block_lower legality units
+# ---------------------------------------------------------------------------
+
+def test_choose_block():
+    assert choose_block(128) == 128
+    assert choose_block(16384) == 1024          # HETGPU_BLOCK_MAX cap
+    assert choose_block(96) == 32               # largest pow2 divisor
+    assert choose_block(0) is None
+    assert choose_block(128, cap=64) == 64
+
+
+def _vadd_prog():
+    b = Builder("vadd", [Ptr("A"), Ptr("B"), Ptr("C"), Scalar("n")])
+    i = b.global_id(0)
+    with b.when(i < b.param("n")):
+        b.store("C", i, b.load("A", i) + b.load("B", i))
+    return b.done()
+
+
+def test_block_lower_vadd_fully_tiled():
+    prog = _vadd_prog()
+    lens = {"A": 128, "B": 128, "C": 128}
+    plan, reason = block_lower(prog.body, 4, 32, 128, buffer_lens=lens)
+    assert reason is None and plan is not None
+    assert plan.block == 128 and plan.grid == 1
+    assert set(plan.tiled) == {"A", "B", "C"}
+    ops = {op.opcode for op in ir.walk_ops(plan.stmts)}
+    assert ir.BLOCK_LD in ops and ir.BLOCK_ST in ops
+    assert ir.LD_GLOBAL not in ops and ir.ST_GLOBAL not in ops
+    for op in ir.walk_ops(plan.stmts):
+        if op.opcode in (ir.BLOCK_LD, ir.BLOCK_ST):
+            assert op.attrs["block"] == 128
+            assert op.attrs["mode"] == "tiled"
+
+
+def test_block_lower_refuses_bad_block():
+    prog = _vadd_prog()
+    assert block_lower(prog.body, 4, 32, 0)[1] == "bad-block"
+    assert block_lower(prog.body, 4, 32, 48)[1] == "bad-block"  # 128 % 48
+
+
+def test_block_lower_refuses_shared_memory():
+    b = Builder("sh", [Ptr("A"), Ptr("Out")], shared_size=32)
+    t = b.thread_id()
+    b.store_shared(t, b.load("A", b.global_id(0)))
+    b.store("Out", b.global_id(0), b.load_shared(t))
+    _, reason = block_lower(b.done().body, 4, 32, 128)
+    assert reason == "shared-memory"
+
+
+def test_block_lower_refuses_collective():
+    b = Builder("cv", [Ptr("A"), Ptr("Out")])
+    i = b.global_id(0)
+    s = b.reduce_add(b.load("A", i))
+    b.store("Out", i, s)
+    _, reason = block_lower(b.done().body, 4, 32, 128)
+    assert reason == f"collective:{ir.REDUCE_ADD}"
+
+
+def test_block_lower_refuses_atomic():
+    b = Builder("at", [Ptr("A"), Ptr("Out")])
+    i = b.global_id(0)
+    b.atomic_add("Out", b.const(0), b.load("A", i))
+    _, reason = block_lower(b.done().body, 4, 32, 128)
+    assert reason == "atomic"
+
+
+def test_block_lower_refuses_loop_var_store_index():
+    b = Builder("lv", [Ptr("Out")])
+    with b.loop(4, hint="j") as j:
+        b.store("Out", j, b.const(1.0, ir.F32))
+    _, reason = block_lower(b.done().body, 4, 32, 128)
+    assert reason == "unprovable-base:Out"
+
+
+def test_block_lower_refuses_non_injective_store():
+    b = Builder("ni", [Ptr("Out")])
+    b.store("Out", b.const(0), b.const(1.0, ir.F32))  # every thread, slot 0
+    _, reason = block_lower(b.done().body, 4, 32, 128)
+    assert reason == "store-not-injective:Out"
+
+
+def test_block_lower_gathers_oversized_buffer():
+    """A written buffer whose length is not exactly grid*block stays in
+    gather mode (whole-buffer staging) but the segment still lowers."""
+    b = Builder("gt", [Ptr("A"), Ptr("Out")])
+    i = b.global_id(0)
+    b.store("Out", i, b.load("A", i))
+    plan, reason = block_lower(b.done().body, 4, 32, 128,
+                               buffer_lens={"A": 128, "Out": 256})
+    assert reason is None and plan is not None
+    assert "A" in plan.tiled
+    assert "Out" not in plan.tiled
+
+
+def test_block_lower_refuses_bid_store_under_divergent_predicate():
+    """A bid-indexed store is not thread-injective (the whole block hits
+    one slot) even when a predicate would mask it — the proof is
+    predicate-blind and must refuse."""
+    b = Builder("bp", [Ptr("A"), Ptr("Out")])
+    bid = b.block_id()
+    t = b.thread_id()
+    with b.when(t.eq(b.const(0))):
+        b.store("Out", bid, b.load("A", bid))
+    _, reason = block_lower(b.done().body, 4, 32, 128,
+                            buffer_lens={"A": 128, "Out": 4})
+    assert reason == "store-not-injective:Out"
+
+
+# ---------------------------------------------------------------------------
+# tiled fast path conformance: bit-identical to the interpreter
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", TILED_KERNELS)
+def test_tiled_path_bit_identical_to_interp(name):
+    prog, _oracle, grid, block, args, outs = suite.example_launch(
+        name, rng=np.random.default_rng(5))
+    ref = Engine(prog, get_backend("interp"), grid, block, dict(args))
+    assert ref.run()
+
+    backend = PallasBackend(cache=TranslationCache())
+    eng = Engine(prog, backend, grid, block, dict(args))
+    assert eng.run()
+    assert backend.block_stats["tiled"] >= 1, \
+        f"{name} did not take the tiled path: {backend.block_stats}"
+    for o in outs:
+        assert np.array_equal(np.asarray(eng.result(o)),
+                              np.asarray(ref.result(o))), \
+            f"{name}: tiled pallas diverges from interp on {o}"
+
+
+def test_block_flag_flip_does_not_poison_cache(monkeypatch):
+    """HETGPU_BLOCK_LOWER is part of the translation-cache key: flipping it
+    between launches on the same backend must re-translate, not reuse the
+    other mode's kernel."""
+    prog, _oracle, grid, block, args, outs = suite.example_launch(
+        "vadd", rng=np.random.default_rng(6))
+    backend = PallasBackend(cache=TranslationCache())
+
+    monkeypatch.setenv("HETGPU_BLOCK_LOWER", "1")
+    e1 = Engine(prog, backend, grid, block, dict(args))
+    assert e1.run()
+    assert backend.block_stats["tiled"] >= 1
+
+    monkeypatch.setenv("HETGPU_BLOCK_LOWER", "0")
+    e2 = Engine(prog, backend, grid, block, dict(args))
+    assert e2.run()
+    assert backend.block_stats["scalar"] >= 1, \
+        "flag flip reused the tiled translation: cache key misses the flag"
+    for o in outs:
+        assert np.array_equal(np.asarray(e1.result(o)),
+                              np.asarray(e2.result(o)))
+
+
+# ---------------------------------------------------------------------------
+# differential sweep: zero-default register contract (all backends, O0 and
+# OPT_MAX must agree bit-for-bit)
+# ---------------------------------------------------------------------------
+
+def _zero_trip_prog():
+    """A register defined *only* inside an engine-level loop, read after it:
+    with a zero trip count the loop never runs and every backend must see
+    the typed zero default."""
+    b = Builder("zt", [Ptr("A"), Ptr("Out"), Scalar("k")])
+    i = b.global_id(0)
+    t = b.var(b.const(0.0, ir.F32), hint="zv")
+    with b.loop("k", hint="zk") as _:
+        b.assign(t, b.load("A", i) + b.const(1.0, ir.F32))
+        b.barrier("zl")
+    b.store("Out", i, t * b.const(2.0, ir.F32))
+    return b.done()
+
+
+def _passthrough_prog():
+    """A register conditionally written in segment 1 and read in segment 2:
+    untouched lanes must carry their pre-segment value across the barrier
+    (and lanes never written read as zero)."""
+    b = Builder("pt", [Ptr("A"), Ptr("Out"), Scalar("n")])
+    i = b.global_id(0)
+    v = b.var(b.const(0.0, ir.F32), hint="pv")
+    with b.when(i < b.param("n")):
+        b.assign(v, b.load("A", i))
+    b.barrier("mid")
+    b.store("Out", i, v)
+    return b.done()
+
+
+def _revisit_prog():
+    """A non-coalesced output buffer written in two segments: the second
+    segment's read must observe the first segment's store (the pallas
+    revisited-output staging path)."""
+    b = Builder("rv", [Ptr("Out")])
+    bid = b.block_id()
+    t = b.thread_id()
+    with b.when(t.eq(b.const(0))):
+        b.store("Out", bid, b.const(1.0, ir.F32))
+    b.barrier("m")
+    with b.when(t.eq(b.const(0))):
+        b.store("Out", bid, b.load("Out", bid) + b.const(2.0, ir.F32))
+    return b.done()
+
+
+_DIFF_CASES = {
+    "zero_trip": (_zero_trip_prog, 2, 32, lambda: {
+        "A": RNG.normal(size=64).astype(np.float32),
+        "Out": np.full(64, -7.0, np.float32), "k": 0}, "Out",
+        lambda args: np.zeros(64, np.float32)),
+    "passthrough": (_passthrough_prog, 2, 32, lambda: {
+        "A": RNG.normal(size=64).astype(np.float32),
+        "Out": np.zeros(64, np.float32), "n": 40}, "Out",
+        lambda args: np.where(np.arange(64) < 40,
+                              np.asarray(args["A"]),
+                              np.float32(0.0)).astype(np.float32)),
+    "revisit": (_revisit_prog, 4, 32, lambda: {
+        "Out": np.zeros(4, np.float32)}, "Out",
+        lambda args: np.full(4, 3.0, np.float32)),
+}
+
+
+@pytest.mark.parametrize("case", sorted(_DIFF_CASES))
+@pytest.mark.parametrize("backend", ["interp", "vectorized", "pallas"])
+@pytest.mark.parametrize("opt", [0, None])  # None = OPT_MAX default
+def test_differential_zero_default_contract(case, backend, opt):
+    mk_prog, grid, block, mk_args, out, expect = _DIFF_CASES[case]
+    args = mk_args()
+    kw = {} if opt is None else {"opt_level": opt}
+    eng = Engine(mk_prog(), get_backend(backend), grid, block,
+                 dict(args), **kw)
+    assert eng.run()
+    np.testing.assert_array_equal(
+        np.asarray(eng.result(out)), expect(args),
+        err_msg=f"{case} on {backend} (opt={opt})")
+
+
+# ---------------------------------------------------------------------------
+# snapshot / restore through the block-lowered backend
+# ---------------------------------------------------------------------------
+
+def test_snapshot_restore_block_lowered_bit_identical():
+    """Pause a multi-segment kernel on the block-lowering pallas backend,
+    serialize, resume on a fresh pallas backend: bit-identical to the
+    unpaused run, and the restored launch record keeps the buffer shapes
+    (so specialization and tiled legality re-key correctly)."""
+    prog, _oracle = suite.persistent_counter()
+    args = {"State": RNG.normal(size=64).astype(np.float32), "iters": 6}
+
+    ref = Engine(prog, PallasBackend(cache=TranslationCache()),
+                 2, 32, dict(args))
+    assert ref.run()
+
+    eng = Engine(prog, PallasBackend(cache=TranslationCache()),
+                 2, 32, dict(args))
+    assert not eng.run(max_segments=3)
+    blob = eng.snapshot().to_bytes()
+    eng2 = Engine.resume(prog, PallasBackend(cache=TranslationCache()),
+                         Snapshot.from_bytes(blob))
+    assert eng2.launch.buffer_shapes.get("State") == (64,)
+    assert eng2.run()
+    np.testing.assert_array_equal(eng2.result("State"), ref.result("State"))
+
+
+def test_snapshot_restore_block_lowered_to_interp():
+    prog, oracle = suite.persistent_counter()
+    args = {"State": RNG.normal(size=64).astype(np.float32), "iters": 6}
+    eng = Engine(prog, PallasBackend(cache=TranslationCache()),
+                 2, 32, dict(args))
+    assert not eng.run(max_segments=3)
+    blob = eng.snapshot().to_bytes()
+    eng2 = Engine.resume(prog, get_backend("interp"),
+                         Snapshot.from_bytes(blob))
+    assert eng2.run()
+    expect = oracle(dict(args, _num_blocks=2, _block_size=32))
+    np.testing.assert_allclose(eng2.result("State"), expect["State"],
+                               rtol=1e-4, atol=1e-4)

@@ -55,7 +55,11 @@ def _run(prog, backend, grid, block, args, specialize=None, cache=None):
 def test_auto_policy_specializes_dynamic_trip_programs():
     prog, _ = suite.dyn_fir()
     eng = _run(prog, "interp", 2, 32, _fir_args())
-    assert eng.spec_key == (("taps", 4),)
+    # shape-aware key (PR 8): buffer shapes ride as inert "#shape" entries
+    # alongside the bound scalars
+    assert ("taps", 4) in eng.spec_key
+    assert ("A#shape", 64) in eng.spec_key
+    assert ("W#shape", 4) in eng.spec_key
     assert eng.opt_stats.per_pass.get("bind_launch_scalars", 0) >= 1
     assert eng.opt_stats.spec_key == eng.spec_key
 
@@ -109,7 +113,7 @@ def test_budget_exhaustion_falls_back_to_generic(monkeypatch):
     # an explicit per-launch demand bypasses the budget (the budget
     # polices the ambient policy, not deliberate requests)
     eng = _run(prog, "interp", 2, 32, _fir_args(taps=9), specialize=True)
-    assert eng.spec_key == (("taps", 9),)
+    assert ("taps", 9) in eng.spec_key
 
 
 def test_warmup_with_synthesized_args_stays_generic(tmp_path):

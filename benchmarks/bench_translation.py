@@ -18,18 +18,35 @@ so every segment is a disk restore.  "Translation time" is the cache's own
 accounting — ``translate_ms`` (wall-time inside translation factories:
 staging + jax.export tracing) for cold, ``translate_ms + restore_ms``
 (any fresh translation plus deserialize/revive time) for warm — and the
-table also reports end-to-end launch wall time for both phases.
+table also reports end-to-end launch wall time for both phases.  Warm
+timing is further split into what kind of work the restart actually paid:
+``warm_trace_ms`` (Python re-trace — must be ~0, that is what PR 3's
+StableHLO persistence bought) vs ``warm_compile_ms`` (XLA compile paid
+during restores — must be ~0 *only* because store format v2 persists the
+AOT-compiled executable; conflating the two made the AOT win invisible).
+
+``run_cluster`` is the fleet version of the same claim: N fresh
+*processes* over one :class:`~repro.core.cache.SharedStore` fabric,
+exactly one translation per (kernel, backend) fleet-wide, everyone else
+fetch-and-warm-starts with ~0 compile, bit-identical to a cold
+single-process oracle.
 """
 from __future__ import annotations
 
+import hashlib
+import json
+import os
 import shutil
+import subprocess
+import sys
 import tempfile
 import time
+from pathlib import Path
 
 import numpy as np
 
-from repro.core import DiskStore, Engine, OPT_MAX, TranslationCache, \
-    get_backend
+from repro.core import DiskStore, Engine, OPT_MAX, SharedStore, \
+    TranslationCache, get_backend
 from repro.core import kernels_suite as suite
 
 
@@ -261,6 +278,17 @@ def run_cold_warm(kernels=DEFAULT_COLD_WARM_KERNELS,
                 "cold_translated": cst["translated"],
                 "warm_translated": wst["translated"],
                 "warm_restored": wst["restored"],
+                # the split: what kind of work each phase actually paid.
+                # trace = Python trace + jax.export; compile = XLA compile
+                # (translate-side for cold, restore-side recompiles for
+                # warm — ~0 when the persisted AOT executable revives).
+                "cold_trace_ms": round(cst["trace_ms"], 1),
+                "cold_compile_ms": round(cst["compile_ms"], 1),
+                "warm_trace_ms": round(wst["trace_ms"], 1),
+                "warm_compile_ms": round(
+                    wst["compile_ms"] + wst["restore_compile_ms"], 1),
+                "warm_aot_restored": wst["aot_restored"],
+                "warm_aot_fallbacks": wst["aot_fallback_restores"],
                 "speedup": round(
                     cold_translation / max(warm_translation, 1e-6), 1),
             })
@@ -274,4 +302,168 @@ def run_cold_warm(kernels=DEFAULT_COLD_WARM_KERNELS,
     finally:
         if store_dir is None:
             shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# cluster scenario: N fresh processes, one translation fleet-wide
+# ---------------------------------------------------------------------------
+
+DEFAULT_CLUSTER_KERNELS = ("vadd", "reduction")
+
+# Runs in a *fresh interpreter* (spawned, never forked — jax is
+# fork-unsafe): one cluster node coming up cold against the shared
+# fabric.  argv: src_path backend shared_dir node_dir kernels_csv.
+# Prints one JSON object on the last stdout line.
+_CLUSTER_NODE = r"""
+import hashlib, json, sys, time
+import numpy as np
+
+sys.path.insert(0, sys.argv[1])
+from repro.core import DiskStore, Engine, SharedStore, TranslationCache, \
+    get_backend
+from repro.core import kernels_suite as suite
+
+backend, shared_dir, node_dir = sys.argv[2], sys.argv[3], sys.argv[4]
+kernels = sys.argv[5].split(",")
+
+cache = TranslationCache(store=DiskStore(node_dir),
+                         shared=SharedStore(shared_dir))
+be = get_backend(backend, cache=cache)
+digests = {}
+t0 = time.perf_counter()
+for name in kernels:
+    prog, _oracle, grid, block, args, outs = suite.example_launch(
+        name, rng=np.random.default_rng(0))
+    eng = Engine(prog, be, grid, block,
+                 {k: np.array(v, copy=True) for k, v in args.items()})
+    eng.run()
+    h = hashlib.sha256()
+    for o in outs:
+        h.update(np.ascontiguousarray(np.asarray(eng.result(o))).tobytes())
+    digests[name] = h.hexdigest()
+wall_ms = (time.perf_counter() - t0) * 1e3
+st = cache.stats()
+print(json.dumps({
+    "digests": digests, "wall_ms": wall_ms,
+    "translated": st["translated"], "restored": st["restored"],
+    "shared_fetches": st["shared_fetches"],
+    "shared_publishes": st["shared_publishes"],
+    "aot_restored": st["aot_restored"],
+    "aot_fallbacks": st["aot_fallback_restores"],
+    "translate_ms": st["translate_ms"], "restore_ms": st["restore_ms"],
+    "trace_ms": st["trace_ms"], "compile_ms": st["compile_ms"],
+    "restore_compile_ms": st["restore_compile_ms"],
+}))
+"""
+
+
+def _oracle_digests(backend: str, kernels) -> tuple:
+    """Cold single-process oracle: fresh memory-only cache.  Returns
+    (digests, cache stats) — the bit-identity reference and the cold
+    translation cost the fleet amortizes."""
+    import hashlib as _hashlib
+    cache = TranslationCache()
+    be = get_backend(backend, cache=cache)
+    digests = {}
+    for name in kernels:
+        prog, _oracle, grid, block, args, outs = suite.example_launch(
+            name, rng=np.random.default_rng(0))
+        eng = Engine(prog, be, grid, block,
+                     {k: np.array(v, copy=True) for k, v in args.items()})
+        eng.run()
+        h = _hashlib.sha256()
+        for o in outs:
+            h.update(np.ascontiguousarray(
+                np.asarray(eng.result(o))).tobytes())
+        digests[name] = h.hexdigest()
+    return digests, cache.stats()
+
+
+def _spawn_nodes(n: int, backend: str, shared: Path, root: Path,
+                 kernels, tag: str) -> list:
+    """Launch ``n`` fresh cluster-node interpreters concurrently and
+    return their parsed JSON reports (raises on any node failure)."""
+    src = str(Path(suite.__file__).resolve().parents[2])
+    script = root / "cluster_node.py"
+    script.write_text(_CLUSTER_NODE)
+    procs = []
+    for i in range(n):
+        node_dir = root / f"{tag}-node{i}"
+        procs.append(subprocess.Popen(
+            [sys.executable, str(script), src, backend, str(shared),
+             str(node_dir), ",".join(kernels)],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+            env={**os.environ, "JAX_PLATFORMS": "cpu"}))
+    reports = []
+    for p in procs:
+        out, err = p.communicate(timeout=600)
+        if p.returncode != 0:
+            raise RuntimeError(f"cluster node failed:\n{err.decode()}")
+        reports.append(json.loads(out.decode().strip().splitlines()[-1]))
+    return reports
+
+
+def run_cluster(kernels=DEFAULT_CLUSTER_KERNELS, backends=("pallas",),
+                nprocs: int = 4, shared_dir=None) -> list:
+    """The fabric's headline claim, measured: ``nprocs`` fresh processes
+    race up cold against one :class:`SharedStore` (fleet-wide
+    single-flight dedupes every translation), then one more fresh
+    late-joiner warm-starts purely from the fabric.
+
+    Per backend the row reports: ``fleet_translated`` (must equal the
+    cold oracle's ``expected_translations`` — exactly one translation per
+    cache key fleet-wide), ``bit_identical`` (every node's outputs match
+    the cold single-process oracle), and the late-joiner's split warm
+    cost — ``warm_trace_ms`` / ``warm_compile_ms`` both ~0 (it fetched
+    AOT executables) with ``speedup`` = oracle cold translation over its
+    warm translation (restore) cost."""
+    root = Path(shared_dir or tempfile.mkdtemp(prefix="hetgpu-cluster-"))
+    rows = []
+    total_cold = total_warm = 0.0
+    try:
+        for backend in backends:
+            shared = root / f"fabric-{backend}"
+            oracle, cst = _oracle_digests(backend, kernels)
+            race = _spawn_nodes(nprocs, backend, shared, root, kernels,
+                                tag=f"race-{backend}")
+            warm = _spawn_nodes(1, backend, shared, root, kernels,
+                                tag=f"warm-{backend}")[0]
+            fleet_translated = sum(r["translated"] for r in race)
+            bit_identical = all(r["digests"] == oracle
+                                for r in race + [warm])
+            cold_translation = cst["translate_ms"]
+            warm_translation = warm["translate_ms"] + warm["restore_ms"]
+            total_cold += cold_translation
+            total_warm += warm_translation
+            rows.append({
+                "bench": "translation_cluster", "backend": backend,
+                "kernels": len(kernels), "procs": nprocs + 1,
+                "expected_translations": cst["translated"],
+                "fleet_translated": fleet_translated,
+                "race_warm_procs": sum(1 for r in race
+                                       if r["translated"] == 0),
+                "bit_identical": bit_identical,
+                "cold_translation_ms": round(cold_translation, 1),
+                "warm_translation_ms": round(warm_translation, 1),
+                "warm_translated": warm["translated"],
+                "warm_restored": warm["restored"],
+                "warm_fetched": warm["shared_fetches"],
+                "warm_aot_restored": warm["aot_restored"],
+                "warm_trace_ms": round(warm["trace_ms"], 1),
+                "warm_compile_ms": round(
+                    warm["compile_ms"] + warm["restore_compile_ms"], 1),
+                "speedup": round(
+                    cold_translation / max(warm_translation, 1e-6), 1),
+            })
+        rows.append({
+            "bench": "translation_cluster", "backend": "ALL",
+            "kernels": len(kernels), "procs": nprocs + 1,
+            "cold_translation_ms": round(total_cold, 1),
+            "warm_translation_ms": round(total_warm, 1),
+            "speedup": round(total_cold / max(total_warm, 1e-6), 1),
+        })
+    finally:
+        if shared_dir is None:
+            shutil.rmtree(root, ignore_errors=True)
     return rows

@@ -26,6 +26,10 @@ def main(argv: Optional[List[str]] = None) -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--json", metavar="PATH", default=None,
                         help="also write all rows as one JSON document")
+    parser.add_argument("--cluster", action="store_true",
+                        help="also run the multi-process cluster cache "
+                             "fabric scenario (spawns fresh interpreters; "
+                             "slow, so opt-in)")
     opts = parser.parse_args(argv)
 
     from benchmarks import (bench_fleet, bench_kernels, bench_migration,
@@ -47,6 +51,10 @@ def main(argv: Optional[List[str]] = None) -> None:
     _emit(bench_translation.run_specialization(), sink)
     print("# -- paper 4.2: persistent cache, cold vs warm start --")
     _emit(bench_translation.run_cold_warm(), sink)
+    if opts.cluster:
+        print("# -- paper 4.2: cluster cache fabric (translate once "
+              "per fleet) --")
+        _emit(bench_translation.run_cluster(), sink)
     print("# -- paper 6.3: live migration downtime --")
     _emit(bench_migration.run(), sink)
     print("# -- paper 4.3: stream scheduler (async overlap + overhead) --")

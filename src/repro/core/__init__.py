@@ -5,7 +5,7 @@ the persistent cost-aware translation cache (see docs/ARCHITECTURE.md for
 the paper-section → module map)."""
 from . import alias, hetir
 from .backends import BACKENDS, get_backend
-from .cache import (DiskStore, TranslationCache, global_cache,
+from .cache import (DiskStore, SharedStore, TranslationCache, global_cache,
                     register_reviver)
 from .engine import Engine
 from .fleet import (FAULT_POINTS, FaultInjector, FleetCoordinator,
@@ -29,6 +29,7 @@ __all__ = ["alias", "hetir", "BACKENDS", "get_backend", "Engine",
            "FleetCoordinator", "FleetTicket", "RetryQueue", "FaultInjector",
            "FAULT_POINTS", "FleetError", "FleetTimeout", "FleetWorkerError",
            "WorkerLost",
-           "DiskStore", "global_cache", "register_reviver", "optimize",
+           "DiskStore", "SharedStore", "global_cache", "register_reviver",
+           "optimize",
            "get_optimized", "get_specialized", "SpecializationPolicy",
            "PipelineStats", "OPT_MAX", "DEFAULT_OPT_LEVEL"]

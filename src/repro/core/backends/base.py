@@ -7,14 +7,18 @@ for free.
 
 This module also owns the *persistence contract* for jitted translations
 (paper §4.2's cluster-lifetime JIT amortization): the vectorized and pallas
-backends trace their segments through ``jax.export`` at translate time, so
-the translation cache can write the serialized StableHLO artifact to its
-:class:`~repro.core.cache.DiskStore`.  A warm process revives the artifact
-with :func:`jax.export.deserialize` and pays only the (cheap) XLA compile —
-the expensive Python re-trace of the IR evaluator is skipped entirely.
+backends trace their segments through ``jax.export`` at translate time and
+AOT-compile them, so the translation cache persists both the portable
+StableHLO artifact *and* the serialized XLA executable
+(``jax.experimental.serialize_executable``) to its
+:class:`~repro.core.cache.DiskStore` / :class:`~repro.core.cache.SharedStore`
+tiers.  A warm process deserializes the executable directly — skipping the
+expensive Python re-trace *and* the XLA compile — and falls back to
+recompiling the StableHLO only when executable revival is impossible.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
 
@@ -116,35 +120,79 @@ def state_signature(state: HostState) -> Tuple[Tuple, Tuple, Optional[Tuple]]:
 
 
 # ---------------------------------------------------------------------------
-# jax.export persistence: serialize traced+lowered segments so a warm
-# process skips Python re-tracing (the dominant translation cost).
+# jax.export + AOT persistence: serialize the traced StableHLO *and* the
+# XLA-compiled executable, so a warm process skips both Python re-tracing
+# and the XLA compile (store format v2, the cluster-fabric contract).
 # ---------------------------------------------------------------------------
 
 def export_translation(
         jitted, example_args: Tuple,
         cache: Optional[TranslationCache] = None) -> Tuple[Any,
-                                                           Optional[bytes]]:
+                                                           Optional[Tuple]]:
     """Trace ``jitted`` over ``example_args`` (arrays or ShapeDtypeStructs,
-    any pytree) with ``jax.export`` and return ``(live fn, payload bytes)``.
-    The live fn is the re-jitted exported call — same semantics, compiled
-    from the recorded StableHLO.  If export is unsupported for this
-    computation, fall back to the plain jitted fn with no payload (the
-    entry then lives in memory only) and record the failure on ``cache``
-    (``stats()['export_fallbacks']`` / ``['last_export_error']``) so the
-    lost persistence is diagnosable."""
+    any pytree) with ``jax.export``, AOT-compile it, and return
+    ``(live fn, payload)`` where the live fn is the *compiled* executable
+    (ready to call, no deferred first-launch compile) and the payload is
+    the ``jax-aot`` triple ``(hlo_blob, exe, argspec)``:
+
+    * ``hlo_blob`` — the portable serialized StableHLO (always present in
+      a payload; survives jaxlib upgrades since the runtime tag retires
+      version-skewed stores anyway),
+    * ``exe`` — ``jax.experimental.serialize_executable.serialize`` output
+      for the compiled executable, or ``None`` when executable
+      serialization failed (counted via ``cache.note_aot_fallback``; warm
+      starts then recompile from the HLO),
+    * ``argspec`` — ``(treedef, [(shape, dtype_str), ...])`` of the
+      example args, so the HLO-fallback reviver can eagerly AOT-compile
+      and the compile cost lands in ``restore_compile_ms`` instead of
+      hiding in the first launch.
+
+    Translate-side wall time is split into trace/export vs XLA-compile on
+    ``cache`` (``stats()['trace_ms']`` / ``['compile_ms']``).  If export
+    itself is unsupported for this computation, fall back to the plain
+    jitted fn with no payload (the entry then lives in memory only) and
+    record the failure (``stats()['export_fallbacks']`` /
+    ``['last_export_error']``) so the lost persistence is diagnosable."""
     import jax
 
     try:
         from jax import export as jexport
+        t0 = time.perf_counter()
         structs = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(np.shape(a), np.dtype(a.dtype)),
             example_args)
         exported = jexport.export(jitted)(*structs)
-        return jax.jit(exported.call), exported.serialize()
+        hlo_blob = exported.serialize()
+        t1 = time.perf_counter()
     except Exception as exc:
         if cache is not None:
             cache.note_export_fallback(f"{type(exc).__name__}: {exc}")
         return jitted, None
+
+    flat, treedef = jax.tree.flatten(structs)
+    argspec = (treedef, [(tuple(s.shape), np.dtype(s.dtype).str)
+                         for s in flat])
+    fn, exe = jitted, None
+    try:
+        compiled = jitted.lower(*structs).compile()
+        t2 = time.perf_counter()
+        fn = compiled
+        try:
+            from jax.experimental import serialize_executable
+            exe = serialize_executable.serialize(compiled)
+        except Exception as exc:
+            if cache is not None:
+                cache.note_aot_fallback(f"{type(exc).__name__}: {exc}")
+    except Exception as exc:
+        # AOT lowering failed outright: stay on the lazily-compiling
+        # jitted fn; the persisted HLO still spares warm re-traces
+        t2 = time.perf_counter()
+        if cache is not None:
+            cache.note_aot_fallback(f"{type(exc).__name__}: {exc}")
+    if cache is not None:
+        cache.note_translate_detail(trace_ms=(t1 - t0) * 1e3,
+                                    compile_ms=(t2 - t1) * 1e3)
+    return fn, (hlo_blob, exe, argspec)
 
 
 def _revive_exported(blob: bytes):
@@ -159,5 +207,47 @@ def _revive_exported_with_meta(payload: Tuple[bytes, Dict]):
     return _revive_exported(blob), meta
 
 
+def _revive_aot(payload: Tuple):
+    """Revive a ``jax-aot`` payload: deserialize the pickled executable
+    (no XLA compile — the fabric's warm-start guarantee) or, when that
+    fails (absent / host-topology skew), eagerly recompile from the
+    portable StableHLO so the compile cost is attributed to the restore
+    (``restore_compile_ms``), not smeared into the first launch."""
+    import jax
+    from jax import export as jexport
+    from ..cache import note_restore_detail
+
+    hlo_blob, exe, argspec = payload
+    if exe is not None:
+        try:
+            from jax.experimental import serialize_executable
+            fn = serialize_executable.deserialize_and_load(*exe)
+            note_restore_detail(aot=True)
+            return fn
+        except Exception:
+            pass  # fall through to the HLO recompile below
+    exported = jexport.deserialize(hlo_blob)
+    jitted = jax.jit(exported.call)
+    t0 = time.perf_counter()
+    try:
+        treedef, flat_spec = argspec
+        structs = jax.tree.unflatten(
+            treedef, [jax.ShapeDtypeStruct(shape, np.dtype(dt))
+                      for shape, dt in flat_spec])
+        fn = jitted.lower(*structs).compile()
+    except Exception:
+        fn = jitted  # compile lazily on first launch
+    note_restore_detail(aot=False,
+                        compile_ms=(time.perf_counter() - t0) * 1e3)
+    return fn
+
+
+def _revive_aot_with_meta(payload: Tuple):
+    inner, meta = payload
+    return _revive_aot(inner), meta
+
+
 register_reviver("jax-export", _revive_exported)
 register_reviver("jax-export-meta", _revive_exported_with_meta)
+register_reviver("jax-aot", _revive_aot)
+register_reviver("jax-aot-meta", _revive_aot_with_meta)

@@ -277,13 +277,17 @@ def _exec_collective(op: ir.Op, ctx: _BlockCtx, threads: List[int]) -> None:
             ctx.reg_write(d, t, r)
     elif oc == ir.REDUCE_ADD:
         vals = [_val(ctx, op.args[0], t) for t in threads]
-        # accumulate in the dest dtype: numpy's sum silently promotes
-        # int32 to the platform int, which would make interp reductions
-        # wrap differently from the jnp backends (fuzz-harness find)
-        r = np.sum(np.array(vals), dtype=ir.np_dtype(d.dtype)) \
-            if vals else 0
+        # accumulate in the dest dtype (numpy's sum silently promotes
+        # int32 to the platform int — fuzz-harness find) and strictly
+        # sequentially in lane order: np.sum uses pairwise summation,
+        # whose float rounding diverged from the jnp backends' lane-order
+        # fold (the documented nn_layer ULP divergence)
+        dt = np.dtype(ir.np_dtype(d.dtype))
+        acc = np.zeros((), dtype=dt)  # 0-d: int overflow wraps, no warning
+        for val in vals:
+            acc = np.add(acc, val, dtype=dt)
         for t in threads:
-            ctx.reg_write(d, t, r)
+            ctx.reg_write(d, t, dt.type(acc))
     elif oc == ir.REDUCE_MAX:
         vals = [_val(ctx, op.args[0], t) for t in threads]
         r = np.max(np.array(vals))

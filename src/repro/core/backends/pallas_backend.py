@@ -253,9 +253,10 @@ class PallasBackend(Backend):
                if has_shared else [])
             + [jax.ShapeDtypeStruct(shape, np.dtype(dt))
                for _, shape, dt in glb_sig])
-        fn, blob = export_translation(jax.jit(call), example,
-                                      cache=self.cache)
-        persist = None if blob is None else ("jax-export-meta", (blob, meta))
+        fn, payload = export_translation(jax.jit(call), example,
+                                         cache=self.cache)
+        persist = None if payload is None \
+            else ("jax-aot-meta", (payload, meta))
         return (fn, meta), persist
 
     def _build_block(self, plan: BlockPlan, seg: SegNode, launch: Launch,
@@ -375,9 +376,10 @@ class PallasBackend(Backend):
              for _, _, dt in reg_sig]
             + [jax.ShapeDtypeStruct(shape, np.dtype(dt))
                for _, shape, dt in glb_sig])
-        fn, blob = export_translation(jax.jit(call), example,
-                                      cache=self.cache)
-        persist = None if blob is None else ("jax-export-meta", (blob, meta))
+        fn, payload = export_translation(jax.jit(call), example,
+                                         cache=self.cache)
+        persist = None if payload is None \
+            else ("jax-aot-meta", (payload, meta))
         return (fn, meta), persist
 
     # ------------------------------------------------------------------

@@ -236,7 +236,7 @@ def eval_op(op: ir.Op, env: Env, mask) -> None:
     elif oc == ir.REDUCE_ADD:
         v = _arg(env, op.args[0])
         v = v if mask is None else jnp.where(mask, v, jnp.zeros_like(v))
-        env.write_reg(d, jnp.sum(v, axis=-1, keepdims=True), mask)
+        env.write_reg(d, _seq_reduce_add(v), mask)
     elif oc == ir.REDUCE_MAX:
         v = _arg(env, op.args[0])
         neg = jnp.full_like(v, _min_value(v.dtype))
@@ -245,7 +245,7 @@ def eval_op(op: ir.Op, env: Env, mask) -> None:
     elif oc == ir.SCAN_ADD:
         v = _arg(env, op.args[0])
         v = v if mask is None else jnp.where(mask, v, jnp.zeros_like(v))
-        env.write_reg(d, jnp.cumsum(v, axis=-1), mask)
+        env.write_reg(d, _seq_scan_add(v), mask)
     elif oc == ir.SHUFFLE:
         v = _arg(env, op.args[0])
         src = _arg(env, op.args[1]).astype(jnp.int32)
@@ -262,6 +262,40 @@ def _global_idx(env: Env, buf_name: str, idx_arg):
     if buf_name in env.coalesced:
         idx = idx - jnp.asarray(env.tile_base, jnp.int32)
     return idx
+
+
+def _seq_reduce_add(v):
+    """Lane-order sequential sum, one pinned rounding per add.
+
+    ``jnp.sum`` lets XLA pick the reduction tree (and numpy's ``sum`` on
+    the interp side used pairwise summation), so float REDUCE_ADD results
+    disagreed across backends in the low bits — the documented
+    inclusive_scan/nn_layer ULP divergence.  The portable contract is the
+    same one every scalar op follows: strict IEEE-sequential over lane
+    order, one rounding per ADD (:func:`_pin`).  Masked-off lanes were
+    already zeroed by the caller, and ``x + 0.0`` is exact, so inactive
+    lanes never perturb the fold.  Integers are exact under any
+    association and keep the vectorized path."""
+    if not jnp.issubdtype(v.dtype, jnp.floating):
+        return jnp.sum(v, axis=-1, keepdims=True)
+    acc = v[..., 0:1]
+    for t in range(1, v.shape[-1]):
+        acc = _pin(acc + v[..., t:t + 1])
+    return acc
+
+
+def _seq_scan_add(v):
+    """Lane-order sequential inclusive prefix sum (see _seq_reduce_add).
+
+    Unrolled at trace time: lane t's prefix is the pinned fold of lanes
+    0..t, so every partial matches the interpreter's sequential
+    accumulator bit for bit."""
+    if not jnp.issubdtype(v.dtype, jnp.floating):
+        return jnp.cumsum(v, axis=-1)
+    cols = [v[..., 0:1]]
+    for t in range(1, v.shape[-1]):
+        cols.append(_pin(cols[-1] + v[..., t:t + 1]))
+    return jnp.concatenate(cols, axis=-1)
 
 
 def _active(pred, mask):

@@ -55,10 +55,10 @@ class VectorizedBackend(Backend):
                 eval_stmts(seg.stmts, env, mask=None)
                 return env.regs, env.shared, env.globals
 
-            fn, blob = export_translation(
+            fn, payload = export_translation(
                 run, (dict(state.regs), state.shared, dict(state.globals_)),
                 cache=self.cache)
-            return fn, (None if blob is None else ("jax-export", blob))
+            return fn, (None if payload is None else ("jax-aot", payload))
 
         return self.cache.get_or_translate(key, translate)
 

@@ -16,9 +16,9 @@ translations.  Backends append whatever else their codegen specializes on
 (launch geometry, uniform scalars, register/buffer signatures), which is
 exactly what makes a relaunch hit and a geometry or dtype change miss.
 
-Two layers extend the paper's per-process cache to its *cluster lifetime*
-amortization model (§4.2 notes JIT cost is paid once per kernel, not per
-process):
+Three layers extend the paper's per-process cache to its *cluster
+lifetime* amortization model (§4.2 notes JIT cost is paid once per kernel,
+not per process — and the fabric makes that once per *fleet*):
 
 * **Persistence** — an optional :class:`DiskStore` gives the cache a
   content-addressed on-disk tier.  Entries are written atomically
@@ -31,6 +31,17 @@ process):
   dominant translation cost — and only replays the cheap StableHLO compile.
   Revival is dispatched through a ``kind`` → reviver registry
   (:func:`register_reviver`) so the cache core stays backend-agnostic.
+  Since store format v2 the jit backends persist the **AOT-compiled
+  executable** (``jax.experimental.serialize_executable``) next to the
+  portable StableHLO, so a warm start skips the XLA compile too —
+  ``stats()`` splits ``trace_ms`` / ``compile_ms`` / ``restore_compile_ms``
+  to keep that honest.
+
+* **Cluster fabric** — an optional :class:`SharedStore` (shared
+  filesystem, ``HETGPU_CACHE_SHARED_DIR``) layered *under* the local
+  store: fetch-on-miss with local replication, publish-on-translate, and
+  fleet-wide single-flight locking, so N fresh processes pay exactly one
+  translation cluster-wide.
 
 * **Cost-aware eviction** — every entry carries its measured translation
   wall-time and serialized size; in-memory eviction uses a GDSF-style
@@ -68,7 +79,10 @@ except ImportError:  # pragma: no cover - non-POSIX platform
 
 #: bump when the envelope layout or any persisted payload format changes —
 #: old store directories are simply never looked at again (tag mismatch)
-STORE_FORMAT_VERSION = 1
+#: v2: jitted translations persist the AOT-compiled executable alongside
+#: the StableHLO (``jax-aot`` / ``jax-aot-meta`` kinds), so warm starts
+#: skip XLA compile, not just Python re-trace
+STORE_FORMAT_VERSION = 2
 
 _ENVELOPE_MAGIC = "hetgpu-tcache"
 
@@ -84,6 +98,29 @@ def register_reviver(kind: str, fn: Callable[[Any], Any]) -> None:
     """Register ``fn`` to turn a persisted payload of ``kind`` back into a
     live cache value.  Last registration wins (idempotent re-imports)."""
     _REVIVERS[kind] = fn
+
+
+# Side-channel from revivers back to the cache doing the restore: revivers
+# are plain ``payload -> value`` callables with no cache handle, but the
+# AOT reviver needs to report *how* it revived (deserialized executable vs
+# recompiled from StableHLO, and the compile wall-time it paid).  They call
+# :func:`note_restore_detail`; the cache pops the fields right after the
+# reviver returns, on the same thread.
+_RESTORE_DETAIL = threading.local()
+
+
+def note_restore_detail(**fields) -> None:
+    """Called by revivers to annotate the in-progress restore (thread-local;
+    consumed by the cache that invoked the reviver)."""
+    current = getattr(_RESTORE_DETAIL, "fields", None) or {}
+    current.update(fields)
+    _RESTORE_DETAIL.fields = current
+
+
+def _pop_restore_detail() -> Dict[str, Any]:
+    fields = getattr(_RESTORE_DETAIL, "fields", None) or {}
+    _RESTORE_DETAIL.fields = {}
+    return fields
 
 
 def _runtime_tag() -> str:
@@ -161,6 +198,7 @@ class DiskStore:
         self.corrupt = 0
         self.gc_evictions = 0
         self.gc_runs = 0
+        self.lock_sweeps = 0
         # running estimate of the directory's entry bytes; seeded by a
         # scan here, incremented per save, corrected exactly by each gc()
         self._approx_bytes = self.total_bytes()
@@ -353,11 +391,48 @@ class DiskStore:
                     continue
                 total -= size
                 evicted += 1
+        swept = self._sweep_orphan_locks()
         with self._lock:
             self._approx_bytes = total
             self.gc_evictions += evicted
             self.gc_runs += 1
+            self.lock_sweeps += swept
         return evicted
+
+    def _sweep_orphan_locks(self) -> int:
+        """Unlink ``.lock`` sidecars whose entry is gone (evicted,
+        quarantined, or cleared) — without the sweep a long-lived store
+        accumulates one inode per key it has *ever* translated.  A sidecar
+        is only removed while we hold its ``flock`` non-blocking, so a
+        lock someone currently holds (e.g. an in-flight first translation,
+        which takes the lock before any entry exists) is never touched.
+        A process that opened the file but has not flocked yet can still
+        end up on the doomed inode — the documented benign degradation:
+        a split lock only means duplicated translation work, since entry
+        publishes stay atomic either way."""
+        if fcntl is None:
+            return 0
+        swept = 0
+        for lock_path in self.dir.glob("*.lock"):
+            if lock_path.with_suffix(".tce").exists():
+                continue
+            try:
+                fd = os.open(str(lock_path), os.O_RDWR)
+            except OSError:
+                continue
+            try:
+                try:
+                    fcntl.flock(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+                except OSError:
+                    continue  # held right now: an in-flight translation
+                try:
+                    os.unlink(lock_path)
+                    swept += 1
+                except OSError:
+                    pass
+            finally:
+                os.close(fd)
+        return swept
 
     def stats(self) -> Dict[str, object]:
         """Cheap counters only — no directory scan, this runs on the
@@ -375,6 +450,7 @@ class DiskStore:
                 "approx_bytes": self._approx_bytes,
                 "gc_evictions": self.gc_evictions,
                 "gc_runs": self.gc_runs,
+                "lock_sweeps": self.lock_sweeps,
             }
 
     def clear(self) -> None:
@@ -386,6 +462,69 @@ class DiskStore:
                     pass
         with self._lock:
             self._approx_bytes = 0
+
+
+class SharedStore(DiskStore):
+    """Cluster-wide fetch-on-miss tier: one :class:`DiskStore` directory on
+    a shared filesystem, layered *under* each node's local store.
+
+    This is the paper's cluster-lifetime amortization made literal: a
+    translation is published once (atomic temp-file + ``os.replace``, same
+    envelope format and corruption tolerance as the local tier) and every
+    other process in the fleet *fetches* it instead of translating.  The
+    flock sidecar protocol works unchanged on the shared directory, which
+    is what turns per-process single-flight into **fleet-wide**
+    single-flight: when a cache has a shared tier attached, it takes the
+    translation lock on the shared store, so N fresh processes missing on
+    the same key produce exactly one translation cluster-wide.
+
+    Fetched entries are *replicated* into the fetching process's local
+    store (when it has one), so subsequent cold starts on that node never
+    touch the shared filesystem again — the fabric is a fill path, not a
+    dependency.
+
+    Attach via ``HETGPU_CACHE_SHARED_DIR`` (process-wide default cache),
+    ``HetSession(shared=...)``, or ``FleetCoordinator(shared_dir=...)``.
+    Size-bound with ``HETGPU_CACHE_SHARED_MAX_BYTES`` (same GDSF gc as the
+    local tier; unset = unbounded — a fleet's shared tier usually *wants*
+    to keep everything).
+    """
+
+    def __init__(self, root, tag: Optional[str] = None,
+                 max_bytes: Optional[int] = None):
+        if max_bytes is None:
+            max_bytes = int(os.environ.get("HETGPU_CACHE_SHARED_MAX_BYTES",
+                                           "0") or 0)
+        super().__init__(root, tag=tag, max_bytes=max_bytes)
+        self.publishes = 0
+        self.fetches = 0
+        self.fetch_misses = 0
+
+    def publish(self, key: Hashable, kind: str, payload: Any,
+                cost_ms: float = 0.0) -> int:
+        """Atomically publish one translation to the fleet."""
+        nbytes = self.save(key, kind, payload, cost_ms=cost_ms)
+        with self._lock:
+            self.publishes += 1
+        return nbytes
+
+    def fetch(self, key: Hashable) -> Optional[Dict[str, Any]]:
+        """Load an envelope published by any fleet member (``None`` = clean
+        miss, same corruption tolerance as :meth:`DiskStore.load`)."""
+        env = self.load(key)
+        with self._lock:
+            if env is None:
+                self.fetch_misses += 1
+            else:
+                self.fetches += 1
+        return env
+
+    def stats(self) -> Dict[str, object]:
+        st = super().stats()
+        with self._lock:
+            st.update(publishes=self.publishes, fetches=self.fetches,
+                      fetch_misses=self.fetch_misses)
+        return st
 
 
 class _Entry:
@@ -404,15 +543,25 @@ class _Entry:
 
 class TranslationCache:
     """Thread-safe, cost-aware cache for per-segment translated kernels,
-    with an optional persistent :class:`DiskStore` tier."""
+    with an optional persistent :class:`DiskStore` tier and an optional
+    cluster-wide :class:`SharedStore` tier underneath it.
+
+    Lookup order: memory → local disk → shared fabric → translate.  A
+    shared-tier hit is *replicated* into the local store on the way up;
+    a translation is saved locally *and published* to the fabric.  When
+    a shared tier is attached, single-flight translation locks live on
+    the shared directory, making them fleet-wide."""
 
     def __init__(self, capacity: int = 1024,
-                 store: Optional["DiskStore"] = None):
+                 store: Optional["DiskStore"] = None,
+                 shared: Optional["SharedStore"] = None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
         self.store = DiskStore(store) if isinstance(store, (str, Path)) \
             else store
+        self.shared = SharedStore(shared) if isinstance(shared, (str, Path)) \
+            else shared
         self._entries: Dict[Hashable, _Entry] = {}
         self._lock = threading.RLock()
         self._clock = 0.0   # GDSF aging clock: advances to each victim's score
@@ -421,12 +570,26 @@ class TranslationCache:
         self.misses = 0
         self.evictions = 0
         self.translated = 0      # fresh translations (factory ran)
-        self.restored = 0        # served from the disk tier
-        self.disk_misses = 0     # memory miss that the store couldn't serve
+        self.restored = 0        # served from the disk/shared tiers
+        self.disk_misses = 0     # memory miss that no store could serve
         self.translate_ms = 0.0  # total wall-time spent translating
         self.restore_ms = 0.0    # total wall-time spent reviving from disk
+        # translate-side split (reported by export_translation): Python
+        # trace + export vs XLA compile.  restore_compile_ms is compile
+        # time paid *during restores* — ≈ 0 whenever the persisted AOT
+        # executable deserializes, which is the whole point of the fabric.
+        self.trace_ms = 0.0
+        self.compile_ms = 0.0
+        self.restore_compile_ms = 0.0
+        self.aot_restored = 0          # restores via deserialized executable
+        self.aot_fallback_restores = 0  # restores that recompiled from HLO
+        self.shared_fetches = 0        # restores served by the shared tier
+        self.shared_publishes = 0      # translations published to the fabric
+        self.replicated = 0            # shared-tier hits copied to local disk
         self.export_fallbacks = 0      # translations that could not persist
         self.last_export_error = None  # why (first line of the exception)
+        self.aot_export_fallbacks = 0  # persisted without an executable
+        self.last_aot_error = None     # why (first line of the exception)
         self.persist_errors = 0        # store writes that failed (disk full…)
 
     def note_export_fallback(self, error: Optional[str] = None) -> None:
@@ -437,6 +600,23 @@ class TranslationCache:
             self.export_fallbacks += 1
             if error:
                 self.last_export_error = str(error).splitlines()[0][:200]
+
+    def note_aot_fallback(self, error: Optional[str] = None) -> None:
+        """Record that a translation persisted its StableHLO but not its
+        compiled executable (``jax.experimental.serialize_executable``
+        failed) — warm starts of this entry will pay the XLA compile."""
+        with self._lock:
+            self.aot_export_fallbacks += 1
+            if error:
+                self.last_aot_error = str(error).splitlines()[0][:200]
+
+    def note_translate_detail(self, trace_ms: float = 0.0,
+                              compile_ms: float = 0.0) -> None:
+        """Called by export_translation to split translation wall-time into
+        Python-trace/export vs XLA-compile (bench_translation columns)."""
+        with self._lock:
+            self.trace_ms += trace_ms
+            self.compile_ms += compile_ms
 
     # -- GDSF internals --------------------------------------------------
     def _score(self, cost_ms: float, size_bytes: int) -> float:
@@ -504,22 +684,50 @@ class TranslationCache:
         return self.get_or_translate(key, lambda: (factory(), None))
 
     def _try_restore(self, key: Hashable) -> Optional[Any]:
-        """Disk-tier lookup: load the envelope and revive it into the
-        memory tier.  Returns the live value, or ``None`` on any miss
-        (absent entry, unknown kind, revival failure)."""
-        env = self.store.load(key)
+        """Store-tier lookup: local disk first, then the shared fabric.
+        Revives the envelope into the memory tier; a fabric hit is also
+        replicated into the local store so this node never refetches it.
+        Returns the live value, or ``None`` on any miss (absent entry,
+        unknown kind, revival failure)."""
+        env, from_shared = None, False
+        if self.store is not None:
+            env = self.store.load(key)
+        if env is None and self.shared is not None:
+            env = self.shared.fetch(key)
+            from_shared = env is not None
         if env is None or env["kind"] not in _REVIVERS:
             return None
+        value = self._revive(key, env)
+        if value is not None and from_shared:
+            with self._lock:
+                self.shared_fetches += 1
+            if self.store is not None:
+                if self._safe_save(key, env["kind"], env["payload"],
+                                   env.get("cost_ms", 0.0)):
+                    with self._lock:
+                        self.replicated += 1
+        return value
+
+    def _revive(self, key: Hashable, env: Dict[str, Any]) -> Optional[Any]:
+        """Run the reviver for one loaded envelope, account the restore,
+        and insert the live value into the memory tier."""
         t0 = time.perf_counter()
+        _pop_restore_detail()  # drop any stale fields from a failed revive
         try:
             value = _REVIVERS[env["kind"]](env["payload"])
         except Exception:
             return None  # revival failure degrades to a miss
         dt = (time.perf_counter() - t0) * 1e3
+        detail = _pop_restore_detail()
         if value is not None:
             with self._lock:
                 self.restored += 1
                 self.restore_ms += dt
+                if detail.get("aot") is True:
+                    self.aot_restored += 1
+                elif detail.get("aot") is False:
+                    self.aot_fallback_restores += 1
+                self.restore_compile_ms += detail.get("compile_ms", 0.0)
                 self._insert(key, value, env.get("cost_ms", 0.0),
                              env.get("size_bytes", 1))
         return value
@@ -540,20 +748,24 @@ class TranslationCache:
         per-key cross-process lock (*single-flight*): of N processes
         missing on the same key, one translates while the rest block on
         the lock, then find the published entry on their re-check and
-        restore it.  ``HETGPU_CACHE_SINGLE_FLIGHT=0`` disables the lock
-        (translations then race benignly — atomic publishes mean the
-        last identical write wins, work is merely duplicated)."""
+        restore it.  With a shared fabric attached, the lock is taken on
+        the *shared* directory instead, so single-flight holds across
+        the whole fleet, not just one node.
+        ``HETGPU_CACHE_SINGLE_FLIGHT=0`` disables the lock (translations
+        then race benignly — atomic publishes mean the last identical
+        write wins, work is merely duplicated)."""
         value = self.get(key)
         if value is not None:
             return value
-        if self.store is not None:
+        if self.store is not None or self.shared is not None:
             value = self._try_restore(key)
             if value is not None:
                 return value
             with self._lock:
                 self.disk_misses += 1
+            lock_store = self.shared if self.shared is not None else self.store
             if os.environ.get("HETGPU_CACHE_SINGLE_FLIGHT", "1") != "0":
-                with self.store.lock(key) as locked:
+                with lock_store.lock(key) as locked:
                     if locked:
                         # a lock-holder may have published while we waited
                         value = self._try_restore(key)
@@ -573,9 +785,21 @@ class TranslationCache:
             self.translated += 1
             self.translate_ms += dt
         size = 1
-        if persist is not None and self.store is not None:
+        if persist is not None:
             kind, payload = persist
-            size = self._safe_save(key, kind, payload, dt) or 1
+            if self.store is not None:
+                size = self._safe_save(key, kind, payload, dt) or 1
+            if self.shared is not None:
+                try:
+                    nbytes = self.shared.publish(key, kind, payload,
+                                                 cost_ms=dt)
+                    with self._lock:
+                        self.shared_publishes += 1
+                    if size == 1:
+                        size = nbytes or 1
+                except Exception:
+                    with self._lock:
+                        self.persist_errors += 1
         with self._lock:
             self._insert(key, value, dt, size)
         return value
@@ -585,37 +809,41 @@ class TranslationCache:
                 store: Optional["DiskStore"] = None) -> int:
         """Revive matching disk entries into the memory tier ahead of use
         (warm-up / migration).  ``backend`` / ``fingerprint`` filter on the
-        leading key components; ``store`` overrides ``self.store`` (a
-        migration source may hand over its own).  Returns the number of
-        entries restored; unrevivable entries are skipped silently."""
-        store = store if store is not None else self.store
-        if store is None:
-            return 0
+        leading key components; ``store`` overrides the default scan order
+        — local store, then the shared fabric (a migration source may hand
+        over its own store).  Fabric entries revived here are replicated
+        into the local store, exactly like a fetch-on-miss.  Returns the
+        number of entries restored; unrevivable entries are skipped
+        silently."""
+        if store is not None:
+            sources = [store]
+        else:
+            sources = [s for s in (self.store, self.shared) if s is not None]
         count = 0
-        for key, env in store.iter_entries():
-            if not isinstance(key, tuple) or len(key) < 2:
-                continue
-            if backend is not None and key[0] != backend:
-                continue
-            if fingerprint is not None and key[1] != fingerprint:
-                continue
-            with self._lock:
-                if key in self._entries:
+        for src in sources:
+            for key, env in src.iter_entries():
+                if not isinstance(key, tuple) or len(key) < 2:
                     continue
-            if env["kind"] not in _REVIVERS:
-                continue
-            t0 = time.perf_counter()
-            try:
-                value = _REVIVERS[env["kind"]](env["payload"])
-            except Exception:
-                continue
-            dt = (time.perf_counter() - t0) * 1e3
-            with self._lock:
-                self.restored += 1
-                self.restore_ms += dt
-                self._insert(key, value, env.get("cost_ms", 0.0),
-                             env.get("size_bytes", 1))
-            count += 1
+                if backend is not None and key[0] != backend:
+                    continue
+                if fingerprint is not None and key[1] != fingerprint:
+                    continue
+                with self._lock:
+                    if key in self._entries:
+                        continue
+                if env["kind"] not in _REVIVERS:
+                    continue
+                if self._revive(key, env) is None:
+                    continue
+                if src is self.shared:
+                    with self._lock:
+                        self.shared_fetches += 1
+                    if self.store is not None:
+                        if self._safe_save(key, env["kind"], env["payload"],
+                                           env.get("cost_ms", 0.0)):
+                            with self._lock:
+                                self.replicated += 1
+                count += 1
         return count
 
     # ------------------------------------------------------------------
@@ -643,12 +871,24 @@ class TranslationCache:
                 "disk_misses": self.disk_misses,
                 "translate_ms": self.translate_ms,
                 "restore_ms": self.restore_ms,
+                "trace_ms": self.trace_ms,
+                "compile_ms": self.compile_ms,
+                "restore_compile_ms": self.restore_compile_ms,
+                "aot_restored": self.aot_restored,
+                "aot_fallback_restores": self.aot_fallback_restores,
+                "shared_fetches": self.shared_fetches,
+                "shared_publishes": self.shared_publishes,
+                "replicated": self.replicated,
                 "export_fallbacks": self.export_fallbacks,
                 "last_export_error": self.last_export_error,
+                "aot_export_fallbacks": self.aot_export_fallbacks,
+                "last_aot_error": self.last_aot_error,
                 "persist_errors": self.persist_errors,
             }
         if self.store is not None:
             st["store"] = self.store.stats()
+        if self.shared is not None:
+            st["shared"] = self.shared.stats()
         return st
 
     def clear(self) -> None:
@@ -659,23 +899,33 @@ class TranslationCache:
             self.hits = self.misses = self.evictions = 0
             self.translated = self.restored = self.disk_misses = 0
             self.translate_ms = self.restore_ms = 0.0
+            self.trace_ms = self.compile_ms = self.restore_compile_ms = 0.0
+            self.aot_restored = self.aot_fallback_restores = 0
+            self.shared_fetches = self.shared_publishes = self.replicated = 0
             self.export_fallbacks = 0
             self.last_export_error = None
+            self.aot_export_fallbacks = 0
+            self.last_aot_error = None
             self.persist_errors = 0
             self._clock = 0.0
 
 
 # process-wide default: sessions and backends share translations unless
 # handed an explicit cache (tests inject fresh instances for isolation).
-# HETGPU_CACHE_DIR attaches a persistent tier to it.
+# HETGPU_CACHE_DIR attaches a persistent tier; HETGPU_CACHE_SHARED_DIR
+# attaches the cluster fabric.
 _GLOBAL_CACHE = TranslationCache()
 
 
 def global_cache() -> TranslationCache:
     # re-checked on every call (not latched): an application may set the
-    # env var after some backend has already touched the global cache
+    # env vars after some backend has already touched the global cache
     if _GLOBAL_CACHE.store is None:
         cache_dir = os.environ.get("HETGPU_CACHE_DIR")
         if cache_dir:
             _GLOBAL_CACHE.store = DiskStore(cache_dir)
+    if _GLOBAL_CACHE.shared is None:
+        shared_dir = os.environ.get("HETGPU_CACHE_SHARED_DIR")
+        if shared_dir:
+            _GLOBAL_CACHE.shared = SharedStore(shared_dir)
     return _GLOBAL_CACHE

@@ -437,7 +437,8 @@ def _worker_main(worker_id: int, conn, config: Dict) -> None:
                         int(config.get("fault_seed", 0)))
     session = HetSession(config.get("backend", "interp"),
                          opt_level=config.get("opt_level"),
-                         store=config.get("store_dir"))
+                         store=config.get("store_dir"),
+                         shared=config.get("shared_dir"))
     # launch_id -> {"rec", "stream", "kernel", "outputs", "segments"}
     launches: Dict[str, Dict] = {}
 
@@ -644,6 +645,13 @@ class FleetCoordinator:
       (``None`` = in-memory only).
     * ``store_dir`` — shared :class:`~repro.core.cache.DiskStore` root
       every worker session attaches to (translate once per fleet).
+    * ``shared_dir`` — cluster cache fabric root
+      (:class:`~repro.core.cache.SharedStore`): workers consult the
+      fabric before translating, publish what they translate, and take
+      their single-flight locks there, so exactly one translation happens
+      fleet-wide even across *independent* fleets sharing the directory.
+      Defaults to ``HETGPU_CACHE_SHARED_DIR``.  :meth:`prewarm` lets the
+      coordinator pre-publish kernels before any worker runs them.
     * ``slice_segments`` — segments granted per pump slice; smaller
       slices mean finer-grained preemption/migration points.
     * ``fault_plan`` / ``fault_seed`` — explicit chaos schedule; both
@@ -659,6 +667,7 @@ class FleetCoordinator:
     def __init__(self, backends: Sequence[str] = ("interp",) * 3,
                  queue_dir: Optional[Union[str, Path]] = None,
                  store_dir: Optional[Union[str, Path]] = None,
+                 shared_dir: Optional[Union[str, Path]] = None,
                  slice_segments: int = 4,
                  opt_level: Optional[int] = None,
                  fault_plan: Optional[List[Dict]] = None,
@@ -670,6 +679,9 @@ class FleetCoordinator:
         self._ctx = mp.get_context(start_method)
         self.queue = RetryQueue(queue_dir)
         self.store_dir = str(store_dir) if store_dir is not None else None
+        if shared_dir is None:
+            shared_dir = os.environ.get("HETGPU_CACHE_SHARED_DIR") or None
+        self.shared_dir = str(shared_dir) if shared_dir is not None else None
         self.slice_segments = max(1, int(slice_segments))
         self.opt_level = opt_level
         self.rpc_timeout = float(rpc_timeout)
@@ -705,6 +717,7 @@ class FleetCoordinator:
         parent, child = self._ctx.Pipe()
         cfg = {"backend": backend, "opt_level": self.opt_level,
                "store_dir": self.store_dir,
+               "shared_dir": self.shared_dir,
                "fault_specs": [s for s in self.fault_plan
                                if s.get("worker") in (None, wid)],
                "fault_seed": self.fault_seed}
@@ -762,6 +775,35 @@ class FleetCoordinator:
                 p.name for p in prog.params if isinstance(p, ir.Ptr))
         for w in self._alive():
             self._rpc(w, "load", {"blob": blob})
+
+    def prewarm(self, grids: Sequence[Tuple[int, int]] = ((2, 32),),
+                backends: Optional[Sequence[str]] = None) -> Dict[str, object]:
+        """Pre-publish translations for every registered kernel into the
+        cluster fabric, in-process, before any worker touches them — the
+        coordinator pays the one fleet-wide translation up front, and
+        every worker (current and future, here and on other hosts sharing
+        the fabric) warm-starts from the published AOT executables.
+
+        ``backends`` defaults to the distinct backends of the current
+        workers.  Requires a ``shared_dir`` (without a fabric there is
+        nowhere to publish — raises ``FleetError``).  Returns a per-backend
+        report of :meth:`HetSession.warmup` results."""
+        if self.shared_dir is None:
+            raise FleetError("prewarm needs a cluster fabric: construct the "
+                             "coordinator with shared_dir= (or set "
+                             "HETGPU_CACHE_SHARED_DIR)")
+        from .runtime import HetSession
+        if backends is None:
+            backends = sorted({w.backend for w in self.workers.values()})
+        programs = [pickle.loads(blob)
+                    for blob in dict.fromkeys(self._programs.values())]
+        flat = [p for group in programs for p in group]
+        report: Dict[str, object] = {}
+        for backend in backends:
+            session = HetSession(backend, opt_level=self.opt_level,
+                                 shared=self.shared_dir)
+            report[backend] = session.warmup(flat, grids=grids)
+        return report
 
     # -- submission ------------------------------------------------------
     def submit(self, kernel: str, grid: int, block: int,

@@ -46,10 +46,12 @@ The "JIT modules" are entries in the shared :class:`~repro.core.cache.
 TranslationCache` (paper §4.2), surfaced via :meth:`HetSession.
 cache_stats` and ``stats`` (``translate_ms`` from cache counters,
 ``launch_ms`` for end-to-end launch work — ``translation_ms`` is a
-deprecated alias of ``translate_ms``).  Two cluster-lifetime amortization
-hooks remain: a session bound to a persistent :class:`~repro.core.cache.
-DiskStore` (``store=``) and :meth:`HetSession.warmup` ahead-of-time
-translation; :func:`migrate` preloads the destination cache.
+deprecated alias of ``translate_ms``).  The cluster-lifetime amortization
+hooks: a session bound to a persistent :class:`~repro.core.cache.
+DiskStore` (``store=``) and/or the cluster fabric's
+:class:`~repro.core.cache.SharedStore` (``shared=``), plus
+:meth:`HetSession.warmup` ahead-of-time translation; :func:`migrate`
+preloads the destination cache from the fabric.
 
 The old string-keyed surface (``load_kernel`` / ``gpu_malloc`` /
 ``memcpy_h2d`` / ``memcpy_d2h`` / ``launch`` / ``device_synchronize``)
@@ -74,7 +76,7 @@ import numpy as np
 from . import hetir as ir
 from .backends import get_backend
 from .backends.base import Backend
-from .cache import DiskStore, TranslationCache
+from .cache import DiskStore, SharedStore, TranslationCache
 from .engine import Engine
 from .passes import DEFAULT_OPT_LEVEL, OPT_MAX
 from .pool import BufferPool
@@ -909,6 +911,7 @@ class HetSession:
                  opt_level: Optional[int] = None,
                  cache: Optional[TranslationCache] = None,
                  store: Optional[Union[str, DiskStore]] = None,
+                 shared: Optional[Union[str, SharedStore]] = None,
                  specialize: Optional[bool] = None,
                  pool: Optional[Union[BufferPool, bool]] = None,
                  trace_cap: Optional[int] = None,
@@ -936,18 +939,30 @@ class HetSession:
         self.backend_name = backend
         if store is not None and not isinstance(store, DiskStore):
             store = DiskStore(store)
-        if cache is None and store is not None:
+        if shared is not None and not isinstance(shared, SharedStore):
+            shared = SharedStore(shared)
+        if cache is None and (store is not None or shared is not None):
             # a session opened "against a store": private memory tier,
-            # persistent disk tier — translations survive this process
-            cache = TranslationCache(store=store)
-        elif cache is not None and store is not None:
-            if cache.store is None:
-                cache.store = store
-            elif cache.store.dir.resolve() != store.dir.resolve():
-                raise ValueError(
-                    "cache is already bound to a different store "
-                    f"({cache.store.dir}); refusing to silently ignore "
-                    f"store={store.dir}")
+            # persistent disk tier — translations survive this process —
+            # and optionally the cluster fabric underneath
+            cache = TranslationCache(store=store, shared=shared)
+        elif cache is not None:
+            if store is not None:
+                if cache.store is None:
+                    cache.store = store
+                elif cache.store.dir.resolve() != store.dir.resolve():
+                    raise ValueError(
+                        "cache is already bound to a different store "
+                        f"({cache.store.dir}); refusing to silently ignore "
+                        f"store={store.dir}")
+            if shared is not None:
+                if cache.shared is None:
+                    cache.shared = shared
+                elif cache.shared.dir.resolve() != shared.dir.resolve():
+                    raise ValueError(
+                        "cache is already bound to a different shared tier "
+                        f"({cache.shared.dir}); refusing to silently ignore "
+                        f"shared={shared.dir}")
         self.backend: Backend = get_backend(backend, cache=cache)
         self.cache: TranslationCache = self.backend.cache
         self.opt_level = DEFAULT_OPT_LEVEL if opt_level is None \
@@ -1292,10 +1307,14 @@ class HetSession:
 
         Returns a report: per-kernel status plus how many segments were
         ``restored`` from the disk store versus freshly ``translated``
-        (warm restarts should see ``translated == 0``).
+        (warm restarts should see ``translated == 0``), and — with a
+        cluster fabric attached — how many restores were ``fetched`` from
+        the shared tier and how many warm-started from the AOT executable
+        (``aot_restored``, i.e. with zero XLA compile).
         """
         report: Dict[str, object] = {"kernels": [], "translated": 0,
                                      "restored": 0, "cache_hits": 0,
+                                     "fetched": 0, "aot_restored": 0,
                                      "errors": 0}
         for item in programs:
             prog, args = item if isinstance(item, tuple) else (item, None)
@@ -1323,10 +1342,14 @@ class HetSession:
                     entry["status"] = f"error: {type(exc).__name__}: {exc}"
                     report["errors"] += 1
                 after = self.cache.stats()
-                for field_ in ("translated", "restored"):
+                for field_ in ("translated", "restored", "aot_restored"):
                     delta = after[field_] - before[field_]
                     entry[field_] = delta
                     report[field_] += delta
+                fetched = (after["shared_fetches"]
+                           - before["shared_fetches"])
+                entry["fetched"] = fetched
+                report["fetched"] += fetched
                 entry["cache_hits"] = after["hits"] - before["hits"]
                 report["cache_hits"] += entry["cache_hits"]
                 entry["ms"] = round((time.perf_counter() - t0) * 1e3, 2)
@@ -1544,10 +1567,13 @@ def migrate(rec: LaunchRecord, src: HetSession, dst: HetSession,
     on both sessions.
 
     Before resuming, the destination's translation cache is preloaded from
-    whichever persistent store is reachable (its own, else the source's):
-    if this program has ever been translated for the destination backend
-    within the store's lifetime, the migrated launch pays near-zero
-    translation cost — the paper's cluster-lifetime JIT amortization.
+    the cluster fabric when one is reachable (its own tiers — local store
+    then shared fabric — falling back to the *source's* fabric, then the
+    source's local store for fabric-less point-to-point setups): if this
+    program has ever been translated for the destination backend within
+    the fabric's lifetime — by anyone in the fleet — the migrated launch
+    pays near-zero translation cost, the paper's cluster-lifetime JIT
+    amortization.
 
     Specialization keys ride along: the snapshot records the source
     engine's bound-scalar vector, ``Engine.resume`` re-derives the
@@ -1564,12 +1590,19 @@ def migrate(rec: LaunchRecord, src: HetSession, dst: HetSession,
     # warm the destination from the persistent tier: the engine's program
     # is the *optimized* body, whose fingerprint is what cache keys carry
     fp = ir.program_fingerprint(rec.engine.program)
-    store = dst.cache.store if dst.cache.store is not None \
-        else src.cache.store
     restored = 0
-    if store is not None:
+    if dst.cache.store is not None or dst.cache.shared is not None:
+        # the destination's own fabric: local store, then shared tier
         restored = dst.cache.preload(backend=dst.backend_name,
-                                     fingerprint=fp, store=store)
+                                     fingerprint=fp)
+    else:
+        # fabric-less destination: fetch from the source's fabric, else
+        # fall back to the old point-to-point store handover
+        store = src.cache.shared if src.cache.shared is not None \
+            else src.cache.store
+        if store is not None:
+            restored = dst.cache.preload(backend=dst.backend_name,
+                                         fingerprint=fp, store=store)
     t2 = time.perf_counter()
     new = dst.restore(kernel, blob, stream=stream)  # reload + reshard
     t3 = time.perf_counter()

@@ -12,7 +12,13 @@ process; a fleet (ISSUE 7) makes N *processes* share one
 * ``get_or_translate`` must be cross-process *single-flight*: N
   processes missing on the same key produce exactly one translation
   (the per-key ``flock`` in :meth:`DiskStore.lock`), everyone else
-  restores the published entry.
+  restores the published entry;
+* with a :class:`~repro.core.cache.SharedStore` fabric attached the
+  same bar goes *fleet-wide*: one translation per key across fresh
+  processes that share nothing but the fabric directory, survivors of
+  a SIGKILL mid-publish see a clean miss (never corruption, never a
+  wedged lock), and ``gc()`` sweeps the orphaned lock sidecars the
+  protocol deliberately never unlinks on release.
 
 The directed tests below run in tier-1; the N-process stress tests are
 marked ``slow`` and run in CI's chaos job.  Subprocess workers are
@@ -30,7 +36,7 @@ from pathlib import Path
 
 import pytest
 
-from repro.core.cache import (DiskStore, TranslationCache,
+from repro.core.cache import (DiskStore, SharedStore, TranslationCache,
                               register_reviver)
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
@@ -142,6 +148,76 @@ def test_single_flight_opt_out(tmp_path, monkeypatch):
                                lambda: (1, ("mpstress", 1)))
     assert v == 1 and cache.translated == 1
     assert not list(store.dir.glob("*.lock"))   # lock never taken
+
+
+def test_gc_sweeps_orphan_lock_sidecars(tmp_path):
+    """Lock sidecars are never unlinked on release (that would split the
+    lock), so they accumulate; ``gc()`` sweeps the ones whose entry is
+    gone — under a non-blocking flock, so a sidecar someone holds *right
+    now* is never touched."""
+    store = DiskStore(tmp_path, tag="t")
+    store.save(("live",), "kind", {"v": 1})
+    with store.lock(("live",)):
+        pass                            # sidecar with a matching .tce
+    with store.lock(("orphan",)):
+        pass                            # sidecar whose entry never landed
+    assert len(list(store.dir.glob("*.lock"))) == 2
+    store.gc()
+    assert store.lock_sweeps == 1
+    remaining = list(store.dir.glob("*.lock"))
+    assert len(remaining) == 1
+    assert remaining[0].with_suffix(".tce").exists()
+
+
+def test_gc_never_sweeps_a_held_lock(tmp_path):
+    store = DiskStore(tmp_path, tag="t")
+    entered, release = threading.Event(), threading.Event()
+
+    def hold():
+        with store.lock(("held",)):
+            entered.set()
+            release.wait(5)
+
+    t = threading.Thread(target=hold)
+    t.start()
+    assert entered.wait(5)
+    store.gc()                          # sidecar is held: must survive
+    assert store.lock_sweeps == 0
+    assert list(store.dir.glob("*.lock"))
+    release.set()
+    t.join()
+    store.gc()                          # now orphaned and free: swept
+    assert store.lock_sweeps == 1
+    assert not list(store.dir.glob("*.lock"))
+
+
+def test_shared_tier_fetch_on_miss_and_replicate(tmp_path):
+    """The fabric contract end-to-end in one process: node 1 translates
+    and publishes; node 2 (fresh local store, same fabric) fetches on
+    miss and replicates locally; node 3 then warm-starts from node 2's
+    local store alone — the fabric is a fill path, not a dependency."""
+    register_reviver("mpstress", lambda p: p)
+    shared = SharedStore(tmp_path / "fabric", tag="t")
+    key = ("mpstress", "k")
+
+    def boom():
+        raise AssertionError("fleet already translated this key")
+
+    c1 = TranslationCache(store=DiskStore(tmp_path / "n1", tag="t"),
+                          shared=shared)
+    v = c1.get_or_translate(key, lambda: ({"v": 7}, ("mpstress", {"v": 7})))
+    assert v == {"v": 7} and c1.translated == 1
+    assert shared.publishes == 1 and c1.shared_publishes == 1
+
+    store2 = DiskStore(tmp_path / "n2", tag="t")
+    c2 = TranslationCache(store=store2, shared=shared)
+    assert c2.get_or_translate(key, boom) == {"v": 7}
+    assert c2.translated == 0 and c2.restored == 1
+    assert c2.shared_fetches == 1 and c2.replicated == 1
+
+    c3 = TranslationCache(store=store2)
+    assert c3.get_or_translate(key, boom) == {"v": 7}
+    assert c3.translated == 0 and c3.restored == 1
 
 
 # ---------------------------------------------------------------------------
@@ -256,3 +332,125 @@ def test_nproc_republish_never_tears(tmp_path):
             assert p.returncode == 0, err.decode()
     assert store.corrupt == 0
     assert reads > 10   # the loop really overlapped the writers
+
+
+_TORN_PUBLISHER = r"""
+import os, sys, time
+from pathlib import Path
+sys.path.insert(0, {src!r})
+from repro.core.cache import DiskStore, SharedStore, TranslationCache, \
+    register_reviver
+
+shared_dir, node_dir, marker = sys.argv[1:4]
+register_reviver("mpstress", lambda p: p)
+cache = TranslationCache(store=DiskStore(node_dir, tag="stress"),
+                         shared=SharedStore(shared_dir, tag="stress"))
+
+real_replace = os.replace
+def torn_replace(srcp, dstp):
+    # Freeze only the *shared-tier* publish, after the temp file is fully
+    # written but before the atomic rename — the parent SIGKILLs us here,
+    # while we also still hold the fleet-wide translation flock.
+    if str(dstp).startswith(shared_dir):
+        Path(marker).write_text("mid-publish")
+        time.sleep(120)
+    real_replace(srcp, dstp)
+os.replace = torn_replace
+
+cache.get_or_translate(("mpstress", "torn"),
+                       lambda: ({{"v": 1}}, ("mpstress", {{"v": 1}})))
+"""
+
+
+@pytest.mark.slow
+def test_sigkill_mid_publish_is_a_clean_miss(tmp_path):
+    """SIGKILL a process between writing the shared-tier temp file and the
+    atomic rename (while it holds the fleet-wide translation lock):
+    readers must see a clean miss — never a torn envelope, never
+    quarantine churn — the orphaned temp file is swept on the next store
+    startup, and the flock dies with the process so a fresh node can
+    immediately translate and publish the same key."""
+    script = tmp_path / "torn.py"
+    script.write_text(_TORN_PUBLISHER.format(src=SRC))
+    shared_dir = tmp_path / "fabric"
+    marker = tmp_path / "marker"
+    proc = subprocess.Popen(
+        [sys.executable, str(script), str(shared_dir),
+         str(tmp_path / "n1"), str(marker)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE)
+    deadline = time.monotonic() + 60
+    while not marker.exists():
+        assert proc.poll() is None, proc.communicate()[1].decode()
+        assert time.monotonic() < deadline, "publisher never reached rename"
+        time.sleep(0.01)
+    proc.kill()                                     # SIGKILL, mid-publish
+    proc.wait(timeout=30)
+
+    fab = next(p for p in shared_dir.iterdir() if p.is_dir())
+    assert not list(fab.glob("*.tce"))              # rename never happened
+    torn = list(fab.glob("*.tmp"))
+    assert torn                                     # the torn temp remains
+
+    shared = SharedStore(shared_dir, tag="stress")
+    # startup's temp sweep is age-gated (it must never race a *live*
+    # writer), so the fresh orphan survives...
+    assert list(shared.dir.glob("*.tmp"))
+    assert shared.fetch(("mpstress", "torn")) is None   # clean miss
+    assert shared.corrupt == 0
+    # ...and once it is stale, the next startup sweeps it
+    old = time.time() - 7200
+    os.utime(torn[0], (old, old))
+    SharedStore(shared_dir, tag="stress")
+    assert not list(shared.dir.glob("*.tmp"))
+
+    # the flock died with the process: a fresh node translates right away
+    register_reviver("mpstress", lambda p: p)
+    c2 = TranslationCache(store=DiskStore(tmp_path / "n2", tag="stress"),
+                          shared=shared)
+    v = c2.get_or_translate(("mpstress", "torn"),
+                            lambda: ({"v": 2}, ("mpstress", {"v": 2})))
+    assert v == {"v": 2} and c2.translated == 1
+    assert shared.publishes == 1
+    assert shared.fetch(("mpstress", "torn"))["payload"] == {"v": 2}
+
+
+@pytest.mark.fleet
+def test_fleet_prewarm_publishes_to_fabric(tmp_path):
+    """`FleetCoordinator.prewarm()` translates every registered program
+    once and publishes to the fabric; a fresh node sharing nothing but
+    the fabric directory then warm-starts without translating."""
+    from repro.core import FleetCoordinator, HetSession
+    from repro.core import kernels_suite as suite
+
+    prog = suite.vadd()[0]
+    shared = tmp_path / "fabric"
+    with FleetCoordinator(backends=("interp",), queue_dir=tmp_path / "q",
+                          shared_dir=shared, fault_plan=[]) as fleet:
+        fleet.register(prog)
+        report = fleet.prewarm()
+        assert report["interp"]["translated"] > 0
+
+    node = HetSession("interp", shared=str(shared))
+    rep = node.warmup([prog], grids=((2, 32),))
+    assert rep["translated"] == 0
+    assert rep["restored"] > 0
+    assert rep["fetched"] == rep["restored"]
+
+
+@pytest.mark.slow
+def test_cluster_fabric_translate_once_fleet_wide():
+    """ISSUE 9 acceptance: >=4 fresh processes over one shared fabric,
+    exactly one translation per cache key fleet-wide, a late-joining
+    fifth process warm-starts with ~0 trace *and* ~0 XLA compile (AOT
+    executables came over the fabric), bit-identical to a cold
+    single-process oracle, >=5x cheaper than translating."""
+    from benchmarks.bench_translation import run_cluster
+    row = run_cluster(nprocs=4)[0]
+    assert row["fleet_translated"] == row["expected_translations"]
+    assert row["bit_identical"]
+    assert row["warm_translated"] == 0
+    assert row["warm_fetched"] == row["expected_translations"]
+    assert row["warm_aot_restored"] == row["expected_translations"]
+    assert row["warm_trace_ms"] <= 5.0
+    assert row["warm_compile_ms"] <= 5.0
+    assert row["speedup"] >= 5.0

@@ -123,6 +123,62 @@ def run_het_block() -> list:
     return rows
 
 
+def run_zoo() -> list:
+    """Model-zoo section: one row per zoo kernel (repro.zoo) — the
+    schedule-derived byte/FLOP totals (same accounting as the roofline),
+    the interp backend's true divergence-aware step count at O0 vs
+    OPT_MAX, and the pallas block-lowering verdict: tiled segment count
+    when the fast path fires, else the named refusal categories from
+    ``repro.core.passes.REFUSAL_REASONS``."""
+    import repro.zoo as zoo  # noqa: F401  (import registers the kernels)
+    from benchmarks.roofline import (_ELEM_BYTES, _FLOP_WEIGHT, _MEM_WEIGHT,
+                                     _schedule_histogram)
+    from repro.core import Engine, OPT_MAX, get_backend
+    from repro.core import kernels_suite as suite
+    from repro.core.backends.pallas_backend import PallasBackend
+    from repro.core.cache import TranslationCache
+
+    rows = []
+    for name in sorted(zoo.ZOO):
+        steps = {}
+        flops = nbytes = threads = 0
+        for level in (0, OPT_MAX):
+            prog, _oracle, grid, block, args, _outs = suite.example_launch(
+                name, rng=np.random.default_rng(11))
+            be = get_backend("interp", cache=TranslationCache())
+            eng = Engine(prog, be, grid, block, dict(args), opt_level=level)
+            eng.run()
+            steps[level] = be.steps_executed
+            if level == 0:
+                hist = _schedule_histogram(eng.nodes, eng.launch.scalars)
+                threads = grid * block
+                flops = sum(_FLOP_WEIGHT.get(op, 0) * c
+                            for op, c in hist.items()) * threads
+                nbytes = sum(_MEM_WEIGHT.get(op, 0) * c
+                             for op, c in hist.items()) * threads * _ELEM_BYTES
+
+        prog, _oracle, grid, block, args, _outs = suite.example_launch(
+            name, rng=np.random.default_rng(11))
+        backend = PallasBackend(cache=TranslationCache())
+        Engine(prog, backend, grid, block, dict(args)).run()
+        stats = backend.block_stats
+        verdict = ("tiled" if stats.get("tiled")
+                   else "+".join(sorted(stats.get("reasons", {}))) or "scalar")
+        rows.append({
+            "bench": "zoo", "kernel": name, "threads": threads,
+            "flops": int(flops), "bytes": int(nbytes),
+            "intensity": round(flops / nbytes, 4) if nbytes else None,
+            "interp_steps_o0": steps[0],
+            "interp_steps_omax": steps[OPT_MAX],
+            "interp_step_cut": round(
+                1 - steps[OPT_MAX] / max(steps[0], 1), 3),
+            "tiled_segments": stats.get("tiled", 0),
+            "scalar_segments": stats.get("scalar", 0),
+            "block_verdict": verdict,
+        })
+    return rows
+
+
 def run() -> list:
     rows = []
     rng = np.random.default_rng(3)

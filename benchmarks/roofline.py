@@ -121,6 +121,19 @@ def run_het(kernels: Optional[Sequence[str]] = None) -> List[dict]:
     return rows
 
 
+def run_zoo() -> List[dict]:
+    """Measured roofline rows for the model-zoo kernels (:mod:`repro.zoo`)
+    — the same schedule-derived accounting as :func:`run_het`, tagged
+    ``mode="zoo-kernel"`` so the suite census (one ``het-kernel`` row per
+    ``EXAMPLES`` entry) stays closed."""
+    import repro.zoo as zoo  # noqa: F401  (import registers the kernels)
+
+    rows = run_het(sorted(zoo.ZOO))
+    for r in rows:
+        r["mode"] = "zoo-kernel"
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # artifact mode (dry-run cells)
 # ---------------------------------------------------------------------------
@@ -183,9 +196,11 @@ def load_rows(tag: str = "baseline"):
 
 def run(tag: str = "baseline") -> list:
     """All roofline rows: the measured het-kernel suite first (always
-    non-empty), then any dry-run artifact cells (an explicit
-    ``no-artifacts`` row when the directory ships empty)."""
+    non-empty), then the model-zoo kernels, then any dry-run artifact
+    cells (an explicit ``no-artifacts`` row when the directory ships
+    empty)."""
     out = list(run_het())
+    out.extend(run_zoo())
     for r in load_rows(tag):
         if r.get("status") == "ok":
             out.append({"bench": "roofline", "cell": r["cell"],
@@ -206,9 +221,9 @@ def markdown_table(tag: str = "baseline") -> str:
     lines = ["| cell | mode | FLOPs | bytes | compute s | memory s | "
              "bottleneck | roofline frac |",
              "|---|---|---|---|---|---|---|---|"]
-    for r in run_het():
+    for r in run_het() + run_zoo():
         lines.append(
-            f"| {r['cell']} | het-kernel | {r['flops']} | {r['bytes']} | "
+            f"| {r['cell']} | {r['mode']} | {r['flops']} | {r['bytes']} | "
             f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | "
             f"{r['dominant']} | {r['roofline_frac']} |")
     for r in load_rows(tag):

@@ -68,6 +68,8 @@ def main(argv: Optional[List[str]] = None) -> None:
     _emit(bench_kernels.run(), sink)
     print("# -- block-tiled vs scalar-per-thread codegen --")
     _emit(bench_kernels.run_het_block(), sink)
+    print("# -- model zoo: attention/MoE/recurrent kernels (structural) --")
+    _emit(bench_kernels.run_zoo(), sink)
     print("# -- roofline (measured het kernels + dry-run artifacts) --")
     _emit(roofline.run(), sink)
 

@@ -9,6 +9,15 @@ tier: weighted tenants on sticky streams, quota-based admission,
 pooled buffers, async D2H of each result:
 
     PYTHONPATH=src python examples/serve_decode.py --het-tier
+
+``--zoo`` decodes a tiny model whose attention is the model-zoo
+``attn_decode`` kernel (repro.zoo) running on the hetGPU runtime: every
+token's flash-decode launch goes through the serving tier, one token's
+launch is checkpointed *mid-softmax* and live-migrated
+interp -> vectorized -> pallas across a shared cache fabric, and every
+token's logits are asserted bit-identical to the NumPy oracle:
+
+    PYTHONPATH=src python examples/serve_decode.py --zoo
 """
 import argparse
 import time
@@ -91,6 +100,108 @@ def het_tier(requests_per_tenant: int = 24) -> None:
     print("results verified against the decode_gemv oracle")
 
 
+def zoo_demo(new_tokens: int = 6) -> None:
+    """Greedy decode with the model-zoo attention kernel, live-migrated
+    mid-token across all three backends (no jax).
+
+    The "model" is deliberately tiny — an embedding table, a circular
+    KV window and an output projection in host numpy — because the star
+    is the attention kernel: one hetIR ``attn_decode`` Program serves
+    every token through the ServingFrontEnd, and on the migration token
+    the in-flight launch is paused inside the online-softmax tile loop
+    (m/l/acc in the regfile, the probability tile in shared memory),
+    checkpointed, and resumed interp -> vectorized -> pallas.  Because
+    the zoo oracle reproduces the kernel's exact float32 op order, the
+    logits are asserted **bit-identical** every token, migrated or not.
+    """
+    import tempfile
+
+    import repro.zoo as zoo
+    from repro.core import HetSession, ServingFrontEnd, migrate
+
+    H, D, T, NT = 4, zoo.ATTN_D, zoo.ATTN_T, 3
+    CTX = NT * T                     # fixed circular KV window
+    VOCAB = 16
+    GRID, BLOCK = H, T
+
+    prog, oracle = zoo.attn_decode()
+    fabric = tempfile.mkdtemp(prefix="zoo-fabric-")
+    sessions = {n: HetSession(n, shared=fabric)
+                for n in ("interp", "vectorized", "pallas")}
+    for s in sessions.values():
+        s.load(prog)
+    src = sessions["interp"]
+    fn = src.load(prog).function()
+    front = ServingFrontEnd(src, default_quota=4, slo_ms=5000.0)
+    front.tenant("decoder", weight=1.0)
+
+    rng = np.random.default_rng(42)
+    emb = (rng.normal(size=(VOCAB, H * D)) * 0.3).astype(np.float32)
+    w_out = (rng.normal(size=(H * D, VOCAB)) * 0.2).astype(np.float32)
+    kcache = (rng.normal(size=(H, CTX, D)) * 0.3).astype(np.float32)
+    vcache = (rng.normal(size=(H, CTX, D)) * 0.3).astype(np.float32)
+    scale = float(np.float32(1.0 / np.sqrt(D)))
+
+    token, migrations, tokens_out = 3, 0, []
+    migrate_step = 1                 # this token's launch takes the tour
+    for step in range(new_tokens):
+        x = emb[token]
+        kcache[:, step % CTX, :] = (x * 0.5).reshape(H, D)
+        vcache[:, step % CTX, :] = np.tanh(x).reshape(H, D).astype(
+            np.float32)
+        host = {"Q": x.copy(), "K": kcache.reshape(-1).copy(),
+                "V": vcache.reshape(-1).copy(),
+                "O": np.zeros(H * D, np.float32),
+                "ntiles": NT, "scale": scale}
+        expect_o = oracle({k: (v.copy() if isinstance(v, np.ndarray)
+                               else v) for k, v in host.items()})["O"]
+
+        bufs = {k: src.alloc(v.size).copy_from_host(v)
+                for k, v in host.items() if isinstance(v, np.ndarray)}
+        tk = front.submit("decoder", fn, GRID, BLOCK,
+                          {**bufs, "ntiles": NT, "scale": scale})
+        if step == migrate_step:
+            # pause inside the online-softmax tile loop, then hop twice
+            rec = tk.record
+            rec.advance(max_segments=3)
+            rec = migrate(rec, src, sessions["vectorized"], "attn_decode")
+            migrations += 1
+            rec.advance(max_segments=2)
+            rec = migrate(rec, sessions["vectorized"],
+                          sessions["pallas"], "attn_decode")
+            migrations += 1
+            sessions["pallas"].run_to_completion(rec)
+            got_o = rec.buffer("O").copy_to_host()
+            mig = sessions["pallas"].stats["last_migration"]
+            print(f"  token {step}: migrated mid-softmax "
+                  f"interp->vectorized->pallas "
+                  f"(payload {mig['payload_bytes']/1024:.1f} kB, "
+                  f"fabric translations restored: "
+                  f"{mig['cache_restored']})")
+        else:
+            while not tk.done():
+                front.pump(16)
+            got_o = bufs["O"].copy_to_host()
+        for b in bufs.values():
+            if step != migrate_step:     # migrated buffers moved sessions
+                b.free()
+
+        logits = got_o @ w_out
+        want = expect_o @ w_out
+        np.testing.assert_array_equal(
+            logits, want,
+            err_msg=f"token {step}: served logits diverge from oracle")
+        token = int(np.argmax(logits))
+        tokens_out.append(token)
+
+    front.drain()
+    assert migrations >= 2, "demo must migrate the decode at least twice"
+    print(f"decoded {new_tokens} tokens via zoo attn_decode "
+          f"({migrations} cross-backend mid-decode migrations); "
+          f"logits bit-identical to the oracle every token")
+    print("sampled ids:", tokens_out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--het-tier", action="store_true",
@@ -98,12 +209,18 @@ def main():
                          "multi-tenant serving tier instead of jax")
     ap.add_argument("--requests", type=int, default=24,
                     help="(--het-tier) requests per tenant")
+    ap.add_argument("--zoo", action="store_true",
+                    help="decode through the model-zoo attn_decode "
+                         "kernel with mid-token cross-backend migration")
     ap.add_argument("--arch", default="llama3.2-3b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args()
 
+    if args.zoo:
+        zoo_demo(min(args.new_tokens, 8))
+        return
     if args.het_tier:
         het_tier(args.requests)
         return

@@ -1,0 +1,95 @@
+"""Model-zoo acceptance gate (CI `model-zoo` job).
+
+Fails (exit non-zero) when any of these regress:
+  1. a zoo kernel's output on any backend (interp, vectorized, pallas)
+     at O0 or OPT_MAX differs from its bit-exact NumPy oracle by a
+     single bit;
+  2. a zoo kernel neither block-tiles at least one segment nor records
+     a refusal reason for every scalar segment;
+  3. a recorded refusal name falls outside the stable, documented
+     ``repro.core.passes.REFUSAL_REASONS`` vocabulary.
+
+Prints a per-kernel census either way: conformance verdict per backend,
+tiled/scalar segment counts and the refusal categories.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np  # noqa: E402
+
+import repro.zoo as zoo  # noqa: E402  (import registers the zoo kernels)
+from repro.core import Engine, get_backend  # noqa: E402
+from repro.core import kernels_suite as suite  # noqa: E402
+from repro.core.backends.pallas_backend import PallasBackend  # noqa: E402
+from repro.core.cache import TranslationCache  # noqa: E402
+from repro.core.passes import OPT_MAX, REFUSAL_REASONS  # noqa: E402
+
+BACKENDS = ("interp", "vectorized", "pallas")
+
+
+def census() -> tuple:
+    conform_fail, unaccounted, unknown_names = [], [], []
+    rows = []
+    for name in sorted(zoo.ZOO):
+        prog, oracle, grid, block, args, outs = suite.example_launch(
+            name, rng=np.random.default_rng(0))
+        expect = oracle({k: (np.array(v, copy=True)
+                             if isinstance(v, np.ndarray) else v)
+                         for k, v in args.items()})
+        bad = []
+        for backend in BACKENDS:
+            for opt in (0, OPT_MAX):
+                eng = Engine(prog, get_backend(backend), grid, block,
+                             dict(args), opt_level=opt)
+                eng.run()
+                if not all(np.array_equal(np.asarray(eng.result(o)),
+                                          np.asarray(expect[o]))
+                           for o in outs):
+                    bad.append(f"{backend}@O{opt}")
+        if bad:
+            conform_fail.append(f"{name} ({', '.join(bad)})")
+
+        pb = PallasBackend(cache=TranslationCache())
+        Engine(prog, pb, grid, block, dict(args)).run()
+        stats = pb.block_stats
+        if not stats["tiled"] and not stats["reasons"]:
+            unaccounted.append(name)
+        bogus = set(stats["reasons"]) - set(REFUSAL_REASONS)
+        if bogus:
+            unknown_names.append(f"{name}: {sorted(bogus)}")
+        reasons = ";".join(sorted(stats["reasons"])) or "-"
+        rows.append(f"{name:16s} oracle_bit_identical={not bad} "
+                    f"tiled={stats['tiled']} scalar={stats['scalar']} "
+                    f"reasons={reasons}")
+    return conform_fail, unaccounted, unknown_names, rows
+
+
+def main() -> int:
+    conform_fail, unaccounted, unknown_names, rows = census()
+    print("\n".join(rows))
+    rc = 0
+    if conform_fail:
+        print(f"FAIL: zoo kernels diverge from their oracle: "
+              f"{'; '.join(conform_fail)}", file=sys.stderr)
+        rc = 1
+    if unaccounted:
+        print(f"FAIL: scalar fallback with no recorded refusal reason: "
+              f"{', '.join(unaccounted)}", file=sys.stderr)
+        rc = 1
+    if unknown_names:
+        print(f"FAIL: refusal names outside REFUSAL_REASONS: "
+              f"{'; '.join(unknown_names)}", file=sys.stderr)
+        rc = 1
+    if rc == 0:
+        print(f"\nall {len(zoo.ZOO)} zoo kernels bit-identical to their "
+              f"oracles on {len(BACKENDS)} backends at O0 and "
+              f"O{OPT_MAX}; every scalar segment's refusal is named")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,7 @@ from .. import hetir as ir
 from ..cache import register_reviver
 from ..segments import SegNode
 from .base import Backend, HostState, Launch
+from .portable_math import exp_np
 
 
 class InterpBackend(Backend):
@@ -327,8 +328,13 @@ _SCALAR_BIN = {
     ir.MUL: lambda a, b: a * b,
     ir.DIV: _py_div,
     ir.MOD: lambda a, b: a % b,
-    ir.MIN: min,
-    ir.MAX: max,
+    # NOT Python min/max: those return whichever operand survives a
+    # False comparison, so NaN propagation depends on argument order
+    # (max(0.0, nan) == 0.0 but max(nan, 0.0) == nan) while the jnp
+    # backends' minimum/maximum always propagate NaN — caught by the
+    # attention-profile cross-backend fuzz corpus
+    ir.MIN: np.minimum,
+    ir.MAX: np.maximum,
     ir.AND: lambda a, b: (a and b) if isinstance(a, (bool, np.bool_))
         else a & b,
     ir.OR: lambda a, b: (a or b) if isinstance(a, (bool, np.bool_))
@@ -349,7 +355,10 @@ _SCALAR_UN = {
     ir.NEG: lambda a: -a,
     ir.ABS: abs,
     ir.SQRT: np.sqrt,
-    ir.EXP: np.exp,
+    # EXP is the portable software exponential, not libm: np.exp and
+    # jnp.exp disagree in the low bits, which would break the cross-
+    # backend bit-identity contract (see backends/portable_math.py)
+    ir.EXP: exp_np,
     ir.NOT: lambda a: (not a) if isinstance(a, (bool, np.bool_)) else ~a,
     ir.MOV: lambda a: a,
 }

@@ -48,7 +48,8 @@ from jax.experimental import pallas as pl
 
 from .. import hetir as ir
 from ..cache import TranslationCache
-from ..passes import BlockPlan, block_lower, choose_block
+from ..passes import (BlockPlan, block_lower, choose_block,
+                      refusal_category)
 from ..segments import SegNode
 from .base import (Backend, HostState, Launch, export_translation,
                    scalar_signature, state_signature)
@@ -416,8 +417,13 @@ class PallasBackend(Backend):
         self.block_stats["scalar"] += 1
         reason = meta.get("block_reason")
         if reason:
+            # histogram on the *stable category* only (passes.
+            # REFUSAL_REASONS); the free-form detail suffix (buffer name,
+            # opcode) stays in meta["block_reason"] for diagnostics but
+            # must not leak into the stats surface gates key on
             rs = self.block_stats["reasons"]
-            rs[reason] = rs.get(reason, 0) + 1
+            cat = refusal_category(reason)
+            rs[cat] = rs.get(cat, 0) + 1
 
         args = [jnp.asarray(state.regs[n]) for n in reg_names]
         if meta["has_shared"]:

@@ -1,0 +1,193 @@
+"""Backend-exact software transcendentals (the portable libm story).
+
+hetIR's conformance contract is one-op-one-rounding bit-identity across
+interp / vectorized / pallas.  Basic IEEE ops (``+ - * / sqrt``) are
+correctly rounded on every backend, so numpy and XLA agree bit for bit —
+but ``EXP`` is a *libm* call, and libms disagree: ``np.exp`` (the
+interpreter) and ``jnp.exp`` (the jit backends) differ by 1 ULP on ~40%
+of float32 inputs (and by millions of ULP near overflow, where XLA's
+range reduction saturates differently).  The model-zoo kernels lean on
+``EXP`` for softmax and log-space gating, so the divergence graduated
+from a latent suite gap (no suite kernel used EXP cross-backend) to a
+conformance break — caught by the attention-shaped fuzz profile.
+
+The fix is the classic one: stop trusting libm and evaluate ``exp`` from
+*correctly rounded primitives only*, with an identical operation sequence
+on both array substrates:
+
+* range reduction ``x = k·ln2 + r`` with a two-term ``ln2`` split
+  (Cody–Waite; the high part has enough trailing zero bits that
+  ``k · LN2_HI`` is exact for every |k| ≤ 150),
+* a degree-6 minimax polynomial on ``|r| ≤ ln2/2`` (the Cephes ``expf``
+  coefficients: ``exp(r) ≈ 1 + r + r²·P(r)``), evaluated by Horner with
+  one rounding per multiply/add,
+* reconstruction by two exact powers of two built with integer bit
+  manipulation (``(e+127) << 23`` bitcast to f32), split ``k = k₁ + k₂``
+  so subnormal/overflow outputs round exactly once, in the final multiply.
+
+Every inexact step on the jax side is pinned to its own IEEE rounding
+(``nextafter(v, v)`` — see :func:`semantics._pin`) so XLA cannot contract
+or reassociate it; the numpy side performs the same roundings natively.
+Result: ``exp_np`` and ``exp_jnp`` are **bit-identical for every float32
+input** (asserted by ``tests/test_model_zoo.py``), and both stay within
+2 ULP of the correctly rounded exponential on the primary range.
+
+NumPy-side oracles (the zoo's reference implementations) must call
+:func:`exp_np` wherever their kernel uses ``EXP`` — that shared rounding
+sequence *is* the oracle contract for transcendentals.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["exp_np", "exp_jnp", "EXP_MAX_INPUT", "EXP_MIN_INPUT"]
+
+#: inputs above this produce +inf, below :data:`EXP_MIN_INPUT` produce +0
+#: (with flush-to-zero, underflow effectively begins near ln(2^-126))
+EXP_MAX_INPUT = np.float32(88.72283)
+EXP_MIN_INPUT = np.float32(-103.972084)
+
+_FLT_MIN_NORMAL = np.float32(1.1754943508222875e-38)  # 2^-126
+
+_LOG2E = np.float32(1.44269504088896341)
+_LN2_HI = np.float32(0.693359375)        # 0x1.63p-1: 11 trailing zero bits
+_LN2_LO = np.float32(-2.12194440e-4)
+#: Cephes expf minimax: exp(r) = 1 + r + r^2 * P(r) on |r| <= ln2/2
+_POLY = (np.float32(1.9875691500e-4), np.float32(1.3981999507e-3),
+         np.float32(8.3334519073e-3), np.float32(4.1665795894e-2),
+         np.float32(1.6666665459e-1), np.float32(5.0000001201e-1))
+
+
+def _exp_core(x, o):
+    """One shared op sequence; ``o`` supplies the array substrate.  Every
+    ``o.add/sub/mul`` is exactly one IEEE float32 rounding."""
+    one = o.f32(1.0)
+    # sanitize so the int cast below never sees NaN; the final selects
+    # restore NaN / overflow / underflow from the *original* x
+    xs = o.where(o.isnan(x), o.f32(0.0), x)
+    xs = o.minimum(o.maximum(xs, o.f32(-104.0)), o.f32(89.0))
+    k = o.rint(o.mul(xs, o.f32(_LOG2E)))       # exact: rint of one product
+    r = o.sub(xs, o.mul(k, o.f32(_LN2_HI)))    # k*LN2_HI exact, sub exact
+    r = o.sub(r, o.mul(k, o.f32(_LN2_LO)))
+    p = o.f32(_POLY[0])
+    for c in _POLY[1:]:
+        p = o.add(o.mul(p, r), o.f32(c))
+    rr = o.mul(r, r)
+    y = o.add(o.add(o.mul(rr, p), r), one)
+    # 2^k as two exact scale factors: k in [-151, 129] after the clamp,
+    # so both halves stay in the normal exponent range [-76, 65]
+    ki = o.to_i32(k)
+    k1 = o.shr1(ki)
+    y = o.mul(o.mul(y, o.pow2(k1)), o.pow2(o.isub(ki, k1)))
+    # flush-to-zero on subnormal outputs: XLA CPU kernels run FTZ, so a
+    # subnormal result of the final multiply is already 0 on the jit
+    # backends — the portable contract adopts FTZ, and this select makes
+    # the numpy substrate match (subnormal y < FLT_MIN selects 0 on both)
+    y = o.where(y < o.f32(_FLT_MIN_NORMAL), o.f32(0.0), y)
+    y = o.where(x > o.f32(EXP_MAX_INPUT), o.f32(np.inf), y)
+    y = o.where(x < o.f32(EXP_MIN_INPUT), o.f32(0.0), y)
+    return o.where(o.isnan(x), x, y)
+
+
+class _NpOps:
+    """NumPy substrate: one rounding per op natively — no pinning needed."""
+    f32 = staticmethod(np.float32)
+    add = staticmethod(np.add)
+    sub = staticmethod(np.subtract)
+    mul = staticmethod(np.multiply)
+    rint = staticmethod(np.rint)
+    where = staticmethod(np.where)
+    minimum = staticmethod(np.minimum)
+    maximum = staticmethod(np.maximum)
+    isnan = staticmethod(np.isnan)
+
+    @staticmethod
+    def to_i32(v):
+        return np.asarray(v).astype(np.int32)
+
+    @staticmethod
+    def shr1(v):
+        return v >> 1                       # arithmetic: floor halving
+
+    @staticmethod
+    def isub(a, b):
+        return a - b
+
+    @staticmethod
+    def pow2(e):
+        return ((e + np.int32(127)) << np.int32(23)).view(np.float32)
+
+
+def exp_np(x):
+    """float32 exp on the numpy substrate (scalars or arrays).  Returns
+    the same shape; scalar in, numpy scalar out."""
+    arr = np.asarray(x, dtype=np.float32)
+    with np.errstate(over="ignore", invalid="ignore"):
+        out = np.asarray(_exp_core(arr, _NpOps), dtype=np.float32)
+    return out if out.ndim else np.float32(out)
+
+
+class _JnpOps:
+    """JAX substrate: every inexact op pinned so XLA cannot fuse/contract
+    it away from the one-rounding sequence (see semantics._pin)."""
+
+    def __init__(self):
+        import jax
+        import jax.numpy as jnp
+        self._jax, self._jnp = jax, jnp
+
+    def f32(self, v):
+        return self._jnp.float32(v)
+
+    def _pin(self, v):
+        return self._jnp.nextafter(v, v)
+
+    def add(self, a, b):
+        return self._pin(self._jnp.add(a, b))
+
+    def sub(self, a, b):
+        return self._pin(self._jnp.subtract(a, b))
+
+    def mul(self, a, b):
+        return self._pin(self._jnp.multiply(a, b))
+
+    def rint(self, v):
+        return self._jnp.rint(v)
+
+    def where(self, c, a, b):
+        return self._jnp.where(c, a, b)
+
+    def minimum(self, a, b):
+        return self._jnp.minimum(a, b)
+
+    def maximum(self, a, b):
+        return self._jnp.maximum(a, b)
+
+    def isnan(self, v):
+        return self._jnp.isnan(v)
+
+    def to_i32(self, v):
+        return v.astype(self._jnp.int32)
+
+    def shr1(self, v):
+        return v >> 1
+
+    def isub(self, a, b):
+        return a - b
+
+    def pow2(self, e):
+        bits = (e + self._jnp.int32(127)) << self._jnp.int32(23)
+        return self._jax.lax.bitcast_convert_type(bits, self._jnp.float32)
+
+
+_JNP_OPS = None
+
+
+def exp_jnp(x):
+    """float32 exp on the jax substrate — bit-identical to :func:`exp_np`
+    for every input, inside or outside jit (and under pallas interpret)."""
+    global _JNP_OPS
+    if _JNP_OPS is None:
+        _JNP_OPS = _JnpOps()
+    o = _JNP_OPS
+    return _exp_core(o._jnp.asarray(x, o._jnp.float32), o)

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import hetir as ir
+from .portable_math import exp_jnp
 
 
 class Env:
@@ -343,8 +344,16 @@ _BINOPS = {
     ir.ADD: lambda a, b: _pin(a + b),
     ir.SUB: lambda a, b: _pin(a - b),
     ir.MUL: _mul_exact,
-    ir.DIV: lambda a, b: _int_or_float(a, b, lambda x, y: x // y,
-                                       lambda x, y: _pin(x / y)),
+    # the float divisor hides behind an optimization_barrier: XLA
+    # strength-reduces division by a *constant* into multiply-by-
+    # reciprocal (~15% of inputs off by 1 ULP vs a true IEEE divide;
+    # _pin can't help — the rewrite happens at the div, not after it).
+    # The barrier makes the divisor opaque to the algebraic simplifier,
+    # so the true division survives.  Found by the attention-profile
+    # cross-backend fuzz corpus (seed 20260860: x / 3.1415927).
+    ir.DIV: lambda a, b: _int_or_float(
+        a, b, lambda x, y: x // y,
+        lambda x, y: _pin(x / jax.lax.optimization_barrier(y))),
     ir.MOD: lambda a, b: a % b,
     ir.MIN: jnp.minimum,
     ir.MAX: jnp.maximum,
@@ -368,7 +377,10 @@ _UNOPS = {
     ir.NEG: lambda a: -a,
     ir.ABS: jnp.abs,
     ir.SQRT: jnp.sqrt,
-    ir.EXP: jnp.exp,
+    # EXP is the portable software exponential (one pinned rounding per
+    # primitive op), bit-identical to the interpreter's exp_np — jnp.exp
+    # would diverge from np.exp in the low bits (portable_math.py)
+    ir.EXP: exp_jnp,
     ir.NOT: lambda a: (jnp.logical_not(a) if a.dtype == jnp.bool_ else ~a),
     ir.MOV: lambda a: a,
 }

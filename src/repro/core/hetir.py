@@ -516,6 +516,9 @@ class Builder:
     def exp(self, a: Value) -> Value:
         return self._emit(EXP, a.reg.dtype, a)
 
+    def abs(self, a: Value) -> Value:
+        return self._emit(ABS, a.reg.dtype, a)
+
     def fma(self, a: Value, bv: Value, c: Value) -> Value:
         return self._emit(FMA, a.reg.dtype, a, bv, c)
 

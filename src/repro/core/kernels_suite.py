@@ -710,13 +710,68 @@ EXAMPLES: Dict[str, Tuple[int, int, Callable, Tuple[str, ...]]] = {
 def example_launch(name: str, rng=None
                    ) -> Tuple["ir.Program", Callable, int, int,
                               Dict[str, object], Tuple[str, ...]]:
-    """Build the canonical example launch for suite kernel ``name``:
-    ``(program, oracle, grid, block, host_args, output_buffer_names)``."""
+    """Build the canonical example launch for kernel ``name``:
+    ``(program, oracle, grid, block, host_args, output_buffer_names)``.
+
+    Looks through the suite first, then every registered namespace (the
+    model zoo registers under ``"zoo"``) — so roofline/benchmark/driver
+    tooling runs zoo kernels with the same one-liner it uses for the
+    suite."""
     if rng is None:
         rng = np.random.default_rng(42)
-    grid, block, mk, outs = EXAMPLES[name]
-    prog, oracle = SUITE[name]()
+    kernels, examples = _registry_for(name)
+    grid, block, mk, outs = examples[name]
+    prog, oracle = kernels[name]()
     return prog, oracle, grid, block, mk(rng), outs
+
+
+# ---------------------------------------------------------------------------
+# Namespaced kernel registries.  The conformance harnesses pin their
+# parametrization to ``SUITE``/``EXAMPLES`` at collection time (and
+# test_passes asserts exact coverage of SUITE), so external workload
+# packages must NOT mutate those dicts — they register under their own
+# namespace here and the generic lookups below search all of them.
+# ---------------------------------------------------------------------------
+
+#: namespace -> (kernels dict, examples dict); "suite" is the built-in tier
+REGISTRIES: Dict[str, Tuple[Dict[str, Callable], Dict[str, tuple]]] = {}
+
+
+def register_kernel(name: str, builder: Callable, example=None,
+                    registry: str = "zoo") -> None:
+    """Register kernel ``builder`` (``() -> (Program, oracle)``) under a
+    namespace, with an optional EXAMPLES-style canonical launch
+    ``(grid, block, make_args(rng), output_names)``.  Idempotent per
+    (registry, name); re-registering replaces the entry."""
+    if registry == "suite":
+        raise ValueError("the built-in suite is closed — register under "
+                         "a new namespace (e.g. 'zoo')")
+    kernels, examples = REGISTRIES.setdefault(registry, ({}, {}))
+    kernels[name] = builder
+    if example is not None:
+        examples[name] = tuple(example)
+
+
+def _registry_for(name: str) -> Tuple[Dict[str, Callable], Dict[str, tuple]]:
+    if name in SUITE:
+        return SUITE, EXAMPLES
+    for kernels, examples in REGISTRIES.values():
+        if name in kernels:
+            return kernels, examples
+    raise KeyError(f"unknown kernel {name!r} (suite: {sorted(SUITE)}; "
+                   f"registries: {sorted(REGISTRIES)})")
+
+
+def lookup(name: str) -> Callable:
+    """The builder for ``name``, searching the suite then all registries."""
+    return _registry_for(name)[0][name]
+
+
+def registered_examples(registry: str) -> Dict[str, tuple]:
+    """The canonical-launch table of one namespace (``"suite"`` included)."""
+    if registry == "suite":
+        return EXAMPLES
+    return REGISTRIES[registry][1]
 
 
 SUITE: Dict[str, Callable] = {

@@ -1520,6 +1520,26 @@ def _store_injective(ct: int, cb: int, num_blocks: int,
     return cb == ct * T and injective_step(ct, B * T)
 
 
+#: The stable refusal-reason vocabulary of :func:`block_lower` (plus
+#: ``disabled``, emitted by the pallas backend when the env switch is
+#: off).  Every reason string is ``<category>`` or ``<category>:<detail>``
+#: where the category is drawn from this tuple — histograms, gates
+#: (``scripts/check_zoo.py``) and docs (``docs/ZOO.md``) key on the
+#: category; the detail (offending buffer / opcode) is diagnostic only
+#: and carries no stability promise.  Adding a category is an API change:
+#: document it and extend the regression test in tests/test_model_zoo.py.
+REFUSAL_REASONS = ("bad-block", "shared-memory", "collective", "atomic",
+                   "opaque-index", "unprovable-base", "store-not-injective",
+                   "may-alias", "disabled")
+
+
+def refusal_category(reason: str) -> str:
+    """Stable category of a :func:`block_lower` refusal reason: the part
+    before the first ``:`` (reasons are ``category[:detail]``).  Always a
+    member of :data:`REFUSAL_REASONS` for reasons this module emits."""
+    return reason.split(":", 1)[0]
+
+
 def block_lower(stmts: Sequence[ir.Stmt], num_blocks: int, block_size: int,
                 block: int,
                 buffer_lens: Optional[Dict[str, int]] = None

@@ -62,9 +62,11 @@ except ImportError:  # container without hypothesis: corpus still runs
 
 N_EXAMPLES = int(os.environ.get("HETGPU_FUZZ_EXAMPLES", "210"))
 MEM_EXAMPLES = int(os.environ.get("HETGPU_FUZZ_MEM_EXAMPLES", "210"))
+ATTN_EXAMPLES = int(os.environ.get("HETGPU_FUZZ_ATTN_EXAMPLES", "70"))
 CHUNKS = 7
 SEED0 = 20260728
 MEM_SEED0 = 20270115
+ATTN_SEED0 = 20260807
 BACKENDS = ("interp", "vectorized")
 
 
@@ -131,10 +133,11 @@ class _ProgramGen:
     target anything in range.  ``G`` is never stored to, keeping a
     provably alias-free invariant-load candidate in every program."""
 
-    def __init__(self, ch, tag: str, mem: bool = False):
+    def __init__(self, ch, tag: str, mem: bool = False, attn: bool = False):
         self.ch = ch
         self.tag = tag
         self.mem = mem
+        self.attn = attn
         self.ops_budget = 60
 
     # -- expression pools (scoped: regions push/pop their additions) -------
@@ -319,6 +322,39 @@ class _ProgramGen:
                 self.gen_stmts(1, depth + 1, top=False)
         self._pop_scope(mark)
 
+    def gen_attn_tile(self) -> None:
+        """The attention inner shape (``attn=True`` profile): a shared
+        score tile, an EXP/REDUCE_MAX online-softmax fold with running
+        max/correction carried across iterations, and a barriered
+        PV-style accumulate — the exact collective-over-shared-tile
+        composition the zoo's ``attn_decode`` is built from, which the
+        general profile never emits (its collectives are int-typed and
+        top-level only).  Collectives stay outside @PRED so every lane
+        is active: the cross-backend property below depends on the
+        lane-order folds seeing identical active sets."""
+        b, ch = self.b, self.ch
+        tid = b.thread_id()
+        count = "t" if ch.chance(0.25) else ch.randint(1, 3)
+        m = ch.pick(self.mut_f)
+        mark = self._push_scope()
+        with b.loop(count, hint="A"):
+            sv = self.float_expr()
+            mn = b.maximum(m, b.reduce_max(sv))
+            p = b.exp(sv - mn)
+            corr = b.exp(m - mn)
+            b.assign(m, mn)
+            b.store_shared(tid, p)
+            b.barrier("attn-p")
+            pv = b.load_shared((tid + b.const(ch.randint(0, 3)))
+                               % b.const(self.block))
+            acc = ch.pick(self.mut_f)
+            b.assign(acc, acc * corr + pv)
+            if ch.chance(0.5):
+                other = ch.pick(self.mut_f)
+                b.assign(other, other + b.scan_add(p))
+            b.barrier("attn-c")
+        self._pop_scope(mark)
+
     # -- statements --------------------------------------------------------
     def gen_stmts(self, n: int, depth: int, top: bool) -> None:
         for _ in range(n):
@@ -332,9 +368,18 @@ class _ProgramGen:
         if self.mem:
             kinds += ["memrw", "memrw"]
         if depth == 0:
-            kinds += ["loop", "atomic", "collective"]
+            kinds += ["loop", "collective"]
+            if not self.attn:
+                # the attention corpus is compared *across* backends,
+                # and an atomic racing a later plain store to the same
+                # slot has no defined winner between block-serial
+                # (interp) and lockstep (vectorized) execution — a real
+                # GPU gives it no defined order either
+                kinds += ["atomic"]
             if self.mem:
                 kinds += ["memloop"]
+            if self.attn:
+                kinds += ["attn_tile", "attn_tile", "fcollective"]
         kind = ch.pick(kinds)
         if kind == "assign":
             if ch.chance(0.5):
@@ -356,6 +401,15 @@ class _ProgramGen:
             self.gen_memrw()
         elif kind == "memloop":
             self.gen_memloop(depth)
+        elif kind == "attn_tile":
+            self.gen_attn_tile()
+        elif kind == "fcollective":
+            # float collectives (the zoo's softmax/normalizer primitives)
+            w = ch.pick(["reduce_add", "reduce_max", "scan_add"])
+            v = self.float_expr()
+            self.floats.append({"reduce_add": b.reduce_add,
+                                "reduce_max": b.reduce_max,
+                                "scan_add": b.scan_add}[w](v))
         elif kind == "loop":
             self.gen_loop(depth, top)
         elif kind == "atomic":
@@ -409,7 +463,8 @@ class _ProgramGen:
         block = ch.pick((4, 8, 16))
         self.N = grid * block
         self.block = block
-        use_shared = self.use_shared = ch.chance(0.3)
+        # the attention profile is *about* shared-tile traffic: always on
+        use_shared = self.use_shared = True if self.attn else ch.chance(0.3)
         b = Builder(f"fuzz_{self.tag}",
                     [Ptr("F"), Ptr("G"), Ptr("I", ir.I32), Ptr("OutF"),
                      Ptr("OutI", ir.I32), Scalar("s"), Scalar("t"),
@@ -469,9 +524,12 @@ class _ProgramGen:
 
 
 def _check_differential(prog, args, grid, block, outs, cache,
-                        backends=BACKENDS, note=""):
+                        backends=BACKENDS, note="", cross=False):
     """O0 vs OPT_MAX must be bit-identical per backend (NaNs compare
-    positionally equal)."""
+    positionally equal).  With ``cross=True``, O0 results must also be
+    bit-identical *across* backends — the portable-exp / lane-order-fold
+    contract the zoo's bit-exact oracles rely on."""
+    per_backend = {}
     for backend in backends:
         results = []
         for level in (0, OPT_MAX):
@@ -484,6 +542,16 @@ def _check_differential(prog, args, grid, block, outs, cache,
                 r0, r1,
                 err_msg=(f"{note}: {backend} O0 vs O{OPT_MAX} differ in "
                          f"{o}\n{prog.to_text()}"))
+        per_backend[backend] = results[0]
+    if cross and len(backends) > 1:
+        base = backends[0]
+        for backend in backends[1:]:
+            for o, r0, r1 in zip(outs, per_backend[base],
+                                 per_backend[backend]):
+                np.testing.assert_array_equal(
+                    r0, r1,
+                    err_msg=(f"{note}: {base} vs {backend} differ in "
+                             f"{o}\n{prog.to_text()}"))
 
 
 def _corpus_case(seed: int):
@@ -494,6 +562,12 @@ def _corpus_case(seed: int):
 def _mem_corpus_case(seed: int):
     gen = _ProgramGen(_RngChooser(np.random.default_rng(seed)),
                       f"m{seed}", mem=True)
+    return gen.build()
+
+
+def _attn_corpus_case(seed: int):
+    gen = _ProgramGen(_RngChooser(np.random.default_rng(seed)),
+                      f"a{seed}", attn=True)
     return gen.build()
 
 
@@ -523,6 +597,52 @@ def test_fuzz_memory_op_corpus(chunk):
         prog, args, grid, block, outs = _mem_corpus_case(seed)
         _check_differential(prog, args, grid, block, outs, cache,
                             note=f"mem seed {seed}")
+
+
+# attention-shaped corpus: EXP/REDUCE_MAX/SCAN_ADD over shared score
+# tiles with barriers inside the loop — the collective composition the
+# model zoo depends on.  This corpus is additionally checked *across*
+# backends: interp and vectorized must produce the same bits, which is
+# exactly the property the portable software EXP exists to provide
+# (np.exp vs XLA's exp diverge on ~40% of float32 inputs).
+@pytest.mark.parametrize("chunk", range(CHUNKS))
+def test_fuzz_attention_corpus(chunk):
+    per = (ATTN_EXAMPLES + CHUNKS - 1) // CHUNKS
+    cache = TranslationCache(capacity=4 * per)
+    for i in range(per):
+        seed = ATTN_SEED0 + chunk * per + i
+        prog, args, grid, block, outs = _attn_corpus_case(seed)
+        _check_differential(prog, args, grid, block, outs, cache,
+                            note=f"attn seed {seed}", cross=True)
+
+
+def test_fuzz_attention_corpus_actually_emits_softmax_shapes():
+    """Structural guarantee for the attention profile: across a sample,
+    programs contain EXP, the float collectives (REDUCE_MAX/REDUCE_ADD/
+    SCAN_ADD), shared-memory traffic and barriers *inside* loops."""
+    import repro.core.hetir as hir
+
+    opcodes = set()
+    barrier_in_loop = 0
+
+    def walk(body, in_loop):
+        nonlocal barrier_in_loop
+        for s in body:
+            if isinstance(s, hir.Op):
+                opcodes.add(s.opcode)
+            elif isinstance(s, hir.Barrier):
+                barrier_in_loop += bool(in_loop)
+            elif isinstance(s, hir.Loop):
+                walk(s.body, True)
+            elif isinstance(s, hir.Pred):
+                walk(s.body, in_loop)
+
+    for i in range(30):
+        prog, _, _, _, _ = _attn_corpus_case(ATTN_SEED0 + i)
+        walk(prog.body, False)
+    assert {ir.EXP, ir.REDUCE_MAX, ir.SCAN_ADD,
+            ir.ST_SHARED, ir.LD_SHARED} <= opcodes, opcodes
+    assert barrier_in_loop >= 10, "no barriered shared-tile loops emitted"
 
 
 def test_fuzz_memory_corpus_meets_acceptance_size():
